@@ -1,0 +1,53 @@
+"""Shared benchmark helpers."""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import losses as L
+from repro.core.esrnn import ESRNN, make_config
+from repro.data.pipeline import prepare
+from repro.data.synthetic_m4 import generate
+from repro.train.trainer import TrainConfig, train_esrnn
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "bench")
+
+
+def save_result(name: str, payload: dict):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, f"{name}.json"), "w") as f:
+        json.dump(payload, f, indent=1)
+
+
+def train_frequency(freq: str, *, scale: float, steps: int, seed: int = 0,
+                    lr: float = 4e-3, batch_size: int = 64):
+    """Train an ES-RNN for one frequency on synthetic M4; returns
+    (model, data, params, history)."""
+    data = prepare(generate(freq, scale=scale, seed=seed))
+    model = ESRNN(make_config(freq))
+    out = train_esrnn(model, data, TrainConfig(
+        batch_size=min(batch_size, data.n_series), n_steps=steps, lr=lr,
+        eval_every=max(steps // 3, 1), ckpt_dir=None, seed=seed))
+    return model, data, out["params"], out["history"]
+
+
+def eval_test_smape(model, data, params):
+    """Test-set sMAPE: forecast from train+val, score vs test (Eq. 7)."""
+    fc = model.forecast(params, jnp.asarray(data.val_input),
+                        jnp.asarray(data.cats))
+    return float(L.smape(fc, jnp.asarray(data.test_target))), np.asarray(fc)
+
+
+def timeit(fn, *args, repeats: int = 3):
+    fn(*args)  # warm / compile
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        r = fn(*args)
+    jax.block_until_ready(r) if hasattr(r, "block_until_ready") or isinstance(r, jax.Array) else None
+    return (time.perf_counter() - t0) / repeats

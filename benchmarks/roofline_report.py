@@ -1,0 +1,59 @@
+"""Aggregate dry-run JSONs into the EXPERIMENTS.md roofline table."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def load(mesh: str):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(DRYRUN_DIR, mesh, "*.json"))):
+        with open(f) as fh:
+            rows.append(json.load(fh))
+    return rows
+
+
+def fmt_row(r):
+    if r.get("status") != "ok":
+        return f"| {r['arch']} | {r['shape']} | FAILED: {r.get('error','')[:60]} |"
+    t = r["roofline"]
+    dom = t["dominant"]
+    total = max(t["compute_s"], t["memory_s"], t["collective_s"])
+    frac = t["compute_s"] / total if total else 0.0
+    ratio = r.get("useful_flops_ratio")
+    mem_gb = (r.get("memory_analysis", {}).get("argument_size", 0)
+              + r.get("memory_analysis", {}).get("temp_size", 0)) / 2**30
+    return (f"| {r['arch']} | {r['shape']} | {t['compute_s']:.3e} | "
+            f"{t['memory_s']:.3e} | {t['collective_s']:.3e} | {dom} | "
+            f"{frac:.3f} | {ratio:.2f} | {mem_gb:.1f} |" if ratio else
+            f"| {r['arch']} | {r['shape']} | {t['compute_s']:.3e} | "
+            f"{t['memory_s']:.3e} | {t['collective_s']:.3e} | {dom} | "
+            f"{frac:.3f} | - | {mem_gb:.1f} |")
+
+
+def markdown_table(mesh: str) -> str:
+    rows = load(mesh)
+    hdr = ("| arch | shape | compute (s) | memory (s) | collective (s) | "
+           "dominant | roofline frac | 6ND/HLO | GB/chip |\n"
+           "|---|---|---|---|---|---|---|---|---|")
+    return hdr + "\n" + "\n".join(fmt_row(r) for r in rows)
+
+
+def main():
+    for mesh in ("single", "multi"):
+        rows = load(mesh)
+        if not rows:
+            print(f"[{mesh}] no dry-run results yet "
+                  f"(run: python -m repro.launch.dryrun --all --mesh {mesh})")
+            continue
+        ok = sum(1 for r in rows if r.get("status") == "ok")
+        print(f"\n== {mesh} mesh: {ok}/{len(rows)} cells compiled ==")
+        print(markdown_table(mesh))
+
+
+if __name__ == "__main__":
+    main()

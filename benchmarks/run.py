@@ -1,0 +1,63 @@
+"""Benchmark harness entry point -- one function per paper table.
+
+``python -m benchmarks.run [--fast]`` runs Table 4/5/6 analogs and the
+roofline report, printing ``name,us_per_call,derived`` CSV lines plus the
+human-readable tables, and saving JSON under experiments/bench/.
+"""
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="reduced sizes")
+    args, _ = ap.parse_known_args()
+
+    from benchmarks import roofline_report, table4_accuracy, table5_speedup, table6_categories
+
+    csv = []
+
+    t0 = time.perf_counter()
+    t5 = table5_speedup.run(fast=args.fast)
+    dt = time.perf_counter() - t0
+    best = max(r["speedup"] for r in t5["rows"])
+    csv.append(("table5_speedup", dt * 1e6, f"max_speedup={best:.0f}x"))
+    table5_speedup.main.__globals__  # keep import
+    print("\n== Table 5: vectorization speedup ==")
+    for r in t5["rows"]:
+        print(f"  batch {r['batch']:5d}: loop {r['loop_s']:8.2f}s  "
+              f"vectorized {r['vectorized_s']:8.4f}s  -> {r['speedup']:7.1f}x")
+
+    t0 = time.perf_counter()
+    t4 = table4_accuracy.run(fast=args.fast)
+    dt = time.perf_counter() - t0
+    csv.append(("table4_accuracy", dt * 1e6,
+                f"improvement_vs_comb={t4['improvement_vs_comb_pct']:.1f}%"))
+    print("\n== Table 4: sMAPE vs Comb benchmark (synthetic M4) ==")
+    for freq, row in t4["per_frequency"].items():
+        print(f"  {freq:10s} esrnn={row['esrnn']['smape']:7.3f} "
+              f"comb={row['comb']['smape']:7.3f} snaive={row['snaive']['smape']:7.3f} "
+              f"owa={row['esrnn']['owa']:.3f}")
+    print(f"  weighted ES-RNN improvement vs Comb: "
+          f"{t4['improvement_vs_comb_pct']:.1f}% (paper: 9.2-11.2%)")
+
+    t0 = time.perf_counter()
+    t6 = table6_categories.run(fast=True)
+    dt = time.perf_counter() - t0
+    csv.append(("table6_categories", dt * 1e6, "per-category sMAPE"))
+    print("\n== Table 6: per-category sMAPE ==")
+    for freq, col in t6.items():
+        cells = ", ".join(f"{k[:5]}={v:.1f}" for k, v in col.items() if v is not None)
+        print(f"  {freq:10s} {cells}")
+
+    print("\n== Roofline (from dry-run artifacts) ==")
+    roofline_report.main()
+
+    print("\nname,us_per_call,derived")
+    for name, us, derived in csv:
+        print(f"{name},{us:.0f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,129 @@
+"""Table 5 analog: vectorized-batch vs per-series-loop training time.
+
+The paper reports 322x (quarterly) / 113x (monthly) GPU-vs-CPU for 15
+epochs. Offline we measure the same *mechanism* -- removing the per-series
+loop -- on this host: one full loss+grad evaluation over N series, batched
+vs looped (looped time measured on a subset and scaled linearly; the loop
+is embarrassingly linear in N, so this under-states loop overhead if
+anything). Batch sizes sweep up to 2048 as in the paper's discussion.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import save_result
+from repro.core.esrnn import ESRNN, make_config
+from repro.data.pipeline import prepare
+from repro.data.synthetic_m4 import generate
+
+BATCH_SIZES = (64, 256, 512, 1024, 2048)
+LOOP_SAMPLE = 16  # series actually looped; scaled to N
+
+
+def _measure(model, params, y, cats, loop_sample):
+    n = y.shape[0]
+
+    def batched(p):
+        return model.loss_and_grad(p, y, cats)
+
+    # warm + time the batched step
+    batched(params)
+    t0 = time.perf_counter()
+    loss, grads = batched(params)
+    jax.block_until_ready(loss)
+    t_vec = time.perf_counter() - t0
+
+    # per-series loop (the original CPU structure): loss+grad one at a time
+    sub = {
+        "hw": jax.tree_util.tree_map(lambda a: a[:1], params["hw"]),
+        "rnn": params["rnn"], "head": params["head"],
+    }
+    one = jax.jit(lambda p, yy, cc: jax.value_and_grad(
+        lambda q: model.loss_fn(q, yy, cc))(p))
+    one(sub, y[:1], cats[:1])  # warm
+    t0 = time.perf_counter()
+    for i in range(loop_sample):
+        l, g = one({
+            "hw": jax.tree_util.tree_map(lambda a: a[i:i + 1], params["hw"]),
+            "rnn": params["rnn"], "head": params["head"],
+        }, y[i:i + 1], cats[i:i + 1])
+    jax.block_until_ready(l)
+    t_loop = (time.perf_counter() - t0) / loop_sample * n
+    return t_vec, t_loop
+
+
+def _hw_component(n_max: int = 512):
+    """The pre-processing layer alone: numpy per-series loop (the original
+    C++ structure, interpreted) vs the vectorized scan. This isolates the
+    paper's mechanism from shared matmul cost."""
+    import time as _t
+
+    from repro.core.holt_winters import (
+        hw_init_params, hw_smooth, hw_smooth_loop_reference)
+
+    rng = np.random.default_rng(0)
+    y = np.abs(rng.lognormal(3, 0.5, (n_max, 72))).astype(np.float32) + 1
+    p = hw_init_params(n_max, 4)
+    yj = jnp.asarray(y)
+    jax.block_until_ready(hw_smooth(yj, p, seasonality=4))
+    t0 = _t.perf_counter()
+    jax.block_until_ready(hw_smooth(yj, p, seasonality=4))
+    t_vec = _t.perf_counter() - t0
+    sample = min(32, n_max)
+    t0 = _t.perf_counter()
+    hw_smooth_loop_reference(y[:sample], jax.tree_util.tree_map(
+        lambda a: a[:sample] if a is not None and a.ndim else a, p), seasonality=4)
+    t_loop = (_t.perf_counter() - t0) / sample * n_max
+    return {"n": n_max, "loop_s": t_loop, "vectorized_s": t_vec,
+            "speedup": t_loop / t_vec}
+
+
+def run(fast: bool = False):
+    data = prepare(generate("quarterly", scale=0.35, seed=0))
+    cfg = make_config("quarterly")
+    model = ESRNN(cfg)
+    sizes = BATCH_SIZES[:3] if fast else BATCH_SIZES
+    rows = []
+    seen = set()
+    for bs in sizes:
+        n = min(bs, data.n_series)
+        if n in seen:
+            continue
+        seen.add(n)
+        params = model.init(jax.random.PRNGKey(0), n)
+        y = jnp.asarray(data.train[:n])
+        c = jnp.asarray(data.cats[:n])
+        t_vec, t_loop = _measure(model, params, y, c, min(LOOP_SAMPLE, n))
+        rows.append({"batch": n, "vectorized_s": t_vec, "loop_s": t_loop,
+                     "speedup": t_loop / t_vec})
+    out = {"rows": rows,
+           "hw_component": _hw_component(256 if fast else 2048),
+           "paper_speedups": {"quarterly": 322, "monthly": 113},
+           "note": ("single-core host: both paths share one core, so the "
+                    "full-model speedup reflects dispatch/loop overhead "
+                    "removal only; hw_component (interpreted per-series "
+                    "loop, the original C++ structure) shows the "
+                    "vectorization factor the accelerator multiplies")}
+    save_result("table5_speedup", out)
+    return out
+
+
+def main():
+    out = run()
+    print(f"{'batch':>8s} {'loop_s':>12s} {'vectorized_s':>14s} {'speedup':>9s}")
+    for r in out["rows"]:
+        print(f"{r['batch']:8d} {r['loop_s']:12.3f} {r['vectorized_s']:14.4f} "
+              f"{r['speedup']:8.1f}x")
+    hw = out["hw_component"]
+    print(f"HW layer alone (N={hw['n']}): loop {hw['loop_s']:.2f}s vs "
+          f"vectorized {hw['vectorized_s']:.4f}s -> {hw['speedup']:.0f}x")
+    print("(paper: 322x quarterly / 113x monthly, GPU batch vs CPU loop)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Table 6 analog: test sMAPE broken down by M4 data category."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import save_result, train_frequency
+from repro.core import losses as L
+from repro.data.synthetic_m4 import CATEGORIES
+
+FREQS = {"yearly": (0.004, 100), "quarterly": (0.004, 100), "monthly": (0.002, 100)}
+
+
+def run(fast: bool = False):
+    table = {}
+    for freq, (scale, steps) in FREQS.items():
+        if fast:
+            scale, steps = scale / 2, 40
+        model, data, params, _ = train_frequency(freq, scale=scale, steps=steps)
+        fc = model.forecast(params, jnp.asarray(data.val_input),
+                            jnp.asarray(data.cats))
+        target = jnp.asarray(data.test_target)
+        col = {}
+        for ci, cat in enumerate(CATEGORIES):
+            sel = data.categories == ci
+            if not sel.any():
+                col[cat] = None
+                continue
+            col[cat] = float(L.smape(fc[sel], target[sel]))
+        col["Overall"] = float(L.smape(fc, target))
+        table[freq] = col
+    save_result("table6_categories", table)
+    return table
+
+
+def main():
+    table = run()
+    freqs = list(table)
+    print(f"{'Category':<14s}" + "".join(f"{f:>12s}" for f in freqs))
+    for cat in CATEGORIES + ["Overall"]:
+        cells = []
+        for f in freqs:
+            v = table[f].get(cat)
+            cells.append(f"{v:12.2f}" if v is not None else f"{'-':>12s}")
+        print(f"{cat:<14s}" + "".join(cells))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""repro: Fast ES-RNN (Redd, Khin & Marini 2019) as a multi-pod JAX framework.
+
+Public API re-exports. Importing this package never touches jax device state.
+"""
+
+__version__ = "1.0.0"
+
+from repro.core.holt_winters import (  # noqa: F401
+    HWParams,
+    hw_init_params,
+    hw_smooth,
+    hw_forecast,
+)
+from repro.core.esrnn import ESRNN, ESRNNConfig  # noqa: F401
+from repro.core.losses import pinball_loss, smape, mase  # noqa: F401

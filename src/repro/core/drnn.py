@@ -1,0 +1,219 @@
+"""Dilated residual LSTM stack (paper section 3.2, Table 1, Figure 1).
+
+Structure (Chang et al., Dilated RNN): blocks of LSTM layers; the layer with
+dilation ``d`` connects cell/hidden state from step ``t - d`` to step ``t``.
+Blocks after the first add a residual connection from block input to block
+output (dimensions match at ``hidden_size``).
+
+Two implementations:
+
+* :func:`drnn_apply` -- the *interleaved* formulation (also from Chang et
+  al.): a dilation-d LSTM over T steps is exactly d independent LSTMs over
+  the d stride-d sub-sequences. Each layer is a dense ``lax.scan`` with a
+  flat ``(B*d, H)`` carry -- no ring buffers, no dynamic-index updates, d x
+  fewer backward residuals, and d x larger (better MXU-shaped) gate matmuls.
+  This is the production path (see EXPERIMENTS.md section Perf, ES-RNN
+  hillclimb).
+* :func:`drnn_apply_reference` -- the direct ring-buffer formulation kept as
+  the numerical oracle (tests assert both paths agree).
+
+Everything is pure-functional: ``drnn_init`` builds a params pytree. A single
+fused-cell step is exposed (``lstm_cell``) so the Pallas kernel
+(kernels/lstm_cell.py) can slot in behind the same signature.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def lstm_cell(params, x, h_prev, c_prev, *, use_pallas: bool = False):
+    """One fused LSTM step. x:(B,I) h,c:(B,H) -> (h,c):(B,H).
+
+    Gate order (i, f, g, o) matches the Pallas kernel and ref oracle.
+    """
+    if use_pallas:
+        from repro.kernels import ops as kernel_ops
+
+        return kernel_ops.lstm_cell(params["wx"], params["wh"], params["b"], x, h_prev, c_prev)
+    gates = x @ params["wx"] + h_prev @ params["wh"] + params["b"]
+    i, f, g, o = jnp.split(gates, 4, axis=-1)
+    c = jax.nn.sigmoid(f) * c_prev + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h = jax.nn.sigmoid(o) * jnp.tanh(c)
+    return h, c
+
+
+def _cell_init(key, input_size: int, hidden_size: int, dtype):
+    k1, k2 = jax.random.split(key)
+    scale_x = 1.0 / jnp.sqrt(jnp.asarray(input_size, jnp.float32))
+    scale_h = 1.0 / jnp.sqrt(jnp.asarray(hidden_size, jnp.float32))
+    return {
+        "wx": (jax.random.uniform(k1, (input_size, 4 * hidden_size), jnp.float32, -1, 1) * scale_x).astype(dtype),
+        "wh": (jax.random.uniform(k2, (hidden_size, 4 * hidden_size), jnp.float32, -1, 1) * scale_h).astype(dtype),
+        "b": jnp.zeros((4 * hidden_size,), dtype),
+    }
+
+
+def drnn_init(
+    key,
+    input_size: int,
+    hidden_size: int,
+    dilations: Sequence[Sequence[int]],
+    dtype=jnp.float32,
+):
+    """Params for the dilated stack. ``dilations`` e.g. ((1, 2), (4, 8))."""
+    params = []
+    in_size = input_size
+    for block in dilations:
+        block_params = []
+        for _d in block:
+            key, sub = jax.random.split(key)
+            block_params.append(_cell_init(sub, in_size, hidden_size, dtype))
+            in_size = hidden_size
+        params.append(block_params)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# interleaved (production) formulation
+# ---------------------------------------------------------------------------
+
+
+def _dilated_layer(cell, xs, d: int, *, use_pallas: bool):
+    """One dilation-d LSTM layer over xs (B, T, F) via stride-d interleave."""
+    b, t, f = xs.shape
+    hidden = cell["wh"].shape[0]
+    if d == 1:
+        xr = xs
+        bd = b
+    else:
+        pad = (-t) % d
+        xp = jnp.pad(xs, ((0, 0), (0, pad), (0, 0)))
+        tp = xp.shape[1]
+        # (B, T/d, d, F) -> (B, d, T/d, F) -> (B*d, T/d, F): row j is the
+        # stride-d sub-sequence starting at offset j -- an independent chain.
+        xr = (xp.reshape(b, tp // d, d, f).transpose(0, 2, 1, 3)
+              .reshape(b * d, tp // d, f))
+        bd = b * d
+
+    h0 = jnp.zeros((bd, hidden), xs.dtype)
+    c0 = jnp.zeros((bd, hidden), xs.dtype)
+
+    def step(carry, x_t):
+        h, c = carry
+        h, c = lstm_cell(cell, x_t, h, c, use_pallas=use_pallas)
+        return (h, c), (h, c)
+
+    (_, _), (hs, cs) = jax.lax.scan(step, (h0, c0), jnp.swapaxes(xr, 0, 1))
+    hs = jnp.swapaxes(hs, 0, 1)                       # (B*d, T/d, H)
+    cs = jnp.swapaxes(cs, 0, 1)
+    if d > 1:
+        tp = hs.shape[1] * d
+        hs = (hs.reshape(b, d, tp // d, hidden).transpose(0, 2, 1, 3)
+              .reshape(b, tp, hidden))[:, :t]
+        cs = (cs.reshape(b, d, tp // d, hidden).transpose(0, 2, 1, 3)
+              .reshape(b, tp, hidden))[:, :t]
+    return hs, cs
+
+
+@partial(jax.jit, static_argnames=("dilations", "use_pallas"))
+def drnn_apply(
+    params,
+    xs: jax.Array,
+    *,
+    dilations: Tuple[Tuple[int, ...], ...],
+    use_pallas: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Run the stack over a sequence.
+
+    Args:
+      params: from :func:`drnn_init`.
+      xs: ``(B, T, input_size)``.
+
+    Returns:
+      outputs ``(B, T, hidden)`` and mean squared cell-state magnitude of the
+      *first layer of each block* (scalar) -- the section 8.4 Krueger &
+      Memisevic stabilization penalty term.
+    """
+    inp = xs
+    cstate_sq = jnp.zeros((), jnp.float32)
+    n_terms = 0
+    for bi, (block, bparams) in enumerate(zip(dilations, params)):
+        block_in = inp
+        for li, (d, cell) in enumerate(zip(block, bparams)):
+            inp, cs = _dilated_layer(cell, inp, d, use_pallas=use_pallas)
+            if li == 0:
+                cstate_sq = cstate_sq + jnp.mean(jnp.square(cs.astype(jnp.float32)))
+                n_terms += 1
+        if bi > 0:  # residual between blocks (dims match at hidden)
+            inp = inp + block_in
+    return inp, cstate_sq / max(n_terms, 1)
+
+
+# ---------------------------------------------------------------------------
+# ring-buffer reference (numerical oracle for the interleaved path)
+# ---------------------------------------------------------------------------
+
+
+def drnn_apply_reference(
+    params,
+    xs: jax.Array,
+    *,
+    dilations: Tuple[Tuple[int, ...], ...],
+    use_pallas: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Direct formulation: per-layer (d, B, H) state rings, dynamic slots."""
+    b = xs.shape[0]
+    hidden = params[0][0]["wh"].shape[0]
+    dtype = xs.dtype
+
+    rings = []
+    for block in dilations:
+        for d in block:
+            rings.append(
+                (jnp.zeros((d, b, hidden), dtype), jnp.zeros((d, b, hidden), dtype))
+            )
+
+    flat_cells = [cp for blk in params for cp in blk]
+    layer_dils = [d for blk in dilations for d in blk]
+    block_sizes = [len(blk) for blk in dilations]
+    first_layer_idx = []
+    acc = 0
+    for s in block_sizes:
+        first_layer_idx.append(acc)
+        acc += s
+
+    def step(carry, x_t):
+        rings, t = carry
+        new_rings = []
+        inp = x_t
+        cstate_sq = jnp.zeros((), jnp.float32)
+        li = 0
+        for bi, nblk in enumerate(block_sizes):
+            block_in = inp
+            for _ in range(nblk):
+                d = layer_dils[li]
+                h_ring, c_ring = rings[li]
+                slot = jnp.mod(t, d)
+                h_prev = jax.lax.dynamic_index_in_dim(h_ring, slot, 0, keepdims=False)
+                c_prev = jax.lax.dynamic_index_in_dim(c_ring, slot, 0, keepdims=False)
+                h, c = lstm_cell(flat_cells[li], inp, h_prev, c_prev, use_pallas=use_pallas)
+                h_ring = jax.lax.dynamic_update_index_in_dim(h_ring, h, slot, 0)
+                c_ring = jax.lax.dynamic_update_index_in_dim(c_ring, c, slot, 0)
+                new_rings.append((h_ring, c_ring))
+                if li == first_layer_idx[bi]:
+                    cstate_sq = cstate_sq + jnp.mean(jnp.square(c.astype(jnp.float32)))
+                inp = h
+                li += 1
+            if bi > 0:
+                inp = inp + block_in
+        return (new_rings, t + 1), (inp, cstate_sq)
+
+    (_, _), (outs, cstate_sqs) = jax.lax.scan(
+        step, (rings, jnp.zeros((), jnp.int32)), jnp.swapaxes(xs, 0, 1)
+    )
+    return jnp.swapaxes(outs, 0, 1), jnp.mean(cstate_sqs) / max(len(block_sizes), 1)

@@ -1,0 +1,246 @@
+"""The hybrid ES-RNN model (paper section 3, Eqs. 5-6).
+
+Dataflow per training step, all batched over the series axis (the paper's
+contribution):
+
+  y (N, T) --hw_smooth--> levels (N, T), seas (N, T+m)
+     |                                     |
+     +--window/normalize/deseason/log (Eq. 6, Fig. 2)
+     |        x[t] = log( y[t-W+1..t] / (l_t * s[t-W+1..t]) )
+     v
+  features (N, P, W + n_cat)  [P = valid window positions; one-hot category]
+     |--dilated residual LSTM (Table 1) -> tanh dense -> linear
+     v
+  yhat_norm (N, P, H)   (de-seasonalized, normalized log-space predictions)
+  loss = pinball(yhat_norm, out_window_norm) + section-8.4 penalties
+
+Forecast (paper section 3.4 / Eq. 5):
+  yhat_{T+1..T+h} = exp(rnn_last) * l_T * s_{T+1..T+h}
+
+The per-series HW parameters and shared RNN weights are trained *jointly*
+(one optimizer, two param groups with different learning rates).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import losses as L
+from repro.core.drnn import drnn_apply, drnn_init
+from repro.core.holt_winters import HWParams, extend_seasonality, hw_init_params, hw_smooth
+
+
+@dataclasses.dataclass(frozen=True)
+class ESRNNConfig:
+    """Frequency-specific ES-RNN hyperparameters (paper Tables 1 and text)."""
+
+    name: str = "quarterly"
+    seasonality: int = 4
+    seasonality2: int = 0          # section 8.2 (e.g. hourly: 24 and 168)
+    input_size: int = 8            # input window W (heuristic, section 3.1)
+    output_size: int = 8           # forecast horizon H
+    hidden_size: int = 40          # Table 1
+    dilations: Tuple[Tuple[int, ...], ...] = ((1, 2), (4, 8))  # Table 1
+    n_categories: int = 6          # M4: Demographic..Other, one-hot appended
+    tau: float = 0.49              # pinball quantile
+    level_penalty: float = 0.0     # section 8.4 (beyond-paper, off by default)
+    cstate_penalty: float = 0.0    # section 8.4
+    attention: bool = False        # section 7/8.5: Smyl's attentive variant
+                                   # (yearly/weekly) -- causal dot-product
+                                   # attention over the LSTM hidden sequence
+    use_pallas: bool = False       # route HW scan + LSTM cell through kernels
+    dtype: str = "float32"
+
+    @property
+    def jdtype(self):
+        return jnp.dtype(self.dtype)
+
+
+# Table 1 presets + the monthly/yearly rows.
+PRESETS = {
+    "yearly": dict(seasonality=1, input_size=4, output_size=6, hidden_size=30,
+                   dilations=((1, 2), (2, 6))),
+    "quarterly": dict(seasonality=4, input_size=8, output_size=8, hidden_size=40,
+                      dilations=((1, 2), (4, 8))),
+    "monthly": dict(seasonality=12, input_size=12, output_size=18, hidden_size=50,
+                    dilations=((1, 3), (6, 12))),
+    "hourly": dict(seasonality=24, seasonality2=168, input_size=24,
+                   output_size=48, hidden_size=40, dilations=((1, 4), (24, 168))),
+}
+
+
+def make_config(name: str, **overrides) -> ESRNNConfig:
+    base = dict(PRESETS[name], name=name)
+    base.update(overrides)
+    return ESRNNConfig(**base)
+
+
+class ESRNN:
+    """Functional model wrapper: ``init`` -> params pytree, pure step fns."""
+
+    def __init__(self, config: ESRNNConfig):
+        self.config = config
+
+    # -- params ------------------------------------------------------------
+
+    def init(self, key, n_series: int):
+        cfg = self.config
+        rnn_key, head_key1, head_key2 = jax.random.split(key, 3)
+        feat = cfg.input_size + cfg.n_categories
+        hw = hw_init_params(
+            n_series, cfg.seasonality, seasonality2=cfg.seasonality2, dtype=cfg.jdtype
+        )
+        rnn = drnn_init(rnn_key, feat, cfg.hidden_size, cfg.dilations, cfg.jdtype)
+        scale = 1.0 / jnp.sqrt(jnp.asarray(cfg.hidden_size, jnp.float32))
+        head = {
+            "dense_w": (jax.random.uniform(head_key1, (cfg.hidden_size, cfg.hidden_size), jnp.float32, -1, 1) * scale).astype(cfg.jdtype),
+            "dense_b": jnp.zeros((cfg.hidden_size,), cfg.jdtype),
+            "out_w": (jax.random.uniform(head_key2, (cfg.hidden_size, cfg.output_size), jnp.float32, -1, 1) * scale).astype(cfg.jdtype),
+            "out_b": jnp.zeros((cfg.output_size,), cfg.jdtype),
+        }
+        params = {"hw": hw, "rnn": rnn, "head": head}
+        if cfg.attention:
+            ka, kb, kc = jax.random.split(head_key1, 3)
+            h = cfg.hidden_size
+            params["attn"] = {
+                "wq": (jax.random.normal(ka, (h, h)) * scale).astype(cfg.jdtype),
+                "wk": (jax.random.normal(kb, (h, h)) * scale).astype(cfg.jdtype),
+                "wv": (jax.random.normal(kc, (h, h)) * scale).astype(cfg.jdtype),
+            }
+        return params
+
+    # -- shared internals ---------------------------------------------------
+
+    def _smooth(self, params, y):
+        cfg = self.config
+        return hw_smooth(
+            y,
+            params["hw"],
+            seasonality=cfg.seasonality,
+            seasonality2=cfg.seasonality2,
+            use_pallas=cfg.use_pallas,
+        )
+
+    def _windows(self, y, levels, seas):
+        """Input/output windows, normalized + de-seasonalized + log (Eq. 6).
+
+        Positions t = W-1 .. T-1. Output windows need y up to t+H, so the
+        last H positions have no (complete) target; a position-validity mask
+        is returned alongside. Returns:
+          feats (N, P, W), out  (N, P, H), out_mask (N, P, H) in {0,1}
+        """
+        cfg = self.config
+        n, t_len = y.shape
+        w, h = cfg.input_size, cfg.output_size
+        pos = jnp.arange(w - 1, t_len)                       # (P,)
+        p = pos.shape[0]
+
+        in_idx = pos[:, None] + jnp.arange(-w + 1, 1)[None, :]     # (P, W)
+        out_idx = pos[:, None] + jnp.arange(1, h + 1)[None, :]     # (P, H)
+        out_valid = out_idx < t_len                                # (P, H)
+        out_idx_c = jnp.minimum(out_idx, t_len - 1)
+
+        y_in = y[:, in_idx]                                   # (N, P, W)
+        s_in = seas[:, in_idx]
+        lvl = levels[:, pos]                                  # (N, P)
+        x_in = jnp.log(jnp.maximum(y_in / (lvl[:, :, None] * s_in), 1e-8))
+
+        y_out = y[:, out_idx_c]                               # (N, P, H)
+        # seasonality for t+1..t+H: seas has T+m entries; clamp + cyclic tile
+        # is handled by indexing into the (N, T+m) array -- indices t+k with
+        # k <= H. For H > m beyond T they would run past T+m; clamp into the
+        # last season cyclically.
+        m = max(cfg.seasonality, 1)
+        s_idx = jnp.where(
+            out_idx < t_len + m,
+            out_idx,
+            t_len + jnp.mod(out_idx - t_len, m),
+        )
+        s_out = seas[:, s_idx]
+        y_out_n = jnp.log(jnp.maximum(y_out / (lvl[:, :, None] * s_out), 1e-8))
+        out_mask = out_valid[None, :, :].astype(y.dtype) * jnp.ones((n, 1, 1), y.dtype)
+        return x_in, y_out_n, out_mask, pos
+
+    def _rnn_head(self, params, feats):
+        cfg = self.config
+        hid, c_sq = drnn_apply(
+            params["rnn"], feats, dilations=cfg.dilations, use_pallas=cfg.use_pallas
+        )
+        if cfg.attention:
+            ap = params["attn"]
+            q = hid @ ap["wq"]
+            k = hid @ ap["wk"]
+            v = hid @ ap["wv"]
+            s = jnp.einsum("nph,nqh->npq", q, k) / jnp.sqrt(
+                jnp.asarray(cfg.hidden_size, jnp.float32)).astype(hid.dtype)
+            p_idx = jnp.arange(hid.shape[1])
+            mask = p_idx[:, None] >= p_idx[None, :]
+            s = jnp.where(mask[None], s.astype(jnp.float32), -jnp.inf)
+            hid = hid + jnp.einsum(
+                "npq,nqh->nph", jax.nn.softmax(s, axis=-1).astype(v.dtype), v)
+        head = params["head"]
+        z = jnp.tanh(hid @ head["dense_w"] + head["dense_b"])
+        return z @ head["out_w"] + head["out_b"], c_sq
+
+    def _features(self, x_in, cats):
+        n, p, _ = x_in.shape
+        cat_feat = jnp.broadcast_to(cats[:, None, :], (n, p, cats.shape[-1]))
+        return jnp.concatenate([x_in, cat_feat.astype(x_in.dtype)], axis=-1)
+
+    # -- public API ----------------------------------------------------------
+
+    @partial(jax.jit, static_argnames=("self",))
+    def loss_fn(self, params, y, cats):
+        """Training loss on series y (N, T) with category one-hots (N, C)."""
+        cfg = self.config
+        levels, seas = self._smooth(params, y)
+        x_in, y_out_n, out_mask, _pos = self._windows(y, levels, seas)
+        feats = self._features(x_in, cats)
+        yhat_n, c_sq = self._rnn_head(params, feats)
+        loss = L.pinball_loss(yhat_n, y_out_n, tau=cfg.tau, mask=out_mask)
+        loss = loss + L.level_variability_penalty(levels, cfg.level_penalty)
+        loss = loss + L.cstate_penalty(c_sq, cfg.cstate_penalty)
+        return loss
+
+    @partial(jax.jit, static_argnames=("self",))
+    def forecast(self, params, y, cats):
+        """h-step forecast from the end of y: (N, H), de-normalized (3.4)."""
+        cfg = self.config
+        n, t_len = y.shape
+        levels, seas = self._smooth(params, y)
+        x_in, _, _, _pos = self._windows(y, levels, seas)
+        feats = self._features(x_in, cats)
+        yhat_n, _ = self._rnn_head(params, feats)
+        last = yhat_n[:, -1, :]                              # (N, H) log-space
+        s_fut = extend_seasonality(seas, t_len, cfg.output_size, cfg.seasonality)
+        return jnp.exp(last) * levels[:, -1:][:, :] * s_fut
+
+    def loss_and_grad(self, params, y, cats):
+        return jax.value_and_grad(lambda p: self.loss_fn(p, y, cats))(params)
+
+
+# ---------------------------------------------------------------------------
+# Per-series loop reference (the structure the paper vectorized away)
+# ---------------------------------------------------------------------------
+
+
+def esrnn_loss_loop_reference(model: ESRNN, params, y, cats) -> jax.Array:
+    """Compute the same loss one series at a time (batch of 1 each).
+
+    Used by the equivalence test and the Table-5 speedup benchmark: identical
+    math, but the series axis is a python loop as in Smyl's original C++.
+    """
+    n = y.shape[0]
+    tree = jax.tree_util.tree_map
+
+    losses = []
+    for i in range(n):
+        p_i = {k: (tree(lambda a: a[i : i + 1], v) if k == "hw" else v)
+               for k, v in params.items()}
+        losses.append(model.loss_fn(p_i, y[i : i + 1], cats[i : i + 1]))
+    return jnp.mean(jnp.stack(losses))

@@ -1,0 +1,79 @@
+"""Loss and metric functions (paper sections 3.5 and 8.4).
+
+* Pin-ball (quantile) loss -- the differentiable surrogate used for training
+  (Takeuchi et al. 2006; Smyl used tau slightly below 0.5).
+* sMAPE / MASE -- the (non-differentiable) M4 competition metrics, plus OWA.
+* Section 8.4 penalties: level-variability penalty and hidden/cell-state
+  magnitude penalty (Krueger & Memisevic) -- the "additional penalization"
+  the paper lists as future work; implemented here as first-class options.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pinball_loss(pred, target, tau: float = 0.49, mask=None):
+    """Mean pin-ball loss. pred/target broadcastable; mask 1=keep."""
+    diff = target - pred
+    loss = jnp.maximum(tau * diff, (tau - 1.0) * diff)
+    if mask is None:
+        return jnp.mean(loss)
+    mask = jnp.broadcast_to(mask, loss.shape)
+    return jnp.sum(loss * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def smape(pred, target, mask=None, axis=None):
+    """Symmetric MAPE in percent, the M4 headline metric.
+
+    sMAPE = 200/h * sum |y - yhat| / (|y| + |yhat|)
+    """
+    num = jnp.abs(target - pred)
+    den = jnp.abs(target) + jnp.abs(pred)
+    ratio = jnp.where(den > 0, num / den, 0.0)
+    if mask is not None:
+        mask = jnp.broadcast_to(mask, ratio.shape)
+        return 200.0 * jnp.sum(ratio * mask, axis=axis) / jnp.maximum(
+            jnp.sum(mask, axis=axis), 1.0
+        )
+    return 200.0 * jnp.mean(ratio, axis=axis)
+
+
+def mase(pred, target, insample, seasonality: int, mask=None):
+    """Mean Absolute Scaled Error against the seasonal-naive in-sample MAE.
+
+    pred/target: (N, H); insample: (N, T) history used for the scale.
+    """
+    m = max(seasonality, 1)
+    scale = jnp.mean(jnp.abs(insample[:, m:] - insample[:, :-m]), axis=1)  # (N,)
+    err = jnp.abs(target - pred)  # (N, H)
+    scaled = err / jnp.maximum(scale[:, None], 1e-8)
+    if mask is not None:
+        mask = jnp.broadcast_to(mask, scaled.shape)
+        return jnp.sum(scaled * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(scaled)
+
+
+def owa(smape_model, mase_model, smape_naive2, mase_naive2):
+    """Overall Weighted Average relative to Naive2 (the M4 ranking metric)."""
+    return 0.5 * (smape_model / smape_naive2 + mase_model / mase_naive2)
+
+
+def level_variability_penalty(levels, weight: float):
+    """Section 8.4: penalize abrupt changes in the log-level *trend*.
+
+    Smyl penalizes the variance of successive differences of log-level
+    changes: d_t = log(l_{t+1}/l_t); penalty = mean (d_{t+1} - d_t)^2.
+    """
+    if weight == 0.0:
+        return jnp.zeros(())
+    log_l = jnp.log(jnp.maximum(levels, 1e-8))
+    d = log_l[:, 1:] - log_l[:, :-1]
+    dd = d[:, 1:] - d[:, :-1]
+    return weight * jnp.mean(jnp.square(dd))
+
+
+def cstate_penalty(mean_cstate_sq, weight: float):
+    """Section 8.4: Krueger & Memisevic hidden-state stabilization."""
+    return weight * mean_cstate_sq

@@ -1,0 +1,103 @@
+"""Pallas TPU kernel: batched Holt-Winters exponential smoothing scan.
+
+This is the paper's hot spot adapted to the TPU memory hierarchy. The GPU
+implementation parallelizes series across CUDA threads; the TPU-native
+schedule is:
+
+* series tiled onto the **lane** dimension (128-wide VPU vectors) --
+  time-major layout ``(T, N)`` so each time step is one vector op row;
+* the sequential time recurrence runs as an in-kernel ``fori_loop`` with all
+  state (level vector, M-row seasonality ring) resident in **VMEM** -- zero
+  HBM traffic inside the loop beyond the streamed y rows and emitted outputs;
+* grid over series blocks: each grid step owns a ``(T, BN)`` tile.
+
+The seasonality ring holds rows ``s`` for times ``t === row (mod M)``; at step
+``t`` slot ``t mod M`` is read (s_t) and overwritten with ``s_{t+M}``, exactly
+Eq. 3 with multiplicative seasonality and no trend (Smyl variant).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Series-per-block: one full lane row. Sublane dim is time (streamed).
+BLOCK_N = 128
+
+
+def _hw_scan_kernel(y_ref, a_ref, g_ref, s0_ref, lev_ref, seas_ref, ring_ref,
+                    *, t_len: int, m: int):
+    alpha = a_ref[0, :]                     # (BN,)
+    gamma = g_ref[0, :]
+
+    # init the seasonality ring in VMEM scratch
+    ring_ref[...] = s0_ref[...]
+
+    def body(t, l_prev):
+        slot = jax.lax.rem(t, m)
+        y_t = pl.load(y_ref, (pl.ds(t, 1), slice(None)))[0]        # (BN,)
+        s_t = pl.load(ring_ref, (pl.ds(slot, 1), slice(None)))[0]
+        l_t = alpha * y_t / s_t + (1.0 - alpha) * l_prev
+        s_new = gamma * y_t / l_t + (1.0 - gamma) * s_t
+        pl.store(ring_ref, (pl.ds(slot, 1), slice(None)), s_new[None, :])
+        pl.store(lev_ref, (pl.ds(t, 1), slice(None)), l_t[None, :])
+        pl.store(seas_ref, (pl.ds(t, 1), slice(None)), s_t[None, :])
+        return l_t
+
+    l0 = y_ref[0, :] / s0_ref[0, :]
+    jax.lax.fori_loop(0, t_len, body, l0)
+
+    # trailing future factors s_T .. s_{T+M-1} live in ring slots (T+k) mod M
+    for k in range(m):  # m is static and small (<= 24)
+        slot = (t_len + k) % m
+        row = pl.load(ring_ref, (pl.ds(slot, 1), slice(None)))
+        pl.store(seas_ref, (pl.ds(t_len + k, 1), slice(None)), row)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def hw_scan_tm(y_tm, alpha, gamma, init_seas_tm, *, interpret: bool = False):
+    """Time-major entry. y_tm: (T, N); alpha/gamma: (N,); init_seas_tm: (M, N).
+
+    N must be a multiple of BLOCK_N (ops.py pads). Returns levels_tm (T, N)
+    and seas_tm (T+M, N).
+    """
+    t_len, n = y_tm.shape
+    m = init_seas_tm.shape[0]
+    dtype = y_tm.dtype
+    grid = (n // BLOCK_N,)
+
+    kernel = functools.partial(_hw_scan_kernel, t_len=t_len, m=m)
+    levels, seas = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((t_len, BLOCK_N), lambda i: (0, i)),
+            pl.BlockSpec((1, BLOCK_N), lambda i: (0, i)),
+            pl.BlockSpec((1, BLOCK_N), lambda i: (0, i)),
+            pl.BlockSpec((m, BLOCK_N), lambda i: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((t_len, BLOCK_N), lambda i: (0, i)),
+            pl.BlockSpec((t_len + m, BLOCK_N), lambda i: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((t_len, n), dtype),
+            jax.ShapeDtypeStruct((t_len + m, n), dtype),
+        ],
+        scratch_shapes=[_vmem_scratch((m, BLOCK_N), dtype)],
+        interpret=interpret,
+    )(y_tm, alpha[None, :], gamma[None, :], init_seas_tm)
+    return levels, seas
+
+
+def _vmem_scratch(shape, dtype):
+    """VMEM scratch allocation, tolerant of pallas API surface differences."""
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+
+        return pltpu.VMEM(shape, dtype)
+    except Exception:  # pragma: no cover - CPU-only environments
+        return pl.MemorySpace.ANY(shape, dtype)  # type: ignore[attr-defined]

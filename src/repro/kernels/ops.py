@@ -1,0 +1,121 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Handles: (a) interpret-mode dispatch (kernels execute in Python on CPU, run
+natively on TPU), (b) padding to hardware-aligned shapes (lanes=128,
+sublanes=8) and stripping, (c) constrained-space parameter transforms so the
+kernels stay pure recurrences.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import hw_scan as _hw
+from repro.kernels import lstm_cell as _lstm
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x, mult, axis):
+    size = x.shape[axis]
+    rem = (-size) % mult
+    if rem == 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, rem)
+    return jnp.pad(x, pads, mode="edge")
+
+
+# ---------------------------------------------------------------------------
+
+
+def hw_scan(y, params, *, seasonality: int):
+    """Kernel-backed equivalent of core.holt_winters.hw_smooth (single ring).
+
+    y: (N, T); params: HWParams. Returns levels (N, T), seas (N, T+m).
+    """
+    n, t_len = y.shape
+    m = max(seasonality, 1)
+    c = params.constrained()
+    alpha, gamma = c["alpha"], c["gamma"]
+    init_seas = c["init_seas"] if seasonality > 1 else jnp.ones((n, m), y.dtype)
+    if seasonality <= 1:
+        # gamma must keep s == 1: force gamma = 0 contribution by flat ring
+        gamma = jnp.zeros_like(gamma)
+
+    bn = _hw.BLOCK_N
+    y_p = _pad_to(y, bn, 0)
+    a_p = _pad_to(alpha[:, None], bn, 0)[:, 0]
+    g_p = _pad_to(gamma[:, None], bn, 0)[:, 0]
+    s_p = _pad_to(init_seas, bn, 0)
+    levels_tm, seas_tm = _hw.hw_scan_tm(
+        y_p.T.copy(), a_p, g_p, s_p.T.copy(), interpret=_interpret()
+    )
+    return levels_tm.T[:n], seas_tm.T[:n]
+
+
+# ---------------------------------------------------------------------------
+
+
+def _pad_gates(w, hidden, h_pad):
+    """(X, 4*H) -> (X, 4*H_pad), each gate block padded independently."""
+    x = w.reshape(w.shape[0], 4, hidden)
+    x = jnp.pad(x, ((0, 0), (0, 0), (0, h_pad - hidden)))
+    return x.reshape(w.shape[0], 4 * h_pad)
+
+
+def lstm_cell(wx, wh, b, x, h, c):
+    """Fused LSTM cell; signature mirrors ref.lstm_cell_ref."""
+    bsz, input_size = x.shape
+    hidden = h.shape[1]
+    i_pad = input_size + ((-input_size) % 128)
+    h_pad = hidden + ((-hidden) % 128)
+    b_pad = bsz + ((-bsz) % _lstm.BLOCK_B)
+
+    wx_p = jnp.pad(_pad_gates(wx, hidden, h_pad), ((0, i_pad - input_size), (0, 0)))
+    wh_p = jnp.pad(_pad_gates(wh, hidden, h_pad), ((0, h_pad - hidden), (0, 0)))
+    b_p = _pad_gates(b[None, :], hidden, h_pad)[0]
+    x_p = jnp.pad(x, ((0, b_pad - bsz), (0, i_pad - input_size)))
+    h_p = jnp.pad(h, ((0, b_pad - bsz), (0, h_pad - hidden)))
+    c_p = jnp.pad(c, ((0, b_pad - bsz), (0, h_pad - hidden)))
+
+    h_new, c_new = _lstm.lstm_cell_padded(
+        wx_p, wh_p, b_p, x_p, h_p, c_p, interpret=_interpret()
+    )
+    return h_new[:bsz, :hidden], c_new[:bsz, :hidden]
+
+
+# ---------------------------------------------------------------------------
+
+
+def _largest_divisor(n: int, cap: int) -> int:
+    for d in range(min(cap, n), 0, -1):
+        if n % d == 0:
+            return d
+    return 1
+
+
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = None,
+                    block_k: int = None):
+    """GQA flash attention wrapper.
+
+    Keys are never padded (block_k is snapped to a divisor of Tk). Queries
+    are padded on the *left* so that real queries keep their end-aligned
+    causal offset; padded rows are stripped from the output.
+    """
+    tq, tk = q.shape[2], k.shape[2]
+    bk = _largest_divisor(tk, block_k or _fa.DEFAULT_BK)
+    bq = min(block_q or _fa.DEFAULT_BQ, tq) if tq >= 8 else 8
+    pad_q = (-tq) % bq
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, 0), (pad_q, 0), (0, 0)))
+    out = _fa.flash_attention(
+        q, k, v, causal=causal, block_q=bq, block_k=bk, interpret=_interpret(),
+    )
+    return out[:, :, pad_q:]

@@ -1,0 +1,66 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each kernel in kernels/ is tested shape/dtype-swept against the function here
+(`tests/kernels/`). These are also the implementations used when a caller
+asks for the non-kernel path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def hw_scan_ref(y, alpha, gamma, init_seas):
+    """Constrained-space Holt-Winters recurrence (see core/holt_winters.py).
+
+    y: (N, T) > 0; alpha, gamma: (N,) in (0,1); init_seas: (N, M) > 0.
+    Returns levels (N, T), seas (N, T+M)  [seas[:, t] = s_t applied to y_t].
+    """
+    n, t_len = y.shape
+    m = init_seas.shape[1]
+    l0 = y[:, 0] / init_seas[:, 0]
+
+    def step(carry, y_t):
+        l_prev, ring = carry
+        s_t = ring[:, 0]
+        l_t = alpha * y_t / s_t + (1.0 - alpha) * l_prev
+        s_new = gamma * y_t / l_t + (1.0 - gamma) * s_t
+        ring = jnp.concatenate([ring[:, 1:], s_new[:, None]], axis=1)
+        return (l_t, ring), (l_t, s_t)
+
+    (_, ring), (levels, seas_used) = jax.lax.scan(step, (l0, init_seas), y.T)
+    return levels.T, jnp.concatenate([seas_used.T, ring], axis=1)
+
+
+def lstm_cell_ref(wx, wh, b, x, h, c):
+    """Fused LSTM cell. wx:(I,4H) wh:(H,4H) b:(4H,) x:(B,I) h,c:(B,H).
+
+    Gate order (i, f, g, o)."""
+    gates = x @ wx + h @ wh + b
+    i, f, g, o = jnp.split(gates, 4, axis=-1)
+    c_new = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h_new = jax.nn.sigmoid(o) * jnp.tanh(c_new)
+    return h_new, c_new
+
+
+def attention_ref(q, k, v, *, causal: bool = True, scale=None):
+    """Multi-head attention oracle with GQA head grouping.
+
+    q: (B, Hq, Tq, D); k, v: (B, Hkv, Tk, D); Hq % Hkv == 0.
+    Causal offset aligns the *ends* of q and k (decode-friendly).
+    """
+    b, hq, tq, d = q.shape
+    hkv, tk = k.shape[1], k.shape[2]
+    group = hq // hkv
+    if group > 1:
+        k = jnp.repeat(k, group, axis=1)
+        v = jnp.repeat(v, group, axis=1)
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) * scale
+    if causal:
+        qi = jnp.arange(tq)[:, None] + (tk - tq)
+        ki = jnp.arange(tk)[None, :]
+        logits = jnp.where(ki <= qi, logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs.astype(v.dtype), v)

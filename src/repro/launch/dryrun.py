@@ -1,0 +1,270 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes and extract roofline terms.
+
+MUST be run as its own process (the XLA_FLAGS line above is the very first
+statement, before any jax import, because jax locks the device count at
+first init):
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --arch esrnn-quarterly --shape m4_train
+
+Outputs one JSON per cell under experiments/dryrun/<mesh>/.
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, ShapeCell, all_cells, cell_applicable, get_config
+from repro.launch import steps
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import build_model
+from repro.roofline import analysis
+from repro.roofline.jaxpr_cost import jaxpr_flops
+from repro.sharding import specs
+from repro.sharding.ctx import activation_sharding
+
+
+def _shardings_for_tree(mesh, tree_abs, fn):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, fn(path, leaf)), tree_abs)
+
+
+def lower_cell(arch: str, shape: str, mesh, *, donate: bool = True):
+    """Build abstract inputs + jit with shardings; return (lowered, meta)."""
+    cfg = get_config(arch)
+    cell = SHAPES[shape]
+    model = build_model(cfg)
+    axes = specs.axes_for(mesh)
+    specs.set_mesh(mesh)
+
+    specs.set_param_mode("decode" if cell.kind == "decode" else "train")
+    batch_abs = steps.batch_template(cfg, cell)
+    batch_sh = specs.batch_shardings(mesh, batch_abs, cell.global_batch)
+
+    meta = {
+        "arch": arch, "shape": shape, "kind": cell.kind,
+        "seq_len": cell.seq_len, "global_batch": cell.global_batch,
+        "n_params": cfg.param_count(),
+        "n_params_active": cfg.active_param_count(),
+    }
+
+    with mesh, activation_sharding(mesh, dp=axes["dp"], tp=axes["tp"]):
+        if cell.kind == "train":
+            params_abs = steps.abstract_params(model, master_fp32=True)
+            params_sh = specs.param_shardings(mesh, params_abs)
+            opt_abs = steps.abstract_opt_state(params_abs)
+            opt_sh = {
+                "mu": params_sh, "nu": params_sh,
+                "step": NamedSharding(mesh, P()),
+            }
+            fn = steps.make_train_step(model, cell)
+            jitted = jax.jit(
+                fn,
+                in_shardings=(params_sh, opt_sh, batch_sh),
+                out_shardings=(params_sh, opt_sh, NamedSharding(mesh, P())),
+                donate_argnums=(0, 1) if donate else (),
+            )
+            traced = jitted.trace(params_abs, opt_abs, batch_abs)
+            meta["flops_jaxpr"] = jaxpr_flops(traced.jaxpr)
+            lowered = traced.lower()
+            meta["tokens"] = cell.global_batch * cell.seq_len
+        elif cell.kind == "prefill":
+            params_abs = steps.abstract_params(model, master_fp32=False)
+            params_sh = specs.param_shardings(mesh, params_abs)
+            caches_abs = jax.eval_shape(
+                lambda: model.make_caches(cell.global_batch, cell.seq_len, jnp.bfloat16))
+            caches_sh = specs.cache_shardings(mesh, caches_abs, cell.global_batch)
+            fn = steps.make_prefill_step(model, cell)
+            jitted = jax.jit(
+                fn,
+                in_shardings=(params_sh, batch_sh),
+                out_shardings=(NamedSharding(mesh, P()), caches_sh),
+            )
+            traced = jitted.trace(params_abs, batch_abs)
+            meta["flops_jaxpr"] = jaxpr_flops(traced.jaxpr)
+            lowered = traced.lower()
+            meta["tokens"] = cell.global_batch * cell.seq_len
+        else:  # decode
+            params_abs = steps.abstract_params(model, master_fp32=False)
+            params_sh = specs.param_shardings(mesh, params_abs)
+            caches_abs = jax.eval_shape(
+                lambda: model.make_caches(cell.global_batch, cell.seq_len, jnp.bfloat16))
+            caches_sh = specs.cache_shardings(mesh, caches_abs, cell.global_batch)
+            fn = steps.make_decode_step(model, cell)
+            jitted = jax.jit(
+                fn,
+                in_shardings=(params_sh, batch_sh, caches_sh),
+                out_shardings=(NamedSharding(mesh, P()), caches_sh),
+                donate_argnums=(2,) if donate else (),
+            )
+            traced = jitted.trace(params_abs, batch_abs, caches_abs)
+            meta["flops_jaxpr"] = jaxpr_flops(traced.jaxpr)
+            lowered = traced.lower()
+            meta["tokens"] = cell.global_batch  # one token per sequence
+    return lowered, meta
+
+
+# ---------------------------------------------------------------------------
+# ES-RNN (the paper's own model) dry-run cells
+# ---------------------------------------------------------------------------
+
+ESRNN_CELLS = {
+    # N series per batch, equalized length C (paper: 72 for quarterly/monthly)
+    "m4_train": dict(n_series=262144, t_len=72),
+    "m4_train_monthly": dict(n_series=262144, t_len=72),
+}
+
+
+def lower_esrnn(arch: str, shape: str, mesh):
+    from repro.core.esrnn import ESRNN, make_config
+    from repro.train.optimizer import AdamConfig, adam_init, adam_update, esrnn_group_fn
+
+    freq = arch.split("-", 1)[1]
+    cfg = make_config(freq)
+    cell = ESRNN_CELLS[shape]
+    n, t_len = cell["n_series"], cell["t_len"]
+    model = ESRNN(cfg)
+    axes = specs.axes_for(mesh)
+    specs.set_mesh(mesh)
+    dp = axes["dp"]
+
+    params_abs = jax.eval_shape(lambda k: model.init(k, n), jax.random.PRNGKey(0))
+
+    def esrnn_param_spec(path, leaf):
+        names = specs._path_names(path)
+        if "hw" in names:  # per-series: shard on data, grads sync-free
+            return P(*([dp] + [None] * (len(leaf.shape) - 1)))
+        return P(*([None] * len(leaf.shape)))
+
+    params_sh = _shardings_for_tree(mesh, params_abs, esrnn_param_spec)
+    opt_abs = jax.eval_shape(adam_init, params_abs)
+    opt_sh = {"mu": params_sh, "nu": params_sh, "step": NamedSharding(mesh, P())}
+    y_abs = jax.ShapeDtypeStruct((n, t_len), jnp.float32)
+    c_abs = jax.ShapeDtypeStruct((n, cfg.n_categories), jnp.float32)
+    data_sh = (NamedSharding(mesh, P(dp, None)), NamedSharding(mesh, P(dp, None)))
+    adam = AdamConfig(lr=1e-3, group_lr={"per_series": 10.0, "default": 1.0})
+
+    def train_step(params, opt_state, y, cats):
+        loss, grads = jax.value_and_grad(
+            lambda p: model.loss_fn(p, y, cats))(params)
+        params, opt_state = adam_update(grads, opt_state, params, adam,
+                                        group_fn=esrnn_group_fn)
+        return params, opt_state, loss
+
+    with mesh, activation_sharding(mesh, dp=dp, tp=axes["tp"]):
+        jitted = jax.jit(
+            train_step,
+            in_shardings=(params_sh, opt_sh) + data_sh,
+            out_shardings=(params_sh, opt_sh, NamedSharding(mesh, P())),
+        )
+        traced = jitted.trace(params_abs, opt_abs, y_abs, c_abs)
+        flops = jaxpr_flops(traced.jaxpr)
+        lowered = traced.lower()
+    meta = {"arch": arch, "shape": shape, "kind": "train", "flops_jaxpr": flops,
+            "seq_len": t_len, "global_batch": n,
+            "n_params": int(n * (2 + cfg.seasonality)),
+            "n_params_active": int(n * (2 + cfg.seasonality)),
+            "tokens": n * t_len}
+    return lowered, meta
+
+
+# ---------------------------------------------------------------------------
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str, out_dir: str) -> dict:
+    multi = mesh_kind == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    chips = mesh.devices.size
+    t0 = time.time()
+    try:
+        if arch.startswith("esrnn-"):
+            lowered, meta = lower_esrnn(arch, shape, mesh)
+        else:
+            lowered, meta = lower_cell(arch, shape, mesh)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        terms = analysis.analyze(compiled, chips,
+                                 flops_global=meta.get("flops_jaxpr"))
+        mf = analysis.model_flops(meta["n_params_active"], meta["tokens"])
+        if meta["kind"] == "train":
+            mf *= 3  # fwd + bwd
+        result = {
+            **meta,
+            "mesh": mesh_kind,
+            "chips": chips,
+            "status": "ok",
+            "lower_s": round(t_lower, 1),
+            "compile_s": round(t_compile, 1),
+            "roofline": terms.to_dict(),
+            "model_flops": mf,
+            "useful_flops_ratio": (mf / terms.flops_global
+                                   if terms.flops_global else None),
+        }
+        mem = compiled.memory_analysis()
+        result["memory_analysis"] = {
+            "argument_size": mem.argument_size_in_bytes,
+            "output_size": mem.output_size_in_bytes,
+            "temp_size": mem.temp_size_in_bytes,
+            "alias_size": mem.alias_size_in_bytes,
+        }
+    except Exception as e:  # noqa: BLE001 - record the failure, keep sweeping
+        result = {
+            "arch": arch, "shape": shape, "mesh": mesh_kind, "chips": chips,
+            "status": "error", "error": f"{type(e).__name__}: {e}",
+            "traceback": traceback.format_exc()[-4000:],
+        }
+    os.makedirs(out_dir, exist_ok=True)
+    fname = os.path.join(out_dir, f"{arch}__{shape}.json")
+    with open(fname, "w") as f:
+        json.dump(result, f, indent=1)
+    jax.clear_caches()  # keep the long --all sweep's memory bounded
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    out_dir = os.path.join(args.out, args.mesh)
+    cells = []
+    if args.all:
+        cells = all_cells()
+        cells += [("esrnn-quarterly", "m4_train")]
+    else:
+        ok, why = (True, "") if args.arch.startswith("esrnn-") else \
+            cell_applicable(args.arch, args.shape)
+        if not ok:
+            print(f"SKIP {args.arch} x {args.shape}: {why}")
+            return
+        cells = [(args.arch, args.shape)]
+
+    for arch, shape in cells:
+        r = run_cell(arch, shape, args.mesh, out_dir)
+        if r["status"] == "ok":
+            rt = r["roofline"]
+            print(f"OK   {arch:24s} {shape:12s} {args.mesh:6s} "
+                  f"compile={r['compile_s']:.0f}s "
+                  f"comp={rt['compute_s']:.2e}s mem={rt['memory_s']:.2e}s "
+                  f"coll={rt['collective_s']:.2e}s dom={rt['dominant']}")
+        else:
+            print(f"FAIL {arch:24s} {shape:12s} {args.mesh:6s} {r['error']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,131 @@
+"""Step builders: jit-able train/prefill/decode steps + abstract inputs and
+shardings for every (arch x shape) cell. Used by dryrun.py (AOT compile) and
+by the real launchers (train.py / serve.py).
+
+train_step = grad-accumulation scan over microbatches (bounds activation
+memory) + AdamW update, with fp32 master params and bf16 compute casts (the
+FSDP all-gathers then move bf16, half the bytes).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ShapeCell
+from repro.models.config import ArchConfig
+from repro.models.model import Model
+from repro.train.optimizer import AdamConfig, adam_init, adam_update
+
+
+def cast_params_for_compute(params, dtype=jnp.bfloat16):
+    """fp32 master -> bf16 compute for every matrix; small leaves stay fp32."""
+    def cast(x):
+        if x.dtype == jnp.float32 and x.ndim >= 2:
+            return x.astype(dtype)
+        return x
+    return jax.tree_util.tree_map(cast, params)
+
+
+def abstract_params(model: Model, *, master_fp32: bool) -> Any:
+    abs_p = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    if master_fp32:
+        abs_p = jax.tree_util.tree_map(
+            lambda l: jax.ShapeDtypeStruct(l.shape, jnp.float32)
+            if l.dtype == jnp.bfloat16 else l,
+            abs_p,
+        )
+    return abs_p
+
+
+# ---------------------------------------------------------------------------
+# batch templates per cell
+# ---------------------------------------------------------------------------
+
+
+def batch_template(cfg: ArchConfig, cell: ShapeCell) -> Dict[str, jax.ShapeDtypeStruct]:
+    b, s = cell.global_batch, cell.seq_len
+    i32 = jnp.int32
+    bf16 = jnp.bfloat16
+    if cell.kind in ("train", "prefill"):
+        s_text = s - (cfg.n_patches if cfg.family == "vlm" else 0)
+        out = {"tokens": jax.ShapeDtypeStruct((b, s_text), i32)}
+        if cell.kind == "train":
+            out["labels"] = jax.ShapeDtypeStruct((b, s_text), i32)
+        if cfg.family == "vlm":
+            out["image_embeds"] = jax.ShapeDtypeStruct((b, cfg.n_patches, cfg.d_model), bf16)
+        if cfg.family == "encdec":
+            out["frames"] = jax.ShapeDtypeStruct((b, cfg.n_frames, cfg.d_model), bf16)
+        return out
+    # decode: one new token against a cache of length s
+    return {
+        "tokens": jax.ShapeDtypeStruct((b, 1), i32),
+        "positions": jax.ShapeDtypeStruct((b, 1), i32),
+    }
+
+
+def abstract_caches(model: Model, cell: ShapeCell) -> Any:
+    return jax.eval_shape(
+        lambda: model.make_caches(cell.global_batch, cell.seq_len, jnp.bfloat16)
+    )
+
+
+# ---------------------------------------------------------------------------
+# step functions
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(model: Model, cell: ShapeCell, *,
+                    adam: Optional[AdamConfig] = None):
+    """(params_fp32, opt_state, batch) -> (params, opt_state, loss)."""
+    adam = adam or AdamConfig(lr=3e-4, clip_norm=1.0, weight_decay=0.0)
+    mb = cell.microbatch or cell.global_batch
+    n_micro = max(1, cell.global_batch // mb)
+
+    def train_step(params, opt_state, batch):
+        def loss_fn(p, micro):
+            return model.loss(cast_params_for_compute(p), micro)
+
+        if n_micro == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            micro_batches = jax.tree_util.tree_map(
+                lambda x: x.reshape((n_micro, mb) + x.shape[1:]), batch)
+
+            def accum(carry, micro):
+                loss_acc, grads_acc = carry
+                loss, grads = jax.value_and_grad(loss_fn)(params, micro)
+                grads_acc = jax.tree_util.tree_map(jnp.add, grads_acc, grads)
+                return (loss_acc + loss, grads_acc), None
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(
+                accum, (jnp.zeros(()), zeros), micro_batches)
+            loss = loss / n_micro
+            grads = jax.tree_util.tree_map(lambda g: g / n_micro, grads)
+
+        params, opt_state = adam_update(grads, opt_state, params, adam)
+        return params, opt_state, loss
+
+    return train_step
+
+
+def make_prefill_step(model: Model, cell: ShapeCell):
+    def prefill(params, batch):
+        return model.prefill(params, batch, cell.seq_len)
+    return prefill
+
+
+def make_decode_step(model: Model, cell: ShapeCell):
+    def decode(params, batch, caches):
+        return model.decode(params, batch, caches)
+    return decode
+
+
+def abstract_opt_state(params_abs):
+    return jax.eval_shape(adam_init, params_abs)

@@ -1,0 +1,353 @@
+"""Attention variants: GQA (+bias/partial-RoPE/QK-norm), MLA, cross-attn.
+
+Memory-safe by construction:
+* training/prefill attention is *chunked* over query blocks (``lax.scan``) so
+  the full (Tq, Tk) score matrix never materializes -- required to compile
+  the 32k prefill cells within HBM;
+* GQA never materializes head-repeated K/V -- scores are computed grouped
+  ``(B, Hkv, group, Tq, Tk)`` via einsum;
+* decode attends over the preallocated cache with an explicit position mask.
+
+An optional Pallas flash-attention kernel (kernels/flash_attention.py)
+replaces the chunked path when ``use_pallas`` is set.
+
+KV caches: (B, S_max, Hkv, hd) bf16, written with dynamic_update_slice.
+Prefill builds the cache by writing computed K/V into the zero-initialized
+buffer; decode appends one step. Cache sequence axis is the one sharded on
+the model axis when head counts don't divide it (sharding/specs.py).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models.layers import apply_rope, dense_init, rms_norm
+
+DEFAULT_Q_CHUNK = 512
+
+
+class KVCache(NamedTuple):
+    k: jax.Array       # (B, S_max, Hkv, hd)
+    v: jax.Array
+    length: jax.Array  # () int32 current fill
+
+
+def _grouped(q, hkv):
+    b, hq, tq, hd = q.shape
+    return q.reshape(b, hkv, hq // hkv, tq, hd)
+
+
+def _attn_block(qg, k, v, q_start, offset, causal, scale, extra_mask=None):
+    """qg: (B, Hkv, G, BQ, hd); k/v: (B, Hkv, Tk, hd)."""
+    tk = k.shape[2]
+    s = jnp.einsum("bkgqd,bktd->bkgqt", qg, k).astype(jnp.float32) * scale
+    if causal:
+        q_ids = q_start + jnp.arange(qg.shape[3])[:, None] + offset
+        k_ids = jnp.arange(tk)[None, :]
+        s = jnp.where(k_ids <= q_ids, s, -jnp.inf)
+    if extra_mask is not None:  # (B, BQ, Tk) validity
+        s = jnp.where(extra_mask[:, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bkgqt,bktd->bkgqd", p.astype(v.dtype), v)
+
+
+def chunked_attention(q, k, v, *, causal: bool, scale: float,
+                      q_chunk: int = DEFAULT_Q_CHUNK, use_pallas: bool = False):
+    """softmax(q k^T) v without materializing (Tq, Tk) or repeated KV.
+
+    q: (B, Hq, Tq, hd); k, v: (B, Hkv, Tk, hd). End-aligned causal offset.
+    """
+    if use_pallas:
+        from repro.kernels import ops as kernel_ops
+
+        return kernel_ops.flash_attention(q, k, v, causal=causal)
+
+    b, hq, tq, hd = q.shape
+    hkv, tk = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    scale = jnp.asarray(scale, jnp.float32)
+    offset = tk - tq
+    qg = _grouped(q, hkv)
+
+    if tq <= q_chunk:
+        out = _attn_block(qg, k, v, 0, offset, causal, scale)
+        return out.reshape(b, hq, tq, dv)
+
+    n_chunks = tq // q_chunk
+    rem = tq - n_chunks * q_chunk
+    g = hq // hkv
+    q_main = qg[:, :, :, : n_chunks * q_chunk].reshape(b, hkv, g, n_chunks, q_chunk, hd)
+    q_main = jnp.moveaxis(q_main, 3, 0)   # (n_chunks, B, Hkv, G, BQ, hd)
+
+    def body(_, qc_i):
+        qc, i = qc_i
+        return None, _attn_block(qc, k, v, i * q_chunk, offset, causal, scale)
+
+    _, outs = jax.lax.scan(body, None, (q_main, jnp.arange(n_chunks)))
+    outs = jnp.moveaxis(outs, 0, 3).reshape(b, hkv, g, n_chunks * q_chunk, dv)
+    if rem:
+        tail = _attn_block(qg[:, :, :, n_chunks * q_chunk :], k, v,
+                           n_chunks * q_chunk, offset, causal, scale)
+        outs = jnp.concatenate([outs, tail], axis=3)
+    return outs.reshape(b, hq, tq, dv)
+
+
+def cached_attention(q, k, v, positions, scale):
+    """Decode-step attention over a preallocated cache buffer.
+
+    q: (B, Hq, S, hd) at absolute ``positions``; k/v: (B, Hkv, S_max, hd).
+    Key slot j is valid iff j <= query position (slots are written at their
+    absolute position, so unwritten future slots are masked out).
+    """
+    b, hq, s, hd = q.shape
+    hkv, smax = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    qg = _grouped(q, hkv)
+    logits = jnp.einsum("bkgqd,bktd->bkgqt", qg, k).astype(jnp.float32) * scale
+    pos = jnp.broadcast_to(jnp.asarray(positions), (b, s))
+    mask = jnp.arange(smax)[None, None, :] <= pos[:, :, None]   # (B, S, Smax)
+    logits = jnp.where(mask[:, None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqt,bktd->bkgqd", probs.astype(v.dtype), v)
+    return out.reshape(b, hq, s, dv)
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+
+def gqa_init(key, cfg: ArchConfig, dtype):
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, hq * hd, dtype),
+        "wk": dense_init(ks[1], d, hkv * hd, dtype),
+        "wv": dense_init(ks[2], d, hkv * hd, dtype),
+        "wo": dense_init(ks[3], hq * hd, d, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq * hd,), dtype)
+        p["bk"] = jnp.zeros((hkv * hd,), dtype)
+        p["bv"] = jnp.zeros((hkv * hd,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def make_kv_cache(cfg: ArchConfig, batch: int, max_len: int, dtype) -> KVCache:
+    shape = (batch, max_len, cfg.n_kv_heads, cfg.hd)
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype),
+                   jnp.zeros((), jnp.int32))
+
+
+def gqa_apply(
+    p,
+    cfg: ArchConfig,
+    x,
+    positions,
+    *,
+    cache: Optional[KVCache] = None,
+    cache_max_len: Optional[int] = None,
+    use_pallas: bool = False,
+) -> Tuple[jax.Array, Optional[KVCache]]:
+    """x: (B, S, d).
+
+    Modes: train (no cache args); prefill (``cache_max_len`` set: attention
+    over the fresh K/V, returns a cache buffer of that length); decode
+    (``cache`` set: append S positions, attend over the buffer).
+    """
+    b, s, d = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, hq, hd)
+    k = k.reshape(b, s, hkv, hd)
+    v = v.reshape(b, s, hkv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    q = apply_rope(q, positions, theta=cfg.rope_theta, fraction=cfg.rope_fraction)
+    k = apply_rope(k, positions, theta=cfg.rope_theta, fraction=cfg.rope_fraction)
+
+    scale = cfg.attention_multiplier if cfg.attention_multiplier is not None else hd ** -0.5
+    qh, kh, vh = (jnp.swapaxes(t, 1, 2) for t in (q, k, v))
+
+    new_cache = None
+    if cache is not None:  # decode/append
+        kc = jax.lax.dynamic_update_slice_in_dim(
+            cache.k, k.astype(cache.k.dtype), cache.length, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(
+            cache.v, v.astype(cache.v.dtype), cache.length, axis=1)
+        new_cache = KVCache(kc, vc, cache.length + s)
+        out = cached_attention(qh, jnp.swapaxes(kc, 1, 2), jnp.swapaxes(vc, 1, 2),
+                               positions, scale)
+    else:
+        out = chunked_attention(qh, kh, vh, causal=True, scale=scale,
+                                use_pallas=use_pallas)
+        if cache_max_len is not None:  # prefill: publish the cache buffer
+            pad = cache_max_len - s
+            kc = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            vc = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            new_cache = KVCache(kc, vc, jnp.asarray(s, jnp.int32))
+    out = jnp.swapaxes(out, 1, 2).reshape(b, s, hq * hd)
+    return out @ p["wo"], new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2 multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+
+class MLACache(NamedTuple):
+    c_kv: jax.Array    # (B, S_max, kv_lora_rank)
+    k_rope: jax.Array  # (B, S_max, qk_rope_dim)
+    length: jax.Array
+
+
+def mla_init(key, cfg: ArchConfig, dtype):
+    d, h = cfg.d_model, cfg.n_heads
+    r, dn, dr, dv = cfg.kv_lora_rank, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 5)
+    return {
+        "wq": dense_init(ks[0], d, h * (dn + dr), dtype),
+        "w_dkv": dense_init(ks[1], d, r + dr, dtype),        # latent + shared k_rope
+        "kv_norm": jnp.ones((r,), dtype),
+        "w_uk": dense_init(ks[2], r, h * dn, dtype),
+        "w_uv": dense_init(ks[3], r, h * dv, dtype),
+        "wo": dense_init(ks[4], h * dv, d, dtype),
+    }
+
+
+def make_mla_cache(cfg: ArchConfig, batch: int, max_len: int, dtype) -> MLACache:
+    return MLACache(
+        jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+        jnp.zeros((batch, max_len, cfg.qk_rope_dim), dtype),
+        jnp.zeros((), jnp.int32),
+    )
+
+
+def mla_apply(p, cfg: ArchConfig, x, positions, *,
+              cache: Optional[MLACache] = None,
+              cache_max_len: Optional[int] = None,
+              use_pallas: bool = False,
+              absorbed_decode: bool = True):
+    b, s, d = x.shape
+    h = cfg.n_heads
+    r, dn, dr, dv = cfg.kv_lora_rank, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+
+    q = (x @ p["wq"]).reshape(b, s, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, theta=cfg.rope_theta)
+
+    ckv = x @ p["w_dkv"]
+    c_kv, k_rope = ckv[..., :r], ckv[..., r:]
+    c_kv = rms_norm(c_kv, p["kv_norm"])
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, theta=cfg.rope_theta)[:, :, 0]
+
+    new_cache = None
+    scale = (dn + dr) ** -0.5
+
+    if cache is not None:  # decode
+        c_all = jax.lax.dynamic_update_slice_in_dim(
+            cache.c_kv, c_kv.astype(cache.c_kv.dtype), cache.length, axis=1)
+        kr_all = jax.lax.dynamic_update_slice_in_dim(
+            cache.k_rope, k_rope.astype(cache.k_rope.dtype), cache.length, axis=1)
+        new_cache = MLACache(c_all, kr_all, cache.length + s)
+        if absorbed_decode:
+            out = _mla_absorbed(p, cfg, q_nope, q_rope, c_all, kr_all, positions, scale)
+            return out @ p["wo"], new_cache
+        tk = c_all.shape[1]
+        k_nope = (c_all @ p["w_uk"]).reshape(b, tk, h, dn)
+        v = (c_all @ p["w_uv"]).reshape(b, tk, h, dv)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(kr_all[:, :, None, :], (b, tk, h, dr))], axis=-1)
+        qfull = jnp.concatenate([q_nope, q_rope], axis=-1)
+        qh, kh, vh = (jnp.swapaxes(t, 1, 2) for t in (qfull, k, v))
+        out = cached_attention(qh, kh, vh, positions, scale)
+    else:  # train / prefill
+        k_nope = (c_kv @ p["w_uk"]).reshape(b, s, h, dn)
+        v = (c_kv @ p["w_uv"]).reshape(b, s, h, dv)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (b, s, h, dr))], axis=-1)
+        qfull = jnp.concatenate([q_nope, q_rope], axis=-1)
+        qh, kh, vh = (jnp.swapaxes(t, 1, 2) for t in (qfull, k, v))
+        out = chunked_attention(qh, kh, vh, causal=True, scale=scale,
+                                use_pallas=use_pallas)
+        if cache_max_len is not None:
+            pad = cache_max_len - s
+            new_cache = MLACache(
+                jnp.pad(c_kv, ((0, 0), (0, pad), (0, 0))),
+                jnp.pad(k_rope, ((0, 0), (0, pad), (0, 0))),
+                jnp.asarray(s, jnp.int32),
+            )
+    out = jnp.swapaxes(out, 1, 2).reshape(b, s, h * dv)
+    return out @ p["wo"], new_cache
+
+
+def _mla_absorbed(p, cfg, q_nope, q_rope, c_all, kr_all, positions, scale):
+    """Matrix-absorbed MLA decode (beyond-paper serving optimization).
+
+    Attention runs in the rank-r latent space: q_lat = q_nope @ W_uk^T per
+    head; scores = q_lat . c_kv + q_rope . k_rope. Avoids materializing
+    per-head K/V of length S_max (O(S*h*(dn+dv)) -> O(S*(r+dr)) bytes).
+    """
+    b, s, h, dn = q_nope.shape
+    r = cfg.kv_lora_rank
+    dv = cfg.v_head_dim
+    smax = c_all.shape[1]
+    w_uk = p["w_uk"].reshape(r, h, dn)
+    w_uv = p["w_uv"].reshape(r, h, dv)
+    q_lat = jnp.einsum("bshd,rhd->bshr", q_nope, w_uk)
+    logits = (
+        jnp.einsum("bshr,btr->bhst", q_lat, c_all)
+        + jnp.einsum("bshd,btd->bhst", q_rope, kr_all)
+    ).astype(jnp.float32) * scale
+    pos = jnp.broadcast_to(jnp.asarray(positions), (b, s))
+    mask = jnp.arange(smax)[None, None, :] <= pos[:, :, None]
+    logits = jnp.where(mask[:, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    ctx = jnp.einsum("bhst,btr->bshr", probs.astype(c_all.dtype), c_all)
+    out = jnp.einsum("bshr,rhd->bshd", ctx, w_uv)
+    return out.reshape(b, s, h * dv)
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (whisper decoder)
+# ---------------------------------------------------------------------------
+
+
+def cross_attn_init(key, cfg: ArchConfig, dtype):
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], d, h * hd, dtype),
+        "wk": dense_init(ks[1], d, h * hd, dtype),
+        "wv": dense_init(ks[2], d, h * hd, dtype),
+        "wo": dense_init(ks[3], h * hd, d, dtype),
+        "bq": jnp.zeros((h * hd,), dtype),
+        "bv": jnp.zeros((h * hd,), dtype),
+        "bo": jnp.zeros((d,), dtype),
+    }
+
+
+def cross_attn_apply(p, cfg: ArchConfig, x, memory, *, use_pallas: bool = False):
+    """x: (B, S, d) queries; memory: (B, M, d) encoder states."""
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, cfg.hd
+    q = (x @ p["wq"] + p["bq"]).reshape(b, s, h, hd)
+    k = (memory @ p["wk"]).reshape(b, -1, h, hd)
+    v = (memory @ p["wv"] + p["bv"]).reshape(b, -1, h, hd)
+    qh, kh, vh = (jnp.swapaxes(t, 1, 2) for t in (q, k, v))
+    out = chunked_attention(qh, kh, vh, causal=False, scale=hd ** -0.5,
+                            use_pallas=use_pallas)
+    out = jnp.swapaxes(out, 1, 2).reshape(b, s, h * hd)
+    return out @ p["wo"] + p["bo"]

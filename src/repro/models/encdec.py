@@ -1,0 +1,167 @@
+"""Whisper-style encoder-decoder (audio backbone; conv frontend stubbed).
+
+Per the task spec the modality frontend is a stub: ``input_specs`` provides
+precomputed frame embeddings (B, n_frames, d_model) -- the two strided
+conv1d layers of Whisper are not modeled. Positions are sinusoidal for both
+stacks (Whisper uses learned decoder positions capped at 448; the assigned
+decode shapes go to 32k, so we substitute sinusoidal -- noted in DESIGN.md).
+
+LayerNorm + GELU MLP + MHA (n_kv_heads == n_heads), pre-norm residuals,
+decoder has self-attn (causal, cached) + cross-attn over encoder memory.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as A
+from repro.models.config import ArchConfig
+from repro.models.layers import (
+    apply_norm, cross_entropy_loss, embed_init, embed_lookup,
+    gelu_mlp_apply, gelu_mlp_init, norm_init,
+)
+from repro.sharding.ctx import constrain
+
+
+def _sinusoid(positions, d):
+    half = d // 2
+    freq = jnp.exp(-jnp.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / max(half - 1, 1))
+    ang = positions[..., None].astype(jnp.float32) * freq
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _enc_layer_init(key, cfg, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "attn_norm": norm_init(cfg.d_model, "layernorm", dtype),
+        "attn": A.gqa_init(k1, cfg, dtype),
+        "mlp_norm": norm_init(cfg.d_model, "layernorm", dtype),
+        "mlp": gelu_mlp_init(k2, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def _dec_layer_init(key, cfg, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "attn_norm": norm_init(cfg.d_model, "layernorm", dtype),
+        "attn": A.gqa_init(k1, cfg, dtype),
+        "cross_norm": norm_init(cfg.d_model, "layernorm", dtype),
+        "cross": A.cross_attn_init(k2, cfg, dtype),
+        "mlp_norm": norm_init(cfg.d_model, "layernorm", dtype),
+        "mlp": gelu_mlp_init(k3, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def encdec_init(cfg: ArchConfig, key, dtype=None):
+    dtype = dtype or cfg.jdtype
+    n_enc = cfg.n_enc_layers or cfg.n_layers
+    keys = jax.random.split(key, n_enc + cfg.n_layers + 4)
+    enc = [_enc_layer_init(keys[i], cfg, dtype) for i in range(n_enc)]
+    dec = [_dec_layer_init(keys[n_enc + i], cfg, dtype) for i in range(cfg.n_layers)]
+    return {
+        "enc_layers": jax.tree_util.tree_map(lambda *x: jnp.stack(x), *enc),
+        "enc_norm": norm_init(cfg.d_model, "layernorm", dtype),
+        "embed": embed_init(keys[-3], cfg.vocab_size, cfg.d_model, dtype),
+        "dec_layers": jax.tree_util.tree_map(lambda *x: jnp.stack(x), *dec),
+        "dec_norm": norm_init(cfg.d_model, "layernorm", dtype),
+    }
+
+
+def encode(cfg: ArchConfig, params, frames, *, use_pallas=False, remat=False):
+    """frames: (B, M, d) precomputed embeddings (conv stub)."""
+    h = frames.astype(cfg.jdtype)
+    h = h + _sinusoid(jnp.arange(h.shape[1])[None, :], cfg.d_model).astype(h.dtype)
+    h = constrain(h, "dp", None, None)
+    positions = jnp.arange(h.shape[1])[None, :]
+
+    def one(h, lp):
+        x = apply_norm(h, lp["attn_norm"], "layernorm")
+        # bidirectional self-attention
+        b, s, _ = x.shape
+        q = (x @ lp["attn"]["wq"]).reshape(b, s, cfg.n_heads, cfg.hd)
+        k = (x @ lp["attn"]["wk"]).reshape(b, s, cfg.n_kv_heads, cfg.hd)
+        v = (x @ lp["attn"]["wv"]).reshape(b, s, cfg.n_kv_heads, cfg.hd)
+        qh, kh, vh = (jnp.swapaxes(t, 1, 2) for t in (q, k, v))
+        o = A.chunked_attention(qh, kh, vh, causal=False, scale=cfg.hd ** -0.5,
+                                use_pallas=use_pallas)
+        o = jnp.swapaxes(o, 1, 2).reshape(b, s, -1) @ lp["attn"]["wo"]
+        h = h + o
+        h = h + gelu_mlp_apply(lp["mlp"], apply_norm(h, lp["mlp_norm"], "layernorm"))
+        return h, None
+
+    if remat:
+        one = jax.checkpoint(one, policy=jax.checkpoint_policies.nothing_saveable)
+    h, _ = jax.lax.scan(one, h, params["enc_layers"])
+    return apply_norm(h, params["enc_norm"], "layernorm")
+
+
+def _dec_block(cfg, lp, h, memory, positions, *, cache=None, cache_max_len=None,
+               use_pallas=False):
+    a_out, nc = A.gqa_apply(lp["attn"], cfg,
+                            apply_norm(h, lp["attn_norm"], "layernorm"),
+                            positions, cache=cache, cache_max_len=cache_max_len,
+                            use_pallas=use_pallas)
+    h = h + a_out
+    h = h + A.cross_attn_apply(lp["cross"], cfg,
+                               apply_norm(h, lp["cross_norm"], "layernorm"),
+                               memory, use_pallas=use_pallas)
+    h = h + gelu_mlp_apply(lp["mlp"], apply_norm(h, lp["mlp_norm"], "layernorm"))
+    return h, nc
+
+
+def decode_stack(cfg, params, tokens, memory, positions, *, caches=None,
+                 cache_max_len=None, use_pallas=False, remat=False):
+    h = embed_lookup(params["embed"], tokens).astype(cfg.jdtype)
+    h = h + _sinusoid(positions, cfg.d_model).astype(h.dtype)
+    h = constrain(h, "dp", None, None)
+
+    def one(h, xs):
+        lp, lc = xs
+        h, nc = _dec_block(cfg, lp, h, memory, positions, cache=lc,
+                           cache_max_len=cache_max_len, use_pallas=use_pallas)
+        return h, nc
+
+    if remat:
+        one = jax.checkpoint(one, policy=jax.checkpoint_policies.nothing_saveable)
+    h, new_caches = jax.lax.scan(one, h, (params["dec_layers"], caches))
+    h = apply_norm(h, params["dec_norm"], "layernorm")
+    return h, new_caches
+
+
+def encdec_loss(cfg: ArchConfig, params, batch, *, use_pallas=False, **_):
+    frames, tokens, labels = batch["frames"], batch["tokens"], batch["labels"]
+    memory = encode(cfg, params, frames, use_pallas=use_pallas, remat=cfg.remat)
+    positions = jnp.arange(tokens.shape[1])[None, :]
+    h, _ = decode_stack(cfg, params, tokens, memory, positions,
+                        use_pallas=use_pallas, remat=cfg.remat)
+    logits = constrain(h @ params["embed"].T, "dp", None, "tp")  # tied head
+    return cross_entropy_loss(logits, labels, batch.get("loss_mask"))
+
+
+def encdec_make_caches(cfg: ArchConfig, batch_size: int, max_len: int, dtype):
+    one = A.make_kv_cache(cfg, batch_size, max_len, dtype)
+    return {
+        "self": jax.tree_util.tree_map(
+            lambda c: jnp.zeros((cfg.n_layers,) + c.shape, c.dtype), one),
+        "memory": jnp.zeros((batch_size, cfg.n_frames, cfg.d_model), dtype),
+    }
+
+
+def encdec_prefill(cfg: ArchConfig, params, batch, *, max_len: int,
+                   use_pallas=False, **_):
+    frames, tokens = batch["frames"], batch["tokens"]
+    memory = encode(cfg, params, frames, use_pallas=use_pallas)
+    positions = jnp.arange(tokens.shape[1])[None, :]
+    h, caches = decode_stack(cfg, params, tokens, memory, positions,
+                             cache_max_len=max_len, use_pallas=use_pallas)
+    logits = constrain(h[:, -1:, :] @ params["embed"].T, "dp", None, "tp")
+    return logits, {"self": caches, "memory": memory}
+
+
+def encdec_decode(cfg: ArchConfig, params, batch, caches, *, use_pallas=False, **_):
+    tokens, positions = batch["tokens"], batch["positions"]
+    h, new_caches = decode_stack(cfg, params, tokens, caches["memory"], positions,
+                                 caches=caches["self"], use_pallas=use_pallas)
+    logits = constrain(h @ params["embed"].T, "dp", None, "tp")
+    return logits, {"self": new_caches, "memory": caches["memory"]}

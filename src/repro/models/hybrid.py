@@ -1,0 +1,151 @@
+"""Zamba2-style hybrid: Mamba2 backbone + a *shared* attention block.
+
+Structure (simplified from Zamba2 [arXiv:2411.15242], noted in DESIGN.md):
+``n_layers`` Mamba2 blocks in G groups of ``attn_every``; after each group
+the shared transformer block (same weights every application, Zamba's
+parameter-sharing trick) runs on ``proj(concat(h, e0))`` where e0 is the
+initial embedding (Zamba's global skip). Each application has its own KV
+cache (weights shared, activations not).
+
+Mamba params are stacked (G, K, ...): the outer group loop is a short python
+unroll (G ~ 9), the inner K layers scan -- keeps HLO compact while letting
+each shared-block application index its own cache slot.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as A
+from repro.models import ssm as S
+from repro.models.config import ArchConfig
+from repro.models.layers import (
+    apply_norm, cross_entropy_loss, dense_init, embed_init, embed_lookup,
+    norm_init, swiglu_init, swiglu_apply,
+)
+from repro.sharding.ctx import constrain
+
+
+def hybrid_init(cfg: ArchConfig, key, dtype=None):
+    dtype = dtype or cfg.jdtype
+    g = cfg.n_layers // cfg.attn_every
+    k = cfg.attn_every
+    keys = jax.random.split(key, cfg.n_layers + 6)
+    blocks = [
+        {"norm": norm_init(cfg.d_model, cfg.norm, dtype),
+         "ssm": S.ssm_init(keys[i], cfg, dtype)}
+        for i in range(cfg.n_layers)
+    ]
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *blocks)
+    # (L, ...) -> (G, K, ...)
+    stacked = jax.tree_util.tree_map(
+        lambda x: x.reshape((g, k) + x.shape[1:]), stacked)
+    shared = {
+        "w_concat": dense_init(keys[-6], 2 * cfg.d_model, cfg.d_model, dtype),
+        "attn_norm": norm_init(cfg.d_model, cfg.norm, dtype),
+        "attn": A.gqa_init(keys[-5], cfg, dtype),
+        "mlp_norm": norm_init(cfg.d_model, cfg.norm, dtype),
+        "mlp": swiglu_init(keys[-4], cfg.d_model, cfg.d_ff, dtype),
+    }
+    return {
+        "embed": embed_init(keys[-3], cfg.vocab_size, cfg.d_model, dtype),
+        "mamba": stacked,
+        "shared": shared,
+        "final_norm": norm_init(cfg.d_model, cfg.norm, dtype),
+        "lm_head": embed_init(keys[-2], cfg.vocab_size, cfg.d_model, dtype).T,
+    }
+
+
+def _mamba_group(cfg, gp, h, *, caches=None, remat=False):
+    def one(h, xs):
+        lp, lc = xs
+        out, nc = S.ssm_apply(lp["ssm"], cfg, apply_norm(h, lp["norm"], cfg.norm),
+                              cache=lc)
+        return h + out, nc
+
+    if remat:
+        one = jax.checkpoint(one, policy=jax.checkpoint_policies.nothing_saveable)
+    return jax.lax.scan(one, h, (gp, caches))
+
+
+def _shared_block(cfg, sp, h, e0, positions, *, cache=None, cache_max_len=None,
+                  use_pallas=False, remat=False):
+    def body(h):
+        x = jnp.concatenate([h, e0], axis=-1) @ sp["w_concat"]
+        a_out, nc = A.gqa_apply(
+            sp["attn"], cfg, apply_norm(x, sp["attn_norm"], cfg.norm), positions,
+            cache=cache, cache_max_len=cache_max_len, use_pallas=use_pallas)
+        h = h + a_out
+        h = h + swiglu_apply(sp["mlp"], apply_norm(h, sp["mlp_norm"], cfg.norm))
+        return h, nc
+
+    if remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    return body(h)
+
+
+def _forward(cfg, params, tokens, positions, *, mamba_caches=None,
+             attn_caches=None, cache_max_len=None, use_pallas=False,
+             remat=False):
+    g = cfg.n_layers // cfg.attn_every
+    h = embed_lookup(params["embed"], tokens).astype(cfg.jdtype)
+    h = constrain(h, "dp", None, None)
+    e0 = h
+    new_mamba, new_attn = [], []
+    for gi in range(g):
+        gp = jax.tree_util.tree_map(lambda x: x[gi], params["mamba"])
+        mc = None if mamba_caches is None else jax.tree_util.tree_map(
+            lambda c: c[gi], mamba_caches)
+        h, nmc = _mamba_group(cfg, gp, h, caches=mc, remat=remat)
+        ac = None if attn_caches is None else jax.tree_util.tree_map(
+            lambda c: c[gi], attn_caches)
+        h, nac = _shared_block(cfg, params["shared"], h, e0, positions,
+                               cache=ac, cache_max_len=cache_max_len,
+                               use_pallas=use_pallas, remat=remat)
+        new_mamba.append(nmc)
+        new_attn.append(nac)
+    h = apply_norm(h, params["final_norm"], cfg.norm)
+    stack = lambda xs: (None if xs[0] is None
+                        else jax.tree_util.tree_map(lambda *y: jnp.stack(y), *xs))
+    return h, stack(new_mamba), stack(new_attn)
+
+
+def hybrid_loss(cfg: ArchConfig, params, batch, *, use_pallas=False, **_):
+    tokens, labels = batch["tokens"], batch["labels"]
+    positions = jnp.arange(tokens.shape[1])[None, :]
+    h, _, _ = _forward(cfg, params, tokens, positions, use_pallas=use_pallas,
+                       remat=cfg.remat)
+    logits = constrain(h @ params["lm_head"], "dp", None, "tp")
+    return cross_entropy_loss(logits, labels, batch.get("loss_mask"))
+
+
+def hybrid_make_caches(cfg: ArchConfig, batch_size: int, max_len: int, dtype):
+    g = cfg.n_layers // cfg.attn_every
+    k = cfg.attn_every
+    ssm_one = S.make_ssm_cache(cfg, batch_size, dtype)
+    mamba = jax.tree_util.tree_map(
+        lambda c: jnp.zeros((g, k) + c.shape, c.dtype), ssm_one)
+    kv_one = A.make_kv_cache(cfg, batch_size, max_len, dtype)
+    attn = jax.tree_util.tree_map(
+        lambda c: jnp.zeros((g,) + c.shape, c.dtype), kv_one)
+    return {"mamba": mamba, "attn": attn}
+
+
+def hybrid_prefill(cfg: ArchConfig, params, batch, *, max_len: int,
+                   use_pallas=False, **_):
+    tokens = batch["tokens"]
+    positions = jnp.arange(tokens.shape[1])[None, :]
+    h, nm, na = _forward(cfg, params, tokens, positions,
+                         cache_max_len=max_len, use_pallas=use_pallas)
+    logits = constrain(h[:, -1:, :] @ params["lm_head"], "dp", None, "tp")
+    return logits, {"mamba": nm, "attn": na}
+
+
+def hybrid_decode(cfg: ArchConfig, params, batch, caches, *, use_pallas=False, **_):
+    tokens, positions = batch["tokens"], batch["positions"]
+    h, nm, na = _forward(cfg, params, tokens, positions,
+                         mamba_caches=caches["mamba"],
+                         attn_caches=caches["attn"], use_pallas=use_pallas)
+    logits = constrain(h @ params["lm_head"], "dp", None, "tp")
+    return logits, {"mamba": nm, "attn": na}

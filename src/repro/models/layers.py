@@ -1,0 +1,125 @@
+"""Shared functional building blocks for the LM architecture stack.
+
+No flax: params are nested dicts of jnp arrays; every module is an
+``init(key, ...) -> params`` plus a pure ``apply`` function. All matmuls cast
+to the config compute dtype (bf16) with fp32 master params handled by the
+caller (train substrate).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_init(key, d_in, d_out, dtype=jnp.float32, scale=None):
+    scale = scale if scale is not None else (d_in ** -0.5)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def rms_norm(x, scale, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    out = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def apply_norm(x, params, kind: str):
+    if kind == "layernorm":
+        return layer_norm(x, params["scale"], params["bias"])
+    return rms_norm(x, params["scale"])
+
+
+def norm_init(d, kind: str, dtype=jnp.float32):
+    p = {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+# -- rotary ------------------------------------------------------------------
+
+
+def rope_freqs(dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def apply_rope(x, positions, *, theta: float = 10000.0, fraction: float = 1.0):
+    """Rotary embedding on the leading ``fraction`` of head dims.
+
+    x: (..., S, H, D); positions: broadcastable to (..., S). Non-interleaved
+    (half-split) convention, fp32 rotation.
+    """
+    d = x.shape[-1]
+    rot = int(d * fraction)
+    rot -= rot % 2
+    if rot == 0:
+        return x
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    freqs = rope_freqs(rot, theta)                          # (rot/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, rot/2)
+    cos = jnp.cos(ang)[..., None, :]                        # (..., S, 1, rot/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x_rot.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return jnp.concatenate([out.astype(x.dtype), x_pass], axis=-1)
+
+
+# -- MLPs ----------------------------------------------------------------------
+
+
+def swiglu_init(key, d_model, d_ff, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d_model, d_ff, dtype),
+        "w_up": dense_init(k2, d_model, d_ff, dtype),
+        "w_down": dense_init(k3, d_ff, d_model, dtype),
+    }
+
+
+def swiglu_apply(p, x):
+    return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+
+
+def gelu_mlp_init(key, d_model, d_ff, dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    return {
+        "w_in": dense_init(k1, d_model, d_ff, dtype),
+        "b_in": jnp.zeros((d_ff,), dtype),
+        "w_out": dense_init(k2, d_ff, d_model, dtype),
+        "b_out": jnp.zeros((d_model,), dtype),
+    }
+
+
+def gelu_mlp_apply(p, x):
+    return jax.nn.gelu(x @ p["w_in"] + p["b_in"], approximate=True) @ p["w_out"] + p["b_out"]
+
+
+# -- embeddings -----------------------------------------------------------------
+
+
+def embed_init(key, vocab, d_model, dtype=jnp.float32):
+    return (jax.random.normal(key, (vocab, d_model), jnp.float32) * 0.02).astype(dtype)
+
+
+def embed_lookup(table, ids):
+    return jnp.take(table, ids, axis=0)
+
+
+def cross_entropy_loss(logits, labels, mask=None):
+    """Token CE with fp32 logsumexp; logits (B, S, V), labels (B, S)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,73 @@
+"""Unified model API: build_model(config) -> Model with init/loss/prefill/decode.
+
+The train_step (optimizer + grad accumulation) lives in launch/steps.py and
+is family-agnostic: it only needs ``loss`` and the batch pytree.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec as ED
+from repro.models import hybrid as HY
+from repro.models import ssm_lm as SL
+from repro.models import transformer as TF
+from repro.models.config import ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    init: Callable[[jax.Array], Any]
+    loss: Callable[..., jax.Array]            # (params, batch) -> scalar
+    prefill: Callable[..., Any]               # (params, batch, max_len) -> (logits, caches)
+    decode: Callable[..., Any]                # (params, batch, caches) -> (logits, caches)
+    make_caches: Callable[..., Any]           # (batch, max_len, dtype) -> caches
+
+
+def build_model(cfg: ArchConfig, *, use_pallas: bool = False) -> Model:
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        return Model(
+            cfg=cfg,
+            init=lambda key: TF.lm_init(cfg, key),
+            loss=lambda p, b: TF.lm_loss(cfg, p, b, use_pallas=use_pallas),
+            prefill=lambda p, b, max_len: TF.lm_prefill(cfg, p, b, max_len=max_len,
+                                                        use_pallas=use_pallas),
+            decode=lambda p, b, c: TF.lm_decode(cfg, p, b, c, use_pallas=use_pallas),
+            make_caches=lambda bs, ml, dt: TF.lm_make_caches(cfg, bs, ml, dt),
+        )
+    if fam == "ssm":
+        return Model(
+            cfg=cfg,
+            init=lambda key: SL.ssm_lm_init(cfg, key),
+            loss=lambda p, b: SL.ssm_lm_loss(cfg, p, b),
+            prefill=lambda p, b, max_len: SL.ssm_lm_prefill(cfg, p, b, max_len=max_len),
+            decode=lambda p, b, c: SL.ssm_lm_decode(cfg, p, b, c),
+            make_caches=lambda bs, ml, dt: SL.ssm_lm_make_caches(cfg, bs, ml, dt),
+        )
+    if fam == "hybrid":
+        return Model(
+            cfg=cfg,
+            init=lambda key: HY.hybrid_init(cfg, key),
+            loss=lambda p, b: HY.hybrid_loss(cfg, p, b, use_pallas=use_pallas),
+            prefill=lambda p, b, max_len: HY.hybrid_prefill(cfg, p, b, max_len=max_len,
+                                                            use_pallas=use_pallas),
+            decode=lambda p, b, c: HY.hybrid_decode(cfg, p, b, c, use_pallas=use_pallas),
+            make_caches=lambda bs, ml, dt: HY.hybrid_make_caches(cfg, bs, ml, dt),
+        )
+    if fam == "encdec":
+        return Model(
+            cfg=cfg,
+            init=lambda key: ED.encdec_init(cfg, key),
+            loss=lambda p, b: ED.encdec_loss(cfg, p, b, use_pallas=use_pallas),
+            prefill=lambda p, b, max_len: ED.encdec_prefill(cfg, p, b, max_len=max_len,
+                                                            use_pallas=use_pallas),
+            decode=lambda p, b, c: ED.encdec_decode(cfg, p, b, c, use_pallas=use_pallas),
+            make_caches=lambda bs, ml, dt: ED.encdec_make_caches(cfg, bs, ml, dt),
+        )
+    raise ValueError(f"unknown family {fam}")

@@ -1,0 +1,133 @@
+"""Mixture-of-Experts FFN with capacity-based gather/scatter dispatch.
+
+TPU-native expert parallelism: experts are sharded on the ``model`` mesh axis
+(EP), tokens on ``data``; GSPMD materializes the all-to-alls at the
+data<->expert boundary. Dispatch avoids the classic GShard ``(G,S,E,C)``
+one-hot tensor (O(S*E*C) memory) by computing *positions within expert
+buffers* via a cumsum and using scatter/gather:
+
+  router -> top-k ids/weights -> position = cumsum(one-hot) - 1
+  buffer (G, E, C, d) <- scatter tokens     (drop if position >= capacity)
+  expert FFN on (G, E, C, d)                (batched einsum over E)
+  out <- gather back, combine with router weights
+
+Shared experts (DeepSeek-V2) run densely on every token.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.ad_checkpoint
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models.layers import dense_init
+from repro.sharding.ctx import constrain
+
+
+def moe_init(key, cfg: ArchConfig, dtype):
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 5)
+    scale = d ** -0.5
+    p = {
+        "router": dense_init(ks[0], d, e, jnp.float32),  # fp32 router
+        "w_gate": (jax.random.normal(ks[1], (e, d, f), jnp.float32) * scale).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (e, d, f), jnp.float32) * scale).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (e, f, d), jnp.float32) * (f ** -0.5)).astype(dtype),
+    }
+    if cfg.n_shared_experts:
+        fs = cfg.moe_d_ff * cfg.n_shared_experts
+        k1, k2, k3 = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "w_gate": dense_init(k1, d, fs, dtype),
+            "w_up": dense_init(k2, d, fs, dtype),
+            "w_down": dense_init(k3, fs, d, dtype),
+        }
+    return p
+
+
+def _capacity(tokens_per_group: int, cfg: ArchConfig) -> int:
+    c = int(tokens_per_group * cfg.top_k * cfg.capacity_factor / cfg.n_experts)
+    c = max(c, cfg.top_k, 4)
+    return min(c, tokens_per_group)
+
+
+def moe_apply(p, cfg: ArchConfig, x, *, capacity: Optional[int] = None):
+    """x: (B, S, d) -> (B, S, d), plus aux load-balancing loss (scalar).
+
+    The batch dim is the dispatch group (per-device groups under GSPMD).
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    c = capacity or _capacity(s, cfg)
+
+    logits = (x.astype(jnp.float32) @ p["router"])           # (B, S, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_ids = jax.lax.top_k(probs, k)                  # (B, S, K)
+    if cfg.norm_topk_prob:
+        top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # aux loss (Switch-style): E * sum_e f_e * p_e
+    me = jnp.mean(probs, axis=(0, 1))                         # (E,)
+    one_hot = jax.nn.one_hot(top_ids, e, dtype=jnp.float32)   # (B, S, K, E)
+    fe = jnp.mean(one_hot.sum(2), axis=(0, 1))                # fraction routed
+    aux = e * jnp.sum(me * fe) / k
+
+    # position of each (token, k) within its expert's buffer, per group
+    flat_assign = one_hot.reshape(b, s * k, e)
+    pos = jnp.cumsum(flat_assign, axis=1) - flat_assign       # count before me
+    pos = jnp.sum(pos * flat_assign, axis=-1).reshape(b, s, k)  # (B, S, K)
+    keep = (pos < c)
+    pos_c = jnp.minimum(pos, c - 1).astype(jnp.int32)
+
+    # scatter tokens into (B, E, C, d)
+    xk = jnp.broadcast_to(x[:, :, None, :], (b, s, k, d)).reshape(b, s * k, d)
+    ids_f = top_ids.reshape(b, s * k)
+    pos_f = pos_c.reshape(b, s * k)
+    keep_f = keep.reshape(b, s * k)
+    xk = jnp.where(keep_f[..., None], xk, 0.0)
+
+    def scatter_group(xg, ig, pg):
+        buf = jnp.zeros((e, c, d), xg.dtype)
+        return buf.at[ig, pg].add(xg)
+
+    # EP sharding (hillclimb iterations 1-2, EXPERIMENTS.md section Perf):
+    # scatter into a *group-sharded, full-E* buffer -- indices and updates
+    # are dp-local, so the scatter emits no collectives -- then slice to the
+    # (groups on dp) x (experts on tp) 2D layout (a free reshard on the
+    # (data, model) mesh: every (group, expert) pair has one owner).
+    from repro.sharding import specs as _specs
+    ep = _specs._PARAM_MODE != "decode"
+    # decode (1 token/seq): tiny buffers -- GSPMD's replicated schedule with
+    # f-sharded experts measured best; constraints only help the EP regime.
+    maybe = (lambda t, *dims: constrain(t, *dims)) if ep else (lambda t, *dims: t)
+    xk = maybe(xk, "dp", None, None)
+    buf = jax.vmap(scatter_group)(xk, ids_f, pos_f)           # (B, E, C, d)
+    buf = maybe(buf, "dp", "tp", None, None)
+
+    # expert FFN (SwiGLU), batched over E
+    gate = jnp.einsum("becd,edf->becf", buf, p["w_gate"])
+    up = jnp.einsum("becd,edf->becf", buf, p["w_up"])
+    act = jax.nn.silu(gate) * up
+    out_buf = jnp.einsum("becf,efd->becd", act, p["w_down"])  # (B, E, C, d)
+    out_buf = maybe(out_buf, "dp", "tp", None, None)
+
+    # gather back + weighted combine (single-gather formulation measured
+    # best of three combine variants -- see EXPERIMENTS.md section Perf)
+    def gather_group(ob, ig, pg):
+        return ob[ig, pg]                                     # (S*K, d)
+
+    ytok = jax.vmap(gather_group)(out_buf, ids_f, pos_f)      # (B, S*K, d)
+    ytok = maybe(ytok, "dp", None, None)
+    wk = (top_w.reshape(b, s * k) * keep_f).astype(ytok.dtype)
+    y = (ytok * wk[..., None]).reshape(b, s, k, d).sum(axis=2)
+
+    if cfg.n_shared_experts:
+        sp = p["shared"]
+        y = y + (jax.nn.silu(x @ sp["w_gate"]) * (x @ sp["w_up"])) @ sp["w_down"]
+    # saved under selective remat: the backward reuses the dispatched result
+    # instead of re-running the dispatch collectives (hillclimb iteration 4)
+    y = jax.ad_checkpoint.checkpoint_name(y, "moe_out")
+    return y, aux

@@ -1,0 +1,79 @@
+"""Mamba2 (attention-free) language model: embed -> scanned SSD blocks -> head."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ssm as S
+from repro.models.config import ArchConfig
+from repro.models.layers import cross_entropy_loss, embed_init, embed_lookup, norm_init, apply_norm
+from repro.sharding.ctx import constrain
+
+
+def ssm_lm_init(cfg: ArchConfig, key, dtype=None):
+    dtype = dtype or cfg.jdtype
+    keys = jax.random.split(key, cfg.n_layers + 3)
+    blocks = [
+        {"norm": norm_init(cfg.d_model, cfg.norm, dtype),
+         "ssm": S.ssm_init(keys[i], cfg, dtype)}
+        for i in range(cfg.n_layers)
+    ]
+    layers = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *blocks)
+    return {
+        "embed": embed_init(keys[-3], cfg.vocab_size, cfg.d_model, dtype),
+        "layers": layers,
+        "final_norm": norm_init(cfg.d_model, cfg.norm, dtype),
+        "lm_head": embed_init(keys[-2], cfg.vocab_size, cfg.d_model, dtype).T,
+    }
+
+
+def _scan_blocks(cfg, params, h, *, caches=None, remat=False):
+    def one(h, xs):
+        lp, lc = xs
+        out, nc = S.ssm_apply(lp["ssm"], cfg, apply_norm(h, lp["norm"], cfg.norm),
+                              cache=lc)
+        return h + out, nc
+
+    if remat:
+        one = jax.checkpoint(one, policy=jax.checkpoint_policies.nothing_saveable)
+    return jax.lax.scan(one, h, (params["layers"], caches))
+
+
+def ssm_lm_loss(cfg: ArchConfig, params, batch, **_):
+    tokens, labels = batch["tokens"], batch["labels"]
+    h = embed_lookup(params["embed"], tokens).astype(cfg.jdtype)
+    h = constrain(h, "dp", None, None)
+    h, _ = _scan_blocks(cfg, params, h, remat=cfg.remat)
+    h = apply_norm(h, params["final_norm"], cfg.norm)
+    logits = constrain(h @ params["lm_head"], "dp", None, "tp")
+    return cross_entropy_loss(logits, labels, batch.get("loss_mask"))
+
+
+def ssm_lm_make_caches(cfg: ArchConfig, batch_size: int, max_len: int, dtype):
+    one = S.make_ssm_cache(cfg, batch_size, dtype)
+    return jax.tree_util.tree_map(
+        lambda c: jnp.zeros((cfg.n_layers,) + c.shape, c.dtype), one)
+
+
+def ssm_lm_prefill(cfg: ArchConfig, params, batch, *, max_len: int, **_):
+    """SSM 'prefill' = run the sequence chunked, keep final recurrent states.
+
+    (cache=None routes ssm_apply through the SSD path, which returns the
+    final (B, H, P, N) state + conv tail -- exactly the decode cache.)"""
+    tokens = batch["tokens"]
+    h = embed_lookup(params["embed"], tokens).astype(cfg.jdtype)
+    h = constrain(h, "dp", None, None)
+    h, new_caches = _scan_blocks(cfg, params, h, caches=None)
+    h = apply_norm(h[:, -1:, :], params["final_norm"], cfg.norm)
+    logits = constrain(h @ params["lm_head"], "dp", None, "tp")
+    return logits, new_caches
+
+
+def ssm_lm_decode(cfg: ArchConfig, params, batch, caches, **_):
+    tokens = batch["tokens"]
+    h = embed_lookup(params["embed"], tokens).astype(cfg.jdtype)
+    h, new_caches = _scan_blocks(cfg, params, h, caches=caches)
+    h = apply_norm(h, params["final_norm"], cfg.norm)
+    logits = constrain(h @ params["lm_head"], "dp", None, "tp")
+    return logits, new_caches

@@ -1,0 +1,236 @@
+"""Decoder-only transformer assembly (dense / MoE / VLM families).
+
+Layer-stacked params + ``lax.scan`` over layers (keeps HLO size O(1) in
+depth) with ``jax.checkpoint`` remat per layer for training. DeepSeek-style
+``first_dense_layers`` are held out of the scan as prefix layers.
+
+Three entry points per model: ``loss`` (teacher-forced CE), ``prefill``
+(build KV caches + last-position logits), ``decode`` (single-token step).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as A
+from repro.models import moe as MOE
+from repro.models.config import ArchConfig
+from repro.models.layers import (
+    apply_norm,
+    cross_entropy_loss,
+    embed_init,
+    embed_lookup,
+    norm_init,
+    swiglu_init,
+    swiglu_apply,
+)
+from repro.sharding.ctx import constrain
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _layer_init(key, cfg: ArchConfig, *, moe_layer: bool, d_ff: int, dtype):
+    k_attn, k_mlp = jax.random.split(key)
+    attn = (A.mla_init if cfg.use_mla else A.gqa_init)(k_attn, cfg, dtype)
+    p = {
+        "attn_norm": norm_init(cfg.d_model, cfg.norm, dtype),
+        "attn": attn,
+        "mlp_norm": norm_init(cfg.d_model, cfg.norm, dtype),
+    }
+    if moe_layer:
+        p["moe"] = MOE.moe_init(k_mlp, cfg, dtype)
+    else:
+        p["mlp"] = swiglu_init(k_mlp, cfg.d_model, d_ff, dtype)
+    return p
+
+
+def lm_init(cfg: ArchConfig, key, dtype=None):
+    dtype = dtype or cfg.jdtype
+    n_prefix = cfg.first_dense_layers if cfg.family == "moe" else 0
+    n_scan = cfg.n_layers - n_prefix
+    keys = jax.random.split(key, cfg.n_layers + 3)
+
+    prefix = [
+        _layer_init(keys[i], cfg, moe_layer=False,
+                    d_ff=(cfg.first_dense_d_ff or cfg.d_ff), dtype=dtype)
+        for i in range(n_prefix)
+    ]
+    stacked = [
+        _layer_init(keys[n_prefix + i], cfg,
+                    moe_layer=(cfg.family == "moe"), d_ff=cfg.d_ff, dtype=dtype)
+        for i in range(n_scan)
+    ]
+    layers = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *stacked)
+
+    params = {
+        "embed": embed_init(keys[-3], cfg.vocab_size, cfg.d_model, dtype),
+        "layers": layers,
+        "final_norm": norm_init(cfg.d_model, cfg.norm, dtype),
+    }
+    if prefix:
+        params["prefix_layers"] = prefix
+    if not cfg.tie_embeddings:
+        params["lm_head"] = embed_init(keys[-2], cfg.vocab_size, cfg.d_model, dtype).T
+    return params
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+
+def _block(cfg: ArchConfig, p, h, positions, *, moe_layer: bool,
+           cache=None, cache_max_len=None, use_pallas=False):
+    """Pre-norm residual block. Returns (h, new_cache, aux_loss)."""
+    attn_fn = A.mla_apply if cfg.use_mla else A.gqa_apply
+    a_out, new_cache = attn_fn(
+        p["attn"], cfg, apply_norm(h, p["attn_norm"], cfg.norm), positions,
+        cache=cache, cache_max_len=cache_max_len, use_pallas=use_pallas,
+    )
+    h = h + cfg.residual_multiplier * a_out
+    x = apply_norm(h, p["mlp_norm"], cfg.norm)
+    if moe_layer:
+        m_out, aux = MOE.moe_apply(p["moe"], cfg, x)
+    else:
+        m_out, aux = swiglu_apply(p["mlp"], x), jnp.zeros((), jnp.float32)
+    h = h + cfg.residual_multiplier * m_out
+    return h, new_cache, aux
+
+
+def _scan_layers(cfg: ArchConfig, params, h, positions, *, caches=None,
+                 cache_max_len=None, remat=False, use_pallas=False):
+    """Scan the stacked layers. caches: stacked (L, ...) pytree or None.
+    Returns (h, new_caches, aux_sum)."""
+    moe_layer = cfg.family == "moe"
+
+    def one_layer(h, layer_in):
+        lp, lc = layer_in
+        h, nc, aux = _block(cfg, lp, h, positions, moe_layer=moe_layer,
+                            cache=lc, cache_max_len=cache_max_len,
+                            use_pallas=use_pallas)
+        return h, (nc, aux)
+
+    if remat:
+        policy = (jax.checkpoint_policies.save_only_these_names("moe_out")
+                  if moe_layer else jax.checkpoint_policies.nothing_saveable)
+        one_layer = jax.checkpoint(one_layer, policy=policy)
+
+    h, (new_caches, auxs) = jax.lax.scan(
+        one_layer, h, (params["layers"], caches))
+    return h, new_caches, jnp.sum(auxs)
+
+
+def _embed_h(cfg, params, tokens):
+    h = embed_lookup(params["embed"], tokens).astype(cfg.jdtype)
+    h = h * cfg.embedding_multiplier
+    return constrain(h, "dp", None, None)
+
+
+def _logits(cfg, params, h):
+    h = apply_norm(h, params["final_norm"], cfg.norm)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = h @ head
+    logits = logits / cfg.logits_scaling
+    return constrain(logits, "dp", None, "tp")
+
+
+def _run_prefix(cfg, params, h, positions, *, caches=None, cache_max_len=None,
+                use_pallas=False):
+    """DeepSeek first-dense layers (held out of the scan)."""
+    new_caches = []
+    if "prefix_layers" not in params:
+        return h, None
+    for i, lp in enumerate(params["prefix_layers"]):
+        lc = None if caches is None else jax.tree_util.tree_map(lambda c: c[i], caches)
+        h, nc, _ = _block(cfg, lp, h, positions, moe_layer=False,
+                          cache=lc, cache_max_len=cache_max_len,
+                          use_pallas=use_pallas)
+        new_caches.append(nc)
+    if new_caches[0] is None:
+        return h, None
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *new_caches)
+    return h, stacked
+
+
+# ---------------------------------------------------------------------------
+# entry points (dense / moe; vlm adds the patch prefix)
+# ---------------------------------------------------------------------------
+
+
+def lm_loss(cfg: ArchConfig, params, batch, *, use_pallas=False):
+    tokens, labels = batch["tokens"], batch["labels"]
+    mask = batch.get("loss_mask")
+    b, s = tokens.shape
+    h = _embed_h(cfg, params, tokens)
+    if cfg.family == "vlm":
+        img = batch["image_embeds"].astype(cfg.jdtype)      # (B, P, d)
+        h = jnp.concatenate([img, h], axis=1)
+        pad = jnp.zeros((b, img.shape[1]), labels.dtype)
+        labels = jnp.concatenate([pad, labels], axis=1)
+        img_mask = jnp.zeros((b, img.shape[1]), jnp.float32)
+        tok_mask = mask if mask is not None else jnp.ones((b, s), jnp.float32)
+        mask = jnp.concatenate([img_mask, tok_mask], axis=1)
+    positions = jnp.arange(h.shape[1])[None, :]
+    h, _ = _run_prefix(cfg, params, h, positions, use_pallas=use_pallas)
+    h, _, aux = _scan_layers(cfg, params, h, positions, remat=cfg.remat,
+                             use_pallas=use_pallas)
+    logits = _logits(cfg, params, h)
+    ce = cross_entropy_loss(logits, labels, mask)
+    return ce + 0.01 * aux
+
+
+def lm_make_caches(cfg: ArchConfig, batch_size: int, max_len: int, dtype):
+    make = (A.make_mla_cache if cfg.use_mla else A.make_kv_cache)
+    one = make(cfg, batch_size, max_len, dtype)
+    n_prefix = cfg.first_dense_layers if cfg.family == "moe" else 0
+    n_scan = cfg.n_layers - n_prefix
+    stack = lambda n: jax.tree_util.tree_map(
+        lambda c: jnp.broadcast_to(c[None], (n,) + c.shape).copy() if n else None, one)
+    caches = {"layers": jax.tree_util.tree_map(
+        lambda c: jnp.zeros((n_scan,) + c.shape, c.dtype), one)}
+    if n_prefix:
+        caches["prefix"] = jax.tree_util.tree_map(
+            lambda c: jnp.zeros((n_prefix,) + c.shape, c.dtype), one)
+    return caches
+
+
+def lm_prefill(cfg: ArchConfig, params, batch, *, max_len: int, use_pallas=False):
+    """Returns (last-token logits, caches)."""
+    tokens = batch["tokens"]
+    h = _embed_h(cfg, params, tokens)
+    if cfg.family == "vlm":
+        img = batch["image_embeds"].astype(cfg.jdtype)
+        h = jnp.concatenate([img, h], axis=1)
+    positions = jnp.arange(h.shape[1])[None, :]
+    h, pre_caches = _run_prefix(cfg, params, h, positions,
+                                cache_max_len=max_len, use_pallas=use_pallas)
+    h, new_caches, _ = _scan_layers(cfg, params, h, positions,
+                                    cache_max_len=max_len, use_pallas=use_pallas)
+    logits = _logits(cfg, params, h[:, -1:, :])
+    out = {"layers": new_caches}
+    if pre_caches is not None:
+        out["prefix"] = pre_caches
+    return logits, out
+
+
+def lm_decode(cfg: ArchConfig, params, batch, caches, *, use_pallas=False):
+    """One-token step. batch: tokens (B, 1), positions (B, 1) absolute."""
+    tokens, positions = batch["tokens"], batch["positions"]
+    h = _embed_h(cfg, params, tokens)
+    pre_caches = caches.get("prefix")
+    h, new_pre = _run_prefix(cfg, params, h, positions, caches=pre_caches,
+                             use_pallas=use_pallas)
+    h, new_caches, _ = _scan_layers(cfg, params, h, positions,
+                                    caches=caches["layers"],
+                                    use_pallas=use_pallas)
+    logits = _logits(cfg, params, h)
+    out = {"layers": new_caches}
+    if new_pre is not None:
+        out["prefix"] = new_pre
+    return logits, out

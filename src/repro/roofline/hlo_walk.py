@@ -1,0 +1,309 @@
+"""Loop-aware HLO-text walker: per-device HBM traffic + collective bytes.
+
+The compiled (post-SPMD, post-optimization) HLO module is parsed into
+computations; op costs are scaled by the product of enclosing ``while`` trip
+counts (XLA annotates ``backend_config={"known_trip_count":{"n":...}}`` on
+while ops -- every lax.scan has one).
+
+Traffic model (matches HloCostAnalysis' per-op accounting, which fusions
+make fusion-boundary-accurate): for every non-trivial op,
+``bytes = output bytes + sum(operand bytes)``. Interiors of fusion /
+reduce-apply computations are skipped (their traffic is the fusion op's
+boundary). Collective bytes: output bytes of all-reduce / all-gather /
+reduce-scatter / all-to-all / collective-permute (async ``-done`` skipped).
+"""
+
+from __future__ import annotations
+
+import json
+import re
+from typing import Dict, List, Optional, Set, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*->.*\{\s*$")
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLED = re.compile(
+    r"(?:body|condition|to_apply|calls|true_computation|false_computation)="
+    r"%?([\w\.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+
+_SKIP_OPS = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+             "after-all", "partition-id", "replica-id", "iota"}
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+class _Op:
+    __slots__ = ("name", "out_type", "opcode", "rest")
+
+    def __init__(self, name, out_type, opcode, rest):
+        self.name, self.out_type, self.opcode, self.rest = name, out_type, opcode, rest
+
+
+_TRANSPARENT = {"convert", "copy", "bitcast", "reshape", "transpose",
+                "broadcast"}
+
+
+def _fusion_bytes(op: _Op, body: List[_Op]) -> float:
+    """Body-based fusion traffic: each parameter is read once -- fully,
+    unless every (transitively, through convert/copy/bitcast chains)
+    consumer is a dynamic-slice (bill the slices) or a dynamic-update-slice
+    *buffer* operand (in-place alias, 0); writes are DUS update regions plus
+    root outputs that are not DUS-aliased carries. Converts around in-place
+    cache updates are CPU-backend artifacts that a TPU build fuses away, so
+    they are traced through rather than billed.
+    """
+    name2op = {o.name: o for o in body}
+    consumers: Dict[str, List[_Op]] = {o.name: [] for o in body}
+    operands: Dict[str, List[str]] = {}
+    for o in body:
+        refs = re.findall(r"%([\w\.\-]+)", o.rest.split(")")[0])
+        operands[o.name] = refs
+        for r in refs:
+            if r in consumers:
+                consumers[r].append(o)
+
+    def classify_reads(pname: str) -> float:
+        """Bytes read from parameter ``pname`` (transitive)."""
+        total = 0.0
+        full = _type_bytes(name2op[pname].out_type)
+        seen = set()
+        stack = [(pname, pname)]
+        while stack:
+            src, cur = stack.pop()
+            for c in consumers.get(cur, ()):
+                key = (c.name, cur)
+                if key in seen:
+                    continue
+                seen.add(key)
+                if c.opcode == "dynamic-slice":
+                    total += _type_bytes(c.out_type)
+                elif (c.opcode == "dynamic-update-slice"
+                      and operands[c.name] and operands[c.name][0] == cur):
+                    pass  # in-place buffer alias
+                elif c.opcode in _TRANSPARENT:
+                    stack.append((src, c.name))
+                else:
+                    return full  # genuinely consumed in full
+        return min(total, full)
+
+    reads = 0.0
+    for o in body:
+        if o.opcode == "parameter" and consumers.get(o.name):
+            reads += classify_reads(o.name)
+
+    writes = 0.0
+    dus_names = set()
+    for o in body:
+        if o.opcode == "dynamic-update-slice":
+            refs = operands[o.name]
+            if len(refs) > 1 and refs[1] in name2op:
+                writes += _type_bytes(name2op[refs[1]].out_type)
+            elif len(refs) > 1:
+                writes += _type_bytes(o.out_type) // max(len(body), 1)
+            dus_names.add(o.name)
+
+    def resolves_to_dus(name: str) -> bool:
+        cur = name
+        for _ in range(16):
+            if cur in dus_names:
+                return True
+            o = name2op.get(cur)
+            if o is None or o.opcode not in _TRANSPARENT:
+                return False
+            refs = operands.get(cur, ())
+            if not refs:
+                return False
+            cur = refs[0]
+        return False
+
+    root = body[-1]
+    root_elems = ([r for r in operands.get(root.name, ())]
+                  if root.opcode == "tuple" else [root.name])
+    for el in root_elems:
+        if not resolves_to_dus(el) and el in name2op:
+            writes += _type_bytes(name2op[el].out_type)
+    return reads + writes
+
+
+def _parse_computations(text: str) -> Dict[str, List[_Op]]:
+    comps: Dict[str, List[_Op]] = {}
+    entry: Optional[str] = None
+    cur: Optional[str] = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_HDR.match(line.strip()) if "{" in line else None
+            if line.strip().startswith(("ENTRY", "%")) and "->" in line and line.rstrip().endswith("{"):
+                m = _COMP_HDR.match(line.strip())
+                if m:
+                    cur = m.group(2)
+                    comps[cur] = []
+                    if m.group(1):
+                        entry = cur
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if m:
+            comps[cur].append(_Op(m.group(1), m.group(2), m.group(3), m.group(4)))
+    comps["__entry__"] = comps.get(entry, [])
+    comps["__entry_name__"] = entry  # type: ignore[assignment]
+    return comps
+
+
+def analyze_hlo(text: str) -> Dict[str, float]:
+    comps = _parse_computations(text)
+    entry = comps.pop("__entry_name__")
+    comps.pop("__entry__")
+
+    # classify sub-computations whose interiors are already accounted at the
+    # caller's boundary (fusion bodies, reduce apply fns, ...)
+    boundary_only: Set[str] = set()
+    called_by_while: Dict[str, int] = {}
+    branch_calls: Dict[str, List[str]] = {}
+    for cname, ops in comps.items():
+        for op in ops:
+            called = _CALLED.findall(op.rest) + [
+                c.strip().lstrip("%") for m in _BRANCHES.findall(op.rest)
+                for c in m.split(",") if c.strip()]
+            if op.opcode == "while":
+                trip = 1
+                mt = _TRIP_RE.search(op.rest)
+                if mt:
+                    trip = int(mt.group(1))
+                for sub in called:
+                    called_by_while[sub] = trip
+            elif op.opcode in ("fusion", "reduce", "reduce-window", "scatter",
+                               "select-and-scatter", "sort", "map", "all-reduce",
+                               "reduce-scatter"):
+                boundary_only.update(called)
+            else:  # call / conditional
+                branch_calls.setdefault(cname, []).extend(called)
+
+    # multiplicity propagation
+    mult: Dict[str, float] = {entry: 1.0}
+    changed = True
+    guard = 0
+    while changed and guard < 100:
+        changed = False
+        guard += 1
+        for cname, ops in comps.items():
+            m = mult.get(cname)
+            if m is None:
+                continue
+            for op in ops:
+                called = _CALLED.findall(op.rest) + [
+                    c.strip().lstrip("%") for mm in _BRANCHES.findall(op.rest)
+                    for c in mm.split(",") if c.strip()]
+                if op.opcode == "while":
+                    trip = 1
+                    mt = _TRIP_RE.search(op.rest)
+                    if mt:
+                        trip = int(mt.group(1))
+                    for sub in called:
+                        new = m * trip
+                        if mult.get(sub, 0) < new:
+                            mult[sub] = new
+                            changed = True
+                elif op.opcode == "fusion" or op.opcode in ("reduce", "scatter"):
+                    continue
+                else:
+                    for sub in called:
+                        new = m
+                        if mult.get(sub, 0) < new:
+                            mult[sub] = new
+                            changed = True
+
+    # slice-touching ops: count only the moved region (mirrors
+    # HloCostAnalysis' optimized handling; naive operand+output accounting
+    # would bill a 6 GB loop carry on every iteration of a scan).
+    all_ops = {c: {op.name: op for op in ops} for c, ops in comps.items()}
+
+    def op_bytes(op: _Op, types, cname) -> float:
+        def operand_refs():
+            arglist = op.rest.split(")")[0]
+            return [r for r in re.findall(r"%([\w\.\-]+)", arglist)]
+
+        if op.opcode in ("while", "conditional", "call", "tuple-select"):
+            return 0.0  # control flow: buffers alias through
+        if op.opcode == "dynamic-update-slice":
+            refs = operand_refs()
+            upd = _type_bytes(types.get(refs[1], "")) if len(refs) > 1 else 0
+            return 2.0 * upd
+        if op.opcode == "dynamic-slice":
+            return 2.0 * _type_bytes(op.out_type)
+        if op.opcode == "gather":
+            refs = operand_refs()
+            idx = _type_bytes(types.get(refs[1], "")) if len(refs) > 1 else 0
+            return 2.0 * _type_bytes(op.out_type) + idx
+        if op.opcode == "scatter":
+            refs = operand_refs()
+            upd = _type_bytes(types.get(refs[-1], "")) if refs else 0
+            return 3.0 * upd
+        if op.opcode == "fusion":
+            called = _CALLED.findall(op.rest)
+            body = comps.get(called[0], []) if called else []
+            if body:
+                return _fusion_bytes(op, body)
+        out_b = _type_bytes(op.out_type)
+        opnd_b = sum(_type_bytes(types.get(r, "")) for r in operand_refs())
+        return out_b + opnd_b
+
+    bytes_total = 0.0
+    coll_total = 0.0
+    coll_by_kind: Dict[str, float] = {}
+    bytes_by_dtype: Dict[str, float] = {}
+    rows = []
+    for cname, ops in comps.items():
+        if cname in boundary_only:
+            continue
+        m = mult.get(cname)
+        if m is None:
+            continue  # unreachable (fusion interiors etc.)
+        types = {op.name: op.out_type for op in ops}
+        for op in ops:
+            if op.opcode in _SKIP_OPS:
+                continue
+            b = m * op_bytes(op, types, cname)
+            bytes_total += b
+            dt = op.out_type.split("[")[0].strip("(")
+            bytes_by_dtype[dt] = bytes_by_dtype.get(dt, 0.0) + b
+            rows.append((b, op.opcode, op.out_type[:80], m, cname[:40]))
+            base = op.opcode.replace("-start", "").replace("-done", "")
+            if base in _COLLECTIVES and not op.opcode.endswith("-done"):
+                out_b = _type_bytes(op.out_type)
+                coll_total += m * out_b
+                coll_by_kind[base] = coll_by_kind.get(base, 0.0) + m * out_b
+    rows.sort(key=lambda r: -r[0])
+    return {
+        "bytes_per_device": bytes_total,
+        "collective_bytes_per_device": coll_total,
+        "collective_by_kind": coll_by_kind,
+        "bytes_by_dtype": bytes_by_dtype,
+        "top_bytes": [
+            {"bytes": r[0], "opcode": r[1], "type": r[2], "mult": r[3],
+             "computation": r[4]} for r in rows[:20]],
+    }

@@ -1,0 +1,68 @@
+"""Activation-sharding context: lets model code place logical constraints
+("dp", "tp", None) without knowing the mesh, and no-op outside pjit.
+
+The launcher installs a context mapping logical axes to mesh axes
+(dp -> ("pod", "data") on the multi-pod mesh); smoke tests on one device run
+with no context and every ``constrain`` is the identity.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+Dim = Union[None, str, Tuple[str, ...]]
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh: Mesh, *, dp, tp):
+    """dp/tp: mesh axis name or tuple of names for the logical axes."""
+    prev = getattr(_state, "ctx", None)
+    _state.ctx = {"mesh": mesh, "dp": dp, "tp": tp}
+    try:
+        yield
+    finally:
+        _state.ctx = prev
+
+
+def current():
+    return getattr(_state, "ctx", None)
+
+
+def logical_to_spec(dims: Sequence[Dim]) -> Optional[P]:
+    ctx = current()
+    if ctx is None:
+        return None
+    out = []
+    for d in dims:
+        if d is None:
+            out.append(None)
+        elif isinstance(d, tuple):
+            axes = []
+            for name in d:
+                ax = ctx.get(name, name)
+                if ax is None:
+                    continue
+                axes.extend(ax if isinstance(ax, tuple) else (ax,))
+            out.append(tuple(axes) if axes else None)
+        else:
+            ax = ctx.get(d, d)
+            out.append(ax)
+    return P(*out)
+
+
+def constrain(x, *dims: Dim):
+    """with_sharding_constraint with logical dims; identity w/o context."""
+    ctx = current()
+    if ctx is None:
+        return x
+    spec = logical_to_spec(dims)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx["mesh"], spec)
+    )

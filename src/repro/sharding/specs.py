@@ -1,0 +1,227 @@
+"""PartitionSpec rules: parameters, batches, optimizer state, caches.
+
+Strategy (DESIGN.md section 6):
+* TP on ``model``: attention q/o heads, FFN hidden, vocab, MoE experts (EP),
+  MLA latent, zamba shared-block internals.
+* FSDP on ``data`` (x ``pod``): the non-TP dim of every large matrix.
+* DP: batch dims on ``data`` (x ``pod``).
+* Sequence sharding: decode KV caches shard the sequence axis on ``model``
+  (GQA kv-head counts {2,4,8} don't divide 16); MLA caches shard the latent
+  dim; SSM state caches shard heads.
+* ES-RNN per-series params: sharded on ``data`` -- gradients are device-local
+  (the paper's technique as a distribution property).
+
+Rules are name+context based over pytree paths; stacked layer dims (leading
+L or (G, K)) get None prepended automatically.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def axes_for(mesh: Mesh):
+    names = mesh.axis_names
+    dp = tuple(n for n in names if n in ("pod", "data"))
+    return {"dp": dp if len(dp) > 1 else dp[0], "tp": "model"}
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    out = []
+    for e in path:
+        k = getattr(e, "key", None)
+        if k is None:
+            k = getattr(e, "name", None)
+        if k is None:
+            idx = getattr(e, "idx", None)
+            k = f"[{idx}]" if idx is not None else str(e)
+        out.append(str(k))
+    return tuple(out)
+
+
+# weight-name classes (trailing-2D rules)
+_OUT_TP = {"wq", "wk", "wv", "w_gate", "w_up", "w_in"}      # (d_in, out): out on tp
+_IN_TP = {"wo", "w_down", "w_out"}                          # (in, d_out): in on tp
+_EMBED = {"embed"}
+_HEAD = {"lm_head"}
+
+
+def param_spec(path, leaf, axes) -> P:
+    names = _path_names(path)
+    name = names[-1]
+    ndim = len(leaf.shape)
+    dp, tp = axes["dp"], axes["tp"]
+    in_ssm = "ssm" in names or name in ("conv_w", "conv_b", "a_log", "dt_bias",
+                                        "d_skip", "out_norm")
+    # expert-stacked weights: trailing (E, a, b); shared experts are plain
+    # dense mats. (Leading layer-stack dims get None prepended below.)
+    in_moe = ("moe" in names and "shared" not in names
+              and name in ("w_gate", "w_up", "w_down") and ndim >= 3)
+
+    def base() -> Tuple:
+        if name in _EMBED:
+            return (tp, dp)
+        if name in _HEAD:
+            return (dp, tp)
+        if in_moe:  # (E, a, b) expert-stacked
+            if _PARAM_MODE == "decode":
+                return (None, dp, tp) if name in ("w_gate", "w_up") else (None, tp, dp)
+            return (tp, dp, None)
+        if name == "router":
+            return (dp, None)
+        if in_ssm:
+            if name == "w_in":
+                return (dp, None)      # mixed z/x/B/C/dt out dim: keep whole
+            if name == "w_out":
+                return (None, dp)
+            if name == "conv_w":
+                return (None, None)
+            return tuple([None] * ndim)
+        if name == "w_dkv":             # MLA latent down-proj (small)
+            return (dp, None)
+        if name in ("w_uk", "w_uv"):    # MLA up-proj: heads on tp
+            return (None, tp)
+        if name == "w_concat":          # zamba concat proj
+            return (dp, tp)
+        if name in _OUT_TP:
+            return (dp, tp)
+        if name in _IN_TP:
+            return (tp, dp)
+        return tuple([None] * ndim)
+
+    spec = base()
+    # prepend None for stacked layer dims
+    if len(spec) < ndim:
+        spec = tuple([None] * (ndim - len(spec))) + spec
+    elif len(spec) > ndim:
+        spec = spec[-ndim:]
+    # divisibility guard: drop axes that don't divide the dim
+    mesh_sizes = _mesh_axis_sizes()
+    fixed = []
+    for dim, ax in zip(leaf.shape, spec):
+        if ax is None:
+            fixed.append(None)
+            continue
+        size = int(np.prod([mesh_sizes.get(a, 1) for a in (ax if isinstance(ax, tuple) else (ax,))]))
+        fixed.append(ax if size and dim % size == 0 else None)
+    return P(*fixed)
+
+
+_MESH: Optional[Mesh] = None
+_PARAM_MODE = "train"
+
+
+def set_mesh(mesh: Mesh):
+    global _MESH
+    _MESH = mesh
+
+
+def set_param_mode(mode: str):
+    """"train"/"prefill": experts sharded on model (EP -- best for large
+    token counts). "decode": experts replicated, FFN hidden sharded (1-token
+    steps would otherwise gather expert weights every layer)."""
+    global _PARAM_MODE
+    _PARAM_MODE = mode
+
+
+def _mesh_axis_sizes():
+    if _MESH is None:
+        return {}
+    return dict(zip(_MESH.axis_names, _MESH.devices.shape))
+
+
+def param_shardings(mesh: Mesh, params_abs) -> Any:
+    """Pytree of NamedSharding matching ``params_abs`` (abstract pytree)."""
+    set_mesh(mesh)
+    axes = axes_for(mesh)
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, param_spec(path, leaf, axes)),
+        params_abs,
+    )
+
+
+# -- batches / caches --------------------------------------------------------
+
+
+def dp_dim(mesh: Mesh, batch: int):
+    """dp axis tuple if it divides the batch, else None (tiny-batch decode)."""
+    axes = axes_for(mesh)
+    dp = axes["dp"]
+    names = dp if isinstance(dp, tuple) else (dp,)
+    size = int(np.prod([dict(zip(mesh.axis_names, mesh.devices.shape))[n] for n in names]))
+    return dp if batch % size == 0 else None
+
+
+def batch_spec(mesh: Mesh, leaf_ndim: int, batch: int) -> P:
+    dims = [dp_dim(mesh, batch)] + [None] * (leaf_ndim - 1)
+    return P(*dims)
+
+
+def cache_spec(mesh: Mesh, path, leaf, batch: int) -> P:
+    """Cache sharding by leaf shape heuristics (see module docstring)."""
+    names = _path_names(path)
+    name = names[-1] if names else ""
+    dpd = dp_dim(mesh, batch)
+    tp = "model"
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    tp_size = sizes.get("model", 1)
+    shape = leaf.shape
+    nd = len(shape)
+
+    if nd == 0:  # length scalars
+        return P()
+    if nd == 1:  # stacked length (L,)
+        return P(None)
+
+    # identify batch dim: first dim equal to batch after any leading stack dims
+    spec = [None] * nd
+    b_idx = None
+    for i, d in enumerate(shape):
+        if d == batch:
+            b_idx = i
+            break
+    if b_idx is not None and dpd is not None:
+        spec[b_idx] = dpd
+
+    if name in ("k", "v") and nd >= 4:            # (..., B, S, Hkv, hd)
+        s_idx, h_idx = nd - 3, nd - 2
+        if shape[h_idx] % tp_size == 0:
+            spec[h_idx] = tp
+        elif shape[s_idx] % tp_size == 0:
+            spec[s_idx] = tp
+    elif name in ("c_kv", "k_rope") and nd >= 3:  # (..., B, S, r)
+        # shard the *sequence*: absorbed-MLA decode then only all-reduces
+        # per-step softmax stats + the tiny (B,1,H,r) context partial sums
+        # (hillclimb: latent-dim sharding all-reduced full (B,H,S) logits)
+        if shape[-2] % tp_size == 0:
+            spec[-2] = tp
+        elif shape[-1] % tp_size == 0:
+            spec[-1] = tp
+    elif name == "state" and nd >= 4:             # (..., B, H, P, N)
+        h_idx = nd - 3
+        if shape[h_idx] % tp_size == 0:
+            spec[h_idx] = tp
+    elif name == "conv" and nd >= 3:              # (..., B, K-1, conv_dim)
+        if shape[-1] % tp_size == 0:
+            spec[-1] = tp
+    elif name == "memory" and nd == 3:            # (B, M, d) encoder states
+        pass
+    return P(*spec)
+
+
+def cache_shardings(mesh: Mesh, caches_abs, batch: int):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, cache_spec(mesh, path, leaf, batch)),
+        caches_abs,
+    )
+
+
+def batch_shardings(mesh: Mesh, batch_abs, batch: int):
+    return jax.tree_util.tree_map(
+        lambda leaf: NamedSharding(mesh, batch_spec(mesh, len(leaf.shape), batch)),
+        batch_abs,
+    )

@@ -1,0 +1,125 @@
+"""Adam optimizer with parameter groups, built from scratch (no optax here).
+
+ES-RNN trains two kinds of parameters jointly (paper section 3.2: "the RNN
+and the classical Holt-Winters parameters are jointly trained"), with the
+per-series statistical parameters on a (much) higher learning rate than the
+shared RNN weights -- Smyl's setup. We implement this as *parameter groups*:
+a label function maps each pytree path to a group name, each group has its
+own lr/schedule multipliers.
+
+Also provides: global-norm gradient clipping, cosine/exponential decay
+schedules, and AdamW decoupled weight decay for the LM stack.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamConfig:
+    lr: float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    clip_norm: Optional[float] = None
+    # group name -> lr multiplier (group "default" always exists)
+    group_lr: Optional[Dict[str, float]] = None
+    schedule: str = "constant"           # constant | cosine | exp
+    total_steps: int = 1000
+    warmup_steps: int = 0
+    min_lr_frac: float = 0.1
+
+
+def _schedule_factor(cfg: AdamConfig, step):
+    step_f = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, (step_f + 1.0) / jnp.maximum(cfg.warmup_steps, 1))
+    if cfg.schedule == "cosine":
+        t = jnp.clip(step_f / max(cfg.total_steps, 1), 0.0, 1.0)
+        base = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    elif cfg.schedule == "exp":
+        t = step_f / max(cfg.total_steps, 1)
+        base = jnp.power(cfg.min_lr_frac, t)
+    else:
+        base = jnp.ones(())
+    return base * (warm if cfg.warmup_steps else 1.0)
+
+
+def adam_init(params):
+    zeros = lambda p: jax.tree_util.tree_map(lambda x: jnp.zeros_like(x, dtype=jnp.float32), p)
+    return {"mu": zeros(params), "nu": zeros(params), "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree):
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adam_update(
+    grads,
+    opt_state,
+    params,
+    cfg: AdamConfig,
+    *,
+    group_fn: Optional[Callable[[tuple], str]] = None,
+):
+    """One AdamW step. group_fn maps tree path -> group name for group lrs."""
+    step = opt_state["step"] + 1
+    sched = _schedule_factor(cfg, step)
+
+    if cfg.clip_norm is not None:
+        norm = global_norm(grads)
+        scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(norm, 1e-12))
+        grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+
+    group_lr = dict(cfg.group_lr or {})
+
+    def leaf_update(path, g, mu, nu, p):
+        g32 = g.astype(jnp.float32)
+        mu_n = cfg.b1 * mu + (1 - cfg.b1) * g32
+        nu_n = cfg.b2 * nu + (1 - cfg.b2) * jnp.square(g32)
+        mu_hat = mu_n / (1 - cfg.b1 ** step.astype(jnp.float32))
+        nu_hat = nu_n / (1 - cfg.b2 ** step.astype(jnp.float32))
+        mult = 1.0
+        if group_fn is not None:
+            mult = group_lr.get(group_fn(path), 1.0)
+        lr = cfg.lr * mult * sched
+        upd = mu_hat / (jnp.sqrt(nu_hat) + cfg.eps)
+        if cfg.weight_decay:
+            upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * upd).astype(p.dtype), mu_n, nu_n
+
+    flat_g = jax.tree_util.tree_flatten_with_path(grads)[0]
+    flat_mu = jax.tree_util.tree_leaves(opt_state["mu"])
+    flat_nu = jax.tree_util.tree_leaves(opt_state["nu"])
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+
+    new_p, new_mu, new_nu = [], [], []
+    for (path, g), mu, nu, p in zip(flat_g, flat_mu, flat_nu, flat_p):
+        p2, mu2, nu2 = leaf_update(path, g, mu, nu, p)
+        new_p.append(p2)
+        new_mu.append(mu2)
+        new_nu.append(nu2)
+
+    return (
+        jax.tree_util.tree_unflatten(treedef, new_p),
+        {
+            "mu": jax.tree_util.tree_unflatten(treedef, new_mu),
+            "nu": jax.tree_util.tree_unflatten(treedef, new_nu),
+            "step": step,
+        },
+    )
+
+
+def esrnn_group_fn(path) -> str:
+    """ES-RNN grouping: per-series HW params vs shared network weights."""
+    for entry in path:
+        key = getattr(entry, "key", getattr(entry, "name", None))
+        if key == "hw":
+            return "per_series"
+    return "default"

@@ -1,0 +1,120 @@
+"""Holt-Winters property + equivalence tests (hypothesis)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.holt_winters import (
+    hw_forecast, hw_init_params, hw_smooth, hw_smooth_loop_reference,
+)
+
+
+def _rand_params(rng, n, m):
+    p = hw_init_params(n, m)
+    return dataclasses.replace(
+        p,
+        alpha_logit=jnp.asarray(rng.normal(0, 1.5, n), jnp.float32),
+        gamma_logit=jnp.asarray(rng.normal(0, 1.5, n), jnp.float32),
+        init_seas_logit=jnp.asarray(rng.normal(0, 0.2, (n, m)), jnp.float32),
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(1, 7),
+    t=st.integers(5, 40),
+    m=st.sampled_from([1, 4, 12]),
+    seed=st.integers(0, 2**30),
+)
+def test_vectorized_equals_loop_reference(n, t, m, seed):
+    """The paper's central claim: batched == per-series sequential."""
+    rng = np.random.default_rng(seed)
+    y = np.abs(rng.lognormal(2.0, 0.7, (n, t))).astype(np.float32) + 0.5
+    p = _rand_params(rng, n, m)
+    lv, ss = hw_smooth(jnp.asarray(y), p, seasonality=m)
+    lv_ref, ss_ref = hw_smooth_loop_reference(y, p, seasonality=m)
+    np.testing.assert_allclose(lv, lv_ref, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(ss, ss_ref, rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(1, 5), t=st.integers(4, 30), seed=st.integers(0, 2**30))
+def test_levels_positive_and_bounded(n, t, seed):
+    """For positive series, levels stay positive and below max(y)/min(seas)."""
+    rng = np.random.default_rng(seed)
+    y = np.abs(rng.lognormal(2.0, 0.5, (n, t))).astype(np.float32) + 0.5
+    p = _rand_params(rng, n, 4)
+    lv, ss = hw_smooth(jnp.asarray(y), p, seasonality=4)
+    assert bool((lv > 0).all())
+    assert bool((ss > 0).all())
+
+
+def test_alpha_one_tracks_deseasonalized_signal():
+    """alpha -> 1 makes the level exactly y_t / s_t."""
+    rng = np.random.default_rng(0)
+    n, t, m = 3, 20, 4
+    y = np.abs(rng.lognormal(2, 0.4, (n, t))).astype(np.float32) + 1
+    p = hw_init_params(n, m)
+    p = dataclasses.replace(p, alpha_logit=jnp.full((n,), 30.0),
+                            gamma_logit=jnp.full((n,), -30.0))
+    lv, ss = hw_smooth(jnp.asarray(y), p, seasonality=m)
+    np.testing.assert_allclose(lv, y / np.asarray(ss[:, :t]), rtol=1e-5)
+
+
+def test_gamma_zero_freezes_seasonality():
+    rng = np.random.default_rng(1)
+    n, t, m = 2, 17, 4
+    y = np.abs(rng.lognormal(2, 0.4, (n, t))).astype(np.float32) + 1
+    p = _rand_params(rng, n, m)
+    p = dataclasses.replace(p, gamma_logit=jnp.full((n,), -40.0))
+    _, ss = hw_smooth(jnp.asarray(y), p, seasonality=m)
+    init = np.exp(np.asarray(p.init_seas_logit))
+    for k in range(t + m):
+        np.testing.assert_allclose(ss[:, k], init[:, k % m], rtol=1e-5)
+
+
+def test_constant_series_flat_forecast():
+    """A constant series forecasts (approximately) itself."""
+    n, t, m = 2, 40, 4
+    y = jnp.full((n, t), 7.0)
+    p = hw_init_params(n, m)
+    lv, ss = hw_smooth(y, p, seasonality=m)
+    fc = hw_forecast(lv, ss, 8, seasonality=m)
+    np.testing.assert_allclose(fc, 7.0, rtol=1e-3)
+
+
+def test_dual_seasonality_runs_and_reduces_to_single():
+    """seasonality2=0 path == dual path with flat second ring."""
+    rng = np.random.default_rng(2)
+    n, t, m = 3, 48, 4
+    y = np.abs(rng.lognormal(2, 0.4, (n, t))).astype(np.float32) + 1
+    p1 = _rand_params(rng, n, m)
+    lv1, ss1 = hw_smooth(jnp.asarray(y), p1, seasonality=m)
+    p2 = hw_init_params(n, m, seasonality2=6)
+    p2 = dataclasses.replace(
+        p2, alpha_logit=p1.alpha_logit, gamma_logit=p1.gamma_logit,
+        init_seas_logit=p1.init_seas_logit,
+        gamma2_logit=jnp.full((n,), -40.0))  # frozen flat second ring
+    lv2, ss2 = hw_smooth(jnp.asarray(y), p2, seasonality=m, seasonality2=6)
+    np.testing.assert_allclose(lv1, lv2, rtol=1e-5)
+    np.testing.assert_allclose(ss1[:, :t], ss2[:, :t], rtol=1e-5)
+
+
+def test_gradients_flow_to_per_series_params():
+    rng = np.random.default_rng(3)
+    n, t, m = 4, 24, 4
+    y = jnp.asarray(np.abs(rng.lognormal(2, 0.4, (n, t))) + 1, jnp.float32)
+    p = _rand_params(rng, n, m)
+
+    def loss(p):
+        lv, ss = hw_smooth(y, p, seasonality=m)
+        return jnp.mean(jnp.square(jnp.log(lv)))
+
+    g = jax.grad(loss)(p)
+    assert bool(jnp.any(g.alpha_logit != 0))
+    assert bool(jnp.any(g.gamma_logit != 0))
+    assert bool(jnp.any(g.init_seas_logit != 0))

@@ -1,0 +1,78 @@
+"""Loss/metric properties (hypothesis)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.losses import (
+    cstate_penalty, level_variability_penalty, mase, owa, pinball_loss, smape,
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**30), n=st.integers(1, 40))
+def test_pinball_median_is_half_mae(seed, n):
+    rng = np.random.default_rng(seed)
+    p = jnp.asarray(rng.normal(0, 1, n), jnp.float32)
+    t = jnp.asarray(rng.normal(0, 1, n), jnp.float32)
+    np.testing.assert_allclose(
+        pinball_loss(p, t, tau=0.5),
+        0.5 * jnp.mean(jnp.abs(p - t)), rtol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**30), tau=st.floats(0.05, 0.95))
+def test_pinball_nonnegative_and_zero_at_target(seed, tau):
+    rng = np.random.default_rng(seed)
+    t = jnp.asarray(rng.normal(0, 1, 17), jnp.float32)
+    assert float(pinball_loss(t, t, tau=tau)) == 0.0
+    p = jnp.asarray(rng.normal(0, 1, 17), jnp.float32)
+    assert float(pinball_loss(p, t, tau=tau)) >= 0.0
+
+
+def test_pinball_asymmetry():
+    """tau > 0.5 punishes under-prediction more."""
+    t = jnp.zeros(5)
+    under = jnp.full(5, -1.0)
+    over = jnp.full(5, 1.0)
+    assert float(pinball_loss(under, t, 0.9)) > float(pinball_loss(over, t, 0.9))
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**30))
+def test_smape_bounds(seed):
+    rng = np.random.default_rng(seed)
+    p = jnp.asarray(np.abs(rng.normal(5, 2, (3, 8))), jnp.float32)
+    t = jnp.asarray(np.abs(rng.normal(5, 2, (3, 8))), jnp.float32)
+    s = float(smape(p, t))
+    assert 0.0 <= s <= 200.0
+    assert float(smape(t, t)) == 0.0
+
+
+def test_mase_scaled_by_naive():
+    """Seasonal-naive forecast on the training tail has MASE ~ 1."""
+    rng = np.random.default_rng(0)
+    m, t, h = 4, 48, 8
+    y = np.abs(rng.lognormal(2, 0.3, (5, t + h))).astype(np.float32)
+    insample, target = y[:, :t], y[:, t:]
+    naive = y[:, t - m : t - m + h]  # season-ago values
+    val = float(mase(jnp.asarray(naive), jnp.asarray(target), jnp.asarray(insample), m))
+    assert 0.2 < val < 5.0
+
+
+def test_owa_identity():
+    assert float(owa(10.0, 1.0, 10.0, 1.0)) == 1.0
+    assert float(owa(5.0, 0.5, 10.0, 1.0)) == 0.5
+
+
+def test_level_penalty_zero_for_exponential_level():
+    """Constant growth rate (log-linear level) has zero variability."""
+    lv = jnp.exp(jnp.linspace(0, 3, 50))[None, :]
+    assert float(level_variability_penalty(lv, 1.0)) < 1e-8
+    rng = np.random.default_rng(0)
+    bumpy = jnp.asarray(np.exp(rng.normal(0, 1, (1, 50))), jnp.float32)
+    assert float(level_variability_penalty(bumpy, 1.0)) > 1e-3
+
+
+def test_cstate_penalty_passthrough():
+    assert float(cstate_penalty(jnp.asarray(2.0), 0.5)) == 1.0

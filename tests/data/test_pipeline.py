@@ -1,0 +1,94 @@
+"""Data pipeline tests: Eq.7/8 splits, equalization, stateless batching."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data.pipeline import MIN_LENGTH, batch_indices, iterate_batches, prepare
+from repro.data.synthetic_m4 import TABLE2_COUNTS, TABLE3_LEN_STATS, generate
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return generate("quarterly", scale=0.003, seed=11)
+
+
+def test_split_boundaries_eq8(ds):
+    """train | val | test tile the series tail exactly (Eq. 7/8)."""
+    data = prepare(ds)
+    o = data.horizon
+    c = MIN_LENGTH["quarterly"]
+    assert data.train.shape[1] == c
+    assert data.val_target.shape[1] == o
+    assert data.test_target.shape[1] == o
+    # reconstruct: for every kept series the tail must match source
+    kept = 0
+    for y in ds.series:
+        if len(y) < c + 2 * o:
+            continue
+        tail = y[-(c + 2 * o):]
+        row = kept
+        np.testing.assert_array_equal(data.train[row], tail[:c])
+        np.testing.assert_array_equal(data.val_target[row], tail[c:c + o])
+        np.testing.assert_array_equal(data.test_target[row], tail[c + o:])
+        np.testing.assert_array_equal(
+            data.val_input[row], tail[:c + o])
+        kept += 1
+    assert kept == data.n_series
+
+
+def test_short_series_disregarded(ds):
+    """Section 5.2: series below the threshold are dropped."""
+    data = prepare(ds)
+    need = MIN_LENGTH["quarterly"] + 2 * ds.horizon
+    expected = sum(1 for y in ds.series if len(y) >= need)
+    assert data.n_series == expected
+
+
+def test_variable_length_masks(ds):
+    data = prepare(ds, variable_length=True)
+    assert data.mask.shape == data.train.shape
+    assert set(np.unique(data.mask)).issubset({0.0, 1.0})
+    # masked rows are left-padded: zeros only at the start
+    for row in data.mask:
+        nz = np.nonzero(row)[0]
+        assert (np.diff(nz) == 1).all()
+        assert row[-1] == 1.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(3, 200), bs=st.integers(1, 64), seed=st.integers(0, 999))
+def test_batch_indices_deterministic_and_covering(n, bs, seed):
+    bs = min(bs, n)
+    steps = -(-n // bs)
+    a = [batch_indices(n, bs, s, seed=seed) for s in range(steps)]
+    b = [batch_indices(n, bs, s, seed=seed) for s in range(steps)]
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)  # restart safety
+    seen = set(np.concatenate(a).tolist())
+    assert seen == set(range(n))  # an epoch covers every series
+
+
+def test_resume_mid_epoch(ds):
+    data = prepare(ds)
+    full = list(iterate_batches(data, 8, 10, seed=3))
+    resumed = list(iterate_batches(data, 8, 10, seed=3, start_step=4))
+    assert len(resumed) == 6
+    for (s1, i1, _, _), (s2, i2, _, _) in zip(full[4:], resumed):
+        assert s1 == s2
+        np.testing.assert_array_equal(i1, i2)
+
+
+def test_synthetic_matches_table_stats():
+    """Generator tracks Table 2 category mix and Table 3 length stats."""
+    ds = generate("monthly", scale=0.01, seed=0)
+    counts = TABLE2_COUNTS["monthly"]
+    frac = np.bincount(ds.categories, minlength=6) / ds.n_series
+    expect = np.asarray(counts) / sum(counts)
+    assert np.abs(frac - expect).max() < 0.05
+    lens = np.asarray([len(s) for s in ds.series])
+    mean, std, lo, hi = TABLE3_LEN_STATS["monthly"]
+    assert lens.min() >= lo and lens.max() <= hi
+    assert abs(lens.mean() - mean) / mean < 0.35
+    for y in ds.series[:50]:
+        assert (y > 0).all()

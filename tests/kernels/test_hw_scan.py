@@ -1,0 +1,64 @@
+"""Pallas hw_scan kernel vs pure-jnp oracle: shape/dtype sweep."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.holt_winters import hw_init_params
+from repro.kernels import ops
+from repro.kernels.ref import hw_scan_ref
+
+
+def _setup(n, t, m, seed, dtype):
+    rng = np.random.default_rng(seed)
+    y = jnp.asarray(np.abs(rng.lognormal(2, 0.5, (n, t))) + 0.5, dtype)
+    p = hw_init_params(n, m, dtype=dtype)
+    p = dataclasses.replace(
+        p,
+        alpha_logit=jnp.asarray(rng.normal(0, 1, n), dtype),
+        gamma_logit=jnp.asarray(rng.normal(0, 1, n), dtype),
+        init_seas_logit=jnp.asarray(rng.normal(0, 0.2, (n, m)), dtype),
+    )
+    return y, p
+
+
+@pytest.mark.parametrize("n", [1, 5, 128, 200])
+@pytest.mark.parametrize("t", [8, 73])
+@pytest.mark.parametrize("m", [1, 4, 12])
+def test_hw_scan_shapes(n, t, m):
+    y, p = _setup(n, t, m, seed=n * 1000 + t + m, dtype=jnp.float32)
+    lv, ss = ops.hw_scan(y, p, seasonality=m)
+    c = p.constrained()
+    seas0 = c["init_seas"] if m > 1 else jnp.ones((n, m), y.dtype)
+    gamma = c["gamma"] if m > 1 else jnp.zeros_like(c["gamma"])
+    lv_ref, ss_ref = hw_scan_ref(y, c["alpha"], gamma, seas0)
+    assert lv.shape == (n, t) and ss.shape == (n, t + m)
+    np.testing.assert_allclose(lv, lv_ref, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(ss, ss_ref, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype,rtol", [(jnp.float32, 1e-5), (jnp.bfloat16, 0.05)])
+def test_hw_scan_dtypes(dtype, rtol):
+    y, p = _setup(37, 40, 4, seed=0, dtype=jnp.float32)
+    lv32, ss32 = ops.hw_scan(y, p, seasonality=4)
+    yd = y.astype(dtype)
+    pd = dataclasses.replace(
+        p, alpha_logit=p.alpha_logit.astype(dtype),
+        gamma_logit=p.gamma_logit.astype(dtype),
+        init_seas_logit=p.init_seas_logit.astype(dtype))
+    lv, ss = ops.hw_scan(yd, pd, seasonality=4)
+    assert lv.dtype == dtype
+    np.testing.assert_allclose(lv.astype(jnp.float32), lv32, rtol=rtol, atol=rtol)
+
+
+def test_matches_hw_smooth_use_pallas_flag():
+    from repro.core.holt_winters import hw_smooth
+
+    y, p = _setup(9, 30, 4, seed=5, dtype=jnp.float32)
+    lv1, ss1 = hw_smooth(y, p, seasonality=4, use_pallas=False)
+    lv2, ss2 = hw_smooth(y, p, seasonality=4, use_pallas=True)
+    np.testing.assert_allclose(lv1, lv2, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(ss1, ss2, rtol=1e-5, atol=1e-5)

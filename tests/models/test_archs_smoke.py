@@ -1,0 +1,109 @@
+"""Per-architecture smoke tests (reduced configs): one forward/train step on
+CPU asserting output shapes + no NaNs, plus prefill/decode consistency."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, SHAPES, ShapeCell, get_config, get_smoke_config
+from repro.launch.steps import make_train_step
+from repro.models.model import build_model
+from repro.train.optimizer import adam_init
+
+
+def _batch(cfg, b, s, rng, with_labels=True):
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32)}
+    if with_labels:
+        batch["labels"] = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32)
+    if cfg.family == "vlm":
+        batch["image_embeds"] = jnp.asarray(
+            rng.normal(0, 1, (b, cfg.n_patches, cfg.d_model)), jnp.float32)
+    if cfg.family == "encdec":
+        batch["frames"] = jnp.asarray(
+            rng.normal(0, 1, (b, cfg.n_frames, cfg.d_model)), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    rng = np.random.default_rng(hash(arch) % 2**31)
+    params = model.init(jax.random.PRNGKey(0))
+    b, s = 2, 16
+    batch = _batch(cfg, b, s, rng)
+
+    loss = model.loss(params, batch)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss)), f"{arch}: non-finite loss"
+
+    cell = ShapeCell("t", "train", s, b, microbatch=None)
+    step = make_train_step(model, cell)
+    p32 = jax.tree_util.tree_map(
+        lambda x: x.astype(jnp.float32) if x.dtype == jnp.bfloat16 else x, params)
+    p2, opt2, loss2 = step(p32, adam_init(p32), batch)
+    assert bool(jnp.isfinite(loss2))
+    # params actually moved
+    moved = jax.tree_util.tree_map(
+        lambda a, b_: bool(jnp.any(a != b_)), p32, p2)
+    assert any(jax.tree_util.tree_leaves(moved)), f"{arch}: no param moved"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_prefill_decode_consistency(arch):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    rng = np.random.default_rng(0)
+    params = model.init(jax.random.PRNGKey(0))
+    b, s = 2, 16
+    off = cfg.n_patches if cfg.family == "vlm" else 0
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s + 1)), jnp.int32)
+    batch = _batch(cfg, b, s, rng, with_labels=False)
+    batch["tokens"] = toks[:, :s]
+
+    _, caches = model.prefill(params, batch, s + 8 + off)
+    dlogits, _ = model.decode(
+        params,
+        {"tokens": toks[:, s:s + 1],
+         "positions": jnp.full((b, 1), s + off, jnp.int32)},
+        caches)
+
+    batch_full = dict(batch)
+    batch_full["tokens"] = toks
+    flogits, _ = model.prefill(params, batch_full, s + 9 + off)
+    np.testing.assert_allclose(
+        np.asarray(dlogits), np.asarray(flogits), rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_dims_match_assignment(arch):
+    """The exact assigned dimensions survive in the full configs."""
+    expect = {
+        "granite-3-2b": (40, 2048, 32, 8, 8192, 49155),
+        "yi-6b": (32, 4096, 32, 4, 11008, 64000),
+        "qwen2.5-14b": (48, 5120, 40, 8, 13824, 152064),
+        "chatglm3-6b": (28, 4096, 32, 2, 13696, 65024),
+        "qwen3-moe-30b-a3b": (48, 2048, 32, 4, 768, 151936),
+        "deepseek-v2-lite-16b": (27, 2048, 16, 16, 1408, 102400),
+        "internvl2-2b": (24, 2048, 16, 8, 8192, 92553),
+        "whisper-base": (6, 512, 8, 8, 2048, 51865),
+        "zamba2-2.7b": (54, 2560, 32, 32, 10240, 32000),
+        "mamba2-1.3b": (48, 2048, 1, 1, 0, 50280),
+    }[arch]
+    cfg = get_config(arch)
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+           cfg.d_ff, cfg.vocab_size)
+    assert got == expect
+
+
+def test_moe_extras():
+    q = get_config("qwen3-moe-30b-a3b")
+    assert (q.n_experts, q.top_k, q.head_dim) == (128, 8, 128)
+    d = get_config("deepseek-v2-lite-16b")
+    assert (d.n_experts, d.top_k, d.n_shared_experts) == (64, 6, 2)
+    assert (d.kv_lora_rank, d.use_mla) == (512, True)
+    z = get_config("zamba2-2.7b")
+    assert (z.ssm_state, z.attn_every) == (64, 6)
+    m = get_config("mamba2-1.3b")
+    assert m.ssm_state == 128 and m.family == "ssm"

@@ -1,0 +1,78 @@
+"""MoE dispatch correctness: gather/scatter path vs dense per-expert loop."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.models.moe import moe_apply, moe_init
+
+
+def dense_reference(p, cfg, x):
+    """Loop over experts densely -- no capacity, no dispatch."""
+    b, s, d = x.shape
+    logits = x.astype(jnp.float32) @ p["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_ids = jax.lax.top_k(probs, cfg.top_k)
+    if cfg.norm_topk_prob:
+        top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+    y = jnp.zeros_like(x)
+    for e in range(cfg.n_experts):
+        fe = (jax.nn.silu(x @ p["w_gate"][e]) * (x @ p["w_up"][e])) @ p["w_down"][e]
+        w_e = jnp.sum(jnp.where(top_ids == e, top_w, 0.0), axis=-1)
+        y = y + fe * w_e[..., None].astype(x.dtype)
+    if cfg.n_shared_experts:
+        sp = p["shared"]
+        y = y + (jax.nn.silu(x @ sp["w_gate"]) * (x @ sp["w_up"])) @ sp["w_down"]
+    return y
+
+
+def test_dropless_dispatch_matches_dense():
+    cfg = get_smoke_config("qwen3-moe-30b-a3b")
+    p = moe_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(0, 1, (2, 16, cfg.d_model)), jnp.float32)
+    y, aux = moe_apply(p, cfg, x, capacity=16)  # dropless at this size
+    y_ref = dense_reference(p, cfg, x)
+    np.testing.assert_allclose(y, y_ref, rtol=2e-4, atol=2e-4)
+    assert float(aux) >= 0.9  # Switch aux loss lower bound is 1 at balance
+
+
+def test_shared_experts_path():
+    cfg = get_smoke_config("deepseek-v2-lite-16b")
+    p = moe_init(jax.random.PRNGKey(1), cfg, jnp.float32)
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(0, 1, (2, 8, cfg.d_model)), jnp.float32)
+    y, _ = moe_apply(p, cfg, x, capacity=8)
+    y_ref = dense_reference(p, cfg, x)
+    np.testing.assert_allclose(y, y_ref, rtol=2e-4, atol=2e-4)
+
+
+def test_capacity_drop_zeroes_not_corrupts():
+    """With capacity 1, dropped tokens lose expert contributions but the
+    output stays finite and the kept tokens' results are a subset of the
+    dropless output's structure."""
+    cfg = get_smoke_config("qwen3-moe-30b-a3b")
+    p = moe_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(0, 1, (1, 32, cfg.d_model)), jnp.float32)
+    y, _ = moe_apply(p, cfg, x, capacity=1)
+    assert bool(jnp.isfinite(y).all())
+
+
+def test_grads_flow_through_dispatch():
+    cfg = get_smoke_config("qwen3-moe-30b-a3b")
+    p = moe_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(0, 1, (1, 8, cfg.d_model)), jnp.float32)
+
+    def loss(p):
+        y, aux = moe_apply(p, cfg, x, capacity=8)
+        return jnp.mean(jnp.square(y)) + 0.01 * aux
+
+    g = jax.grad(loss)(p)
+    assert bool(jnp.any(g["router"] != 0))
+    assert bool(jnp.any(g["w_gate"] != 0))
+    assert bool(jnp.any(g["w_down"] != 0))

@@ -1,0 +1,76 @@
+"""Fault-tolerance tests: atomic checkpoints, bit-exact resume, retention."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.core.esrnn import ESRNN, make_config
+from repro.data.pipeline import prepare
+from repro.data.synthetic_m4 import generate
+from repro.train.trainer import TrainConfig, train_esrnn
+
+
+def test_save_restore_roundtrip(tmp_path):
+    ckpt = Checkpointer(str(tmp_path))
+    state = {"a": jnp.arange(5, dtype=jnp.float32),
+             "b": {"c": jnp.ones((2, 3), jnp.bfloat16)},
+             "step": jnp.asarray(7)}
+    ckpt.save(7, state, metric=1.5)
+    step, restored = ckpt.restore(state)
+    assert step == 7
+    for x, y in zip(jax.tree_util.tree_leaves(state),
+                    jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+        assert x.dtype == y.dtype
+
+
+def test_atomic_no_tmp_left(tmp_path):
+    ckpt = Checkpointer(str(tmp_path))
+    ckpt.save(1, {"x": jnp.zeros(3)})
+    names = os.listdir(tmp_path)
+    assert not any(".tmp" in n for n in names)
+
+
+def test_retention_keeps_best(tmp_path):
+    ckpt = Checkpointer(str(tmp_path), keep=2)
+    for step, metric in [(1, 5.0), (2, 1.0), (3, 3.0), (4, 4.0), (5, 6.0)]:
+        ckpt.save(step, {"x": jnp.full(2, step)}, metric=metric)
+    steps = ckpt.all_steps()
+    assert 2 in steps                      # best metric retained
+    assert steps[-1] == 5                  # latest retained
+    assert len(steps) <= 3
+    assert ckpt.best_step() == 2
+
+
+def test_structure_mismatch_rejected(tmp_path):
+    ckpt = Checkpointer(str(tmp_path))
+    ckpt.save(1, {"x": jnp.zeros(3)})
+    with pytest.raises(ValueError):
+        ckpt.restore({"y": jnp.zeros(3)})
+    with pytest.raises(ValueError):
+        ckpt.restore({"x": jnp.zeros(4)})
+
+
+def test_training_resume_bit_exact(tmp_path):
+    """Train 20 steps straight vs 10 + restart + 10: identical params."""
+    data = prepare(generate("quarterly", scale=0.002, seed=3))
+    model = ESRNN(make_config("quarterly"))
+
+    base = dict(batch_size=8, lr=1e-3, eval_every=1000, ckpt_every=10, seed=5)
+    out_a = train_esrnn(model, data,
+                        TrainConfig(n_steps=20, ckpt_dir=None, **base))
+
+    d = str(tmp_path / "resume")
+    train_esrnn(model, data, TrainConfig(n_steps=10, ckpt_dir=d, **base))
+    out_b = train_esrnn(model, data, TrainConfig(n_steps=20, ckpt_dir=d, **base))
+    assert out_b["resumed_from"] == 10
+
+    for (pa, a), (pb, b) in zip(
+        jax.tree_util.tree_leaves_with_path(out_a["params"]),
+        jax.tree_util.tree_leaves_with_path(out_b["params"]),
+    ):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b), err_msg=str(pa))

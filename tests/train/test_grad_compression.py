@@ -1,0 +1,74 @@
+"""Error-feedback gradient compression invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.train.grad_compression import (
+    compress_tree_int8, init_error_state, int8_compress, int8_decompress,
+    topk_compress,
+)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**30), n=st.integers(2, 500))
+def test_int8_error_feedback_is_lossless_in_total(seed, n):
+    """g + err_in == deq + err_out (the residual carries all the loss)."""
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.normal(0, 1, n), jnp.float32)
+    err = jnp.asarray(rng.normal(0, 0.1, n), jnp.float32)
+    q, scale, new_err = int8_compress(g, err, jax.random.PRNGKey(seed))
+    deq = int8_decompress(q, scale)
+    np.testing.assert_allclose(np.asarray(g + err), np.asarray(deq + new_err),
+                               rtol=1e-5, atol=1e-5)
+    assert q.dtype == jnp.int8
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**30))
+def test_int8_quantization_error_bounded(seed):
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.normal(0, 1, 256), jnp.float32)
+    q, scale, err = int8_compress(g, jnp.zeros(256), jax.random.PRNGKey(0))
+    assert float(jnp.abs(err).max()) <= float(scale) + 1e-6
+
+
+def test_topk_sparsity_and_feedback():
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.normal(0, 1, 1000), jnp.float32)
+    sparse, err = topk_compress(g, jnp.zeros(1000), k_frac=0.1)
+    nnz = int(jnp.sum(sparse != 0))
+    assert nnz <= 120  # ~10% (ties tolerated)
+    np.testing.assert_allclose(np.asarray(sparse + err), np.asarray(g),
+                               rtol=1e-6, atol=1e-6)
+    # kept entries are the largest
+    kept_min = float(jnp.abs(sparse[sparse != 0]).min())
+    dropped_max = float(jnp.abs(err[sparse == 0]).max())
+    assert kept_min >= dropped_max - 1e-6
+
+
+def test_error_feedback_accumulates_dropped_signal():
+    """A small constant gradient below threshold is eventually transmitted."""
+    g = jnp.full(100, 0.01)
+    g = g.at[0].set(10.0)  # one big entry hogs top-k
+    err = jnp.zeros(100)
+    transmitted = jnp.zeros(100)
+    for _ in range(30):
+        sparse, err = topk_compress(g, err, k_frac=0.02)
+        transmitted = transmitted + sparse
+    # entry 1 (small) must have been flushed at least once via error feedback
+    assert float(transmitted[1]) > 0.0
+
+
+def test_tree_compression_roundtrip():
+    params = {"a": jnp.ones((4, 4)), "b": jnp.full(7, -2.0)}
+    errs = init_error_state(params)
+    vals, new_errs = compress_tree_int8(
+        jax.tree_util.tree_map(lambda x: x * 0.5, params), errs,
+        jax.random.PRNGKey(0))
+    for v, e, p in zip(jax.tree_util.tree_leaves(vals),
+                       jax.tree_util.tree_leaves(new_errs),
+                       jax.tree_util.tree_leaves(params)):
+        np.testing.assert_allclose(np.asarray(v + e), np.asarray(p) * 0.5,
+                                   rtol=1e-5, atol=1e-5)
