@@ -11,7 +11,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import losses as L
-from repro.core.esrnn import ESRNN, make_config
+from repro.core.esrnn import esrnn_forecast, make_config
 from repro.data.pipeline import prepare
 from repro.data.synthetic_m4 import generate
 from repro.train.trainer import TrainConfig, train_esrnn
@@ -28,18 +28,18 @@ def save_result(name: str, payload: dict):
 def train_frequency(freq: str, *, scale: float, steps: int, seed: int = 0,
                     lr: float = 4e-3, batch_size: int = 64):
     """Train an ES-RNN for one frequency on synthetic M4; returns
-    (model, data, params, history)."""
+    (cfg, data, params, history)."""
     data = prepare(generate(freq, scale=scale, seed=seed))
-    model = ESRNN(make_config(freq))
-    out = train_esrnn(model, data, TrainConfig(
+    cfg = make_config(freq)
+    out = train_esrnn(cfg, data, TrainConfig(
         batch_size=min(batch_size, data.n_series), n_steps=steps, lr=lr,
         eval_every=max(steps // 3, 1), ckpt_dir=None, seed=seed))
-    return model, data, out["params"], out["history"]
+    return cfg, data, out["params"], out["history"]
 
 
-def eval_test_smape(model, data, params):
+def eval_test_smape(cfg, data, params):
     """Test-set sMAPE: forecast from train+val, score vs test (Eq. 7)."""
-    fc = model.forecast(params, jnp.asarray(data.val_input),
+    fc = esrnn_forecast(cfg, params, jnp.asarray(data.val_input),
                         jnp.asarray(data.cats))
     return float(L.smape(fc, jnp.asarray(data.test_target))), np.asarray(fc)
 

@@ -23,18 +23,16 @@ def run(fast: bool = False):
     for freq, (scale, steps) in FREQS.items():
         if fast:
             scale, steps = scale / 2, 40
-        model, data, params, _ = train_frequency(freq, scale=scale, steps=steps)
+        cfg, data, params, _ = train_frequency(freq, scale=scale, steps=steps)
         m, h = data.seasonality, data.horizon
         y_in = np.asarray(data.val_input)
         target = jnp.asarray(data.test_target)
         insample = jnp.asarray(y_in)
 
-        esrnn_smape, _ = eval_test_smape(model, data, params)
-        fc_esrnn = model.forecast(params, jnp.asarray(data.val_input),
-                                  jnp.asarray(data.cats))
+        esrnn_smape, fc_esrnn = eval_test_smape(cfg, data, params)
 
         candidates = {
-            "esrnn": np.asarray(fc_esrnn),
+            "esrnn": fc_esrnn,
             "comb": comb_forecast(y_in, h, m),
             "snaive": seasonal_naive_forecast(y_in, h, m),
             "naive2": naive2_forecast(y_in, h, m),

@@ -7,6 +7,7 @@ import numpy as np
 
 from benchmarks.common import save_result, train_frequency
 from repro.core import losses as L
+from repro.core.esrnn import esrnn_forecast
 from repro.data.synthetic_m4 import CATEGORIES
 
 FREQS = {"yearly": (0.004, 100), "quarterly": (0.004, 100), "monthly": (0.002, 100)}
@@ -17,8 +18,8 @@ def run(fast: bool = False):
     for freq, (scale, steps) in FREQS.items():
         if fast:
             scale, steps = scale / 2, 40
-        model, data, params, _ = train_frequency(freq, scale=scale, steps=steps)
-        fc = model.forecast(params, jnp.asarray(data.val_input),
+        cfg, data, params, _ = train_frequency(freq, scale=scale, steps=steps)
+        fc = esrnn_forecast(cfg, params, jnp.asarray(data.val_input),
                             jnp.asarray(data.cats))
         target = jnp.asarray(data.test_target)
         col = {}

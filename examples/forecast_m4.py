@@ -1,9 +1,9 @@
 """End-to-end M4 forecasting driver (the paper's full workflow).
 
-Trains ES-RNN per frequency on synthetic M4 with checkpoint/restart, picks
-the best checkpoint by validation sMAPE, reports test sMAPE/MASE/OWA against
-the Comb benchmark, and demonstrates crash-resume (kill it any time and run
-again: it restarts from the latest checkpoint).
+Per frequency: fit with checkpoint/restart (kill it any time and run again --
+it resumes from the latest checkpoint), then report test sMAPE/MASE/OWA
+against the Comb and Naive2 benchmarks. The whole per-frequency workflow is
+a few lines against the unified Forecaster API:
 
     PYTHONPATH=src python examples/forecast_m4.py [--freq quarterly] [--steps 150]
 """
@@ -11,48 +11,24 @@ again: it restarts from the latest checkpoint).
 import argparse
 import os
 
-import jax.numpy as jnp
-
-from repro.core import losses as L
-from repro.core.comb import comb_forecast, naive2_forecast
-from repro.core.esrnn import ESRNN, make_config
-from repro.data.pipeline import prepare
-from repro.data.synthetic_m4 import generate
-from repro.train.trainer import TrainConfig, train_esrnn
+from repro.forecast import ESRNNForecaster
 
 
 def run_frequency(freq: str, steps: int, ckpt_root: str):
     print(f"\n=== {freq} ===")
-    data = prepare(generate(freq, scale=0.004, seed=0))
-    model = ESRNN(make_config(freq))
-    ckpt_dir = os.path.join(ckpt_root, freq)
-    out = train_esrnn(model, data, TrainConfig(
-        batch_size=64, n_steps=steps, lr=4e-3,
-        eval_every=max(steps // 5, 1), ckpt_dir=ckpt_dir))
-    if out["resumed_from"]:
-        print(f"(resumed from checkpoint step {out['resumed_from']})")
+    f = ESRNNForecaster(f"esrnn-{freq}", n_steps=steps, batch_size=64,
+                        rnn_lr=4e-3, hw_lr=4e-2, data_scale=0.004,
+                        eval_every=max(steps // 5, 1))
+    f.fit(ckpt_dir=os.path.join(ckpt_root, freq))
+    if not f.history_["loss"]:
+        print("(resumed from a finished checkpoint)")
 
-    # final evaluation: forecast from train+val, score on test (Eq. 7)
-    fc = model.forecast(out["params"], jnp.asarray(data.val_input),
-                        jnp.asarray(data.cats))
-    target = jnp.asarray(data.test_target)
-    insample = jnp.asarray(data.val_input)
-    m, h = data.seasonality, data.horizon
-
-    fc_comb = jnp.asarray(comb_forecast(data.val_input, h, m), jnp.float32)
-    fc_n2 = jnp.asarray(naive2_forecast(data.val_input, h, m), jnp.float32)
-
-    def score(f):
-        return (float(L.smape(f, target)), float(L.mase(f, target, insample, m)))
-
-    s_es, m_es = score(fc)
-    s_cb, m_cb = score(fc_comb)
-    s_n2, m_n2 = score(fc_n2)
-    owa_es = float(L.owa(s_es, m_es, s_n2, m_n2))
-    owa_cb = float(L.owa(s_cb, m_cb, s_n2, m_n2))
-    print(f"test sMAPE: esrnn {s_es:.3f} | comb {s_cb:.3f} | naive2 {s_n2:.3f}")
-    print(f"test OWA:   esrnn {owa_es:.3f} | comb {owa_cb:.3f}")
-    return s_es, s_cb
+    scores = f.evaluate(split="test")  # forecast from train+val, score on test
+    print(f"test sMAPE: esrnn {scores['smape']:.3f} | "
+          f"comb {scores['smape_comb']:.3f} | "
+          f"naive2 {scores['smape_naive2']:.3f}")
+    print(f"test OWA:   esrnn {scores['owa']:.3f} | comb {scores['owa_comb']:.3f}")
+    return scores["smape"], scores["smape_comb"]
 
 
 def main():

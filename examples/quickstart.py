@@ -1,42 +1,39 @@
-"""Quickstart: train a vectorized ES-RNN on synthetic M4-quarterly data and
-forecast, in ~a minute on CPU.
+"""Quickstart: the unified Forecaster API on synthetic M4-quarterly data,
+in ~a minute on CPU.
+
+One estimator, five verbs -- fit / predict / predict_quantiles / evaluate /
+save -- over the paper's vectorized ES-RNN:
 
     PYTHONPATH=src python examples/quickstart.py
+
+The same surface drives the CLI (`python -m repro.launch.forecast ...`).
 """
 
-import jax.numpy as jnp
-
-from repro.core import losses as L
-from repro.core.comb import seasonal_naive_forecast
-from repro.core.esrnn import ESRNN, make_config
-from repro.data.pipeline import prepare
-from repro.data.synthetic_m4 import generate
-from repro.train.trainer import TrainConfig, train_esrnn
+from repro.forecast import ESRNNForecaster
 
 
 def main():
-    # 1. data: synthetic M4 (Table 2/3-matched), section 5 preparation
-    data = prepare(generate("quarterly", scale=0.005, seed=0))
-    print(f"{data.n_series} series, train length {data.train.shape[1]}, "
-          f"horizon {data.horizon}")
+    # one registry name resolves model + data + two-group training recipe
+    f = ESRNNForecaster("esrnn-quarterly", n_steps=80, batch_size=64,
+                        rnn_lr=4e-3, hw_lr=4e-2, data_scale=0.005)
+    f.fit()  # spec-driven synthetic M4 (Tables 2/3 profile)
 
-    # 2. model: the paper's hybrid, per-series HW params + shared dilated LSTM
-    model = ESRNN(make_config("quarterly"))
+    losses = f.history_["loss"]
+    print(f"{f.n_series_} series, horizon {f.horizon}; "
+          f"loss {losses[0]:.4f} -> {losses[-1]:.4f}")
 
-    # 3. joint training (per-series params on a 10x LR group)
-    out = train_esrnn(model, data, TrainConfig(
-        batch_size=64, n_steps=80, lr=4e-3, eval_every=40))
-    print(f"loss: {out['history']['loss'][0]:.4f} -> "
-          f"{out['history']['loss'][-1]:.4f}")
-
-    # 4. forecast + score on the held-out validation window
-    fc = model.forecast(out["params"], jnp.asarray(data.train),
-                        jnp.asarray(data.cats))
-    val = jnp.asarray(data.val_target)
-    snaive = seasonal_naive_forecast(data.train, data.horizon, data.seasonality)
-    print(f"val sMAPE  ES-RNN: {float(L.smape(fc, val)):.3f}   "
-          f"seasonal-naive: {float(L.smape(jnp.asarray(snaive), val)):.3f}")
+    # point + quantile forecasts from the end of the training window
+    fc = f.predict()
+    bands = f.predict_quantiles(taus=(0.1, 0.5, 0.9))
     print("first series forecast:", [f"{v:.1f}" for v in fc[0][:4]])
+    print("80% band (h=1):",
+          f"[{bands[0.1][0, 0]:.1f}, {bands[0.9][0, 0]:.1f}]")
+
+    # M4-style scoring against the competition benchmarks
+    scores = f.evaluate(split="val")
+    print(f"val sMAPE  ES-RNN: {scores['smape']:.3f}   "
+          f"comb: {scores['smape_comb']:.3f}   "
+          f"naive2: {scores['smape_naive2']:.3f}   OWA: {scores['owa']:.3f}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,26 @@
+#!/usr/bin/env bash
+# Tier-1 gate + forecast-surface smoke. Run from anywhere:
+#   bash scripts/ci.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+
+echo "== tier-1 tests =="
+# The --deselect list is the known pre-existing jax-version drift, identical
+# at the seed commit (see .claude/skills/verify/SKILL.md): 3 sharding tests
+# hitting the removed jax.sharding.AxisType, the LM launcher behind the same
+# drift, and a wall-clock speedup assert that is flaky on single-core hosts.
+python -m pytest -x -q \
+  --deselect tests/distributed/test_sharding.py::test_param_spec_rules \
+  --deselect tests/distributed/test_sharding.py::test_divisibility_guard \
+  --deselect tests/distributed/test_sharding.py::test_mini_dryrun_and_real_step_on_8_devices \
+  --deselect tests/test_system.py::test_lm_training_loss_decreases \
+  --deselect tests/test_system.py::test_vectorized_faster_than_loop
+
+echo "== forecast fit smoke (20 steps) =="
+python -m repro.launch.forecast fit --spec esrnn-quarterly --smoke --steps 20
+
+echo "== forecast serve smoke =="
+python -m repro.launch.forecast serve --smoke --steps 3 --requests 16
+
+echo "CI OK"

@@ -29,8 +29,9 @@ _MODULES = {
 
 ARCHS: List[str] = list(_MODULES)
 
-# ES-RNN (the paper's own model) configs are in core/esrnn.py PRESETS; they
-# are exposed here so launchers can address them uniformly.
+# ES-RNN (the paper's own model) lives behind the unified forecasting
+# registry: ``repro.forecast.get_spec("esrnn-<freq>")`` (these legacy m4-*
+# aliases also resolve there). The CLI is ``repro.launch.forecast``.
 ESRNN_CONFIGS = ("m4-yearly", "m4-quarterly", "m4-monthly", "m4-hourly")
 
 

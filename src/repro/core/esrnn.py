@@ -1,4 +1,4 @@
-"""The hybrid ES-RNN model (paper section 3, Eqs. 5-6).
+"""The hybrid ES-RNN model (paper section 3, Eqs. 5-6) as pure functions.
 
 Dataflow per training step, all batched over the series axis (the paper's
 contribution):
@@ -19,11 +19,23 @@ Forecast (paper section 3.4 / Eq. 5):
 
 The per-series HW parameters and shared RNN weights are trained *jointly*
 (one optimizer, two param groups with different learning rates).
+
+The module exposes an estimator-friendly functional API:
+
+  ``esrnn_init(key, cfg, n_series)``      -> params pytree
+  ``esrnn_loss(cfg, params, y, cats)``    -> scalar training loss
+  ``esrnn_forecast(cfg, params, y, cats)``-> (N, H) de-normalized forecast
+  ``esrnn_loss_and_grad(cfg, params, y, cats)``
+
+``repro.forecast.ESRNNForecaster`` wraps these; the legacy :class:`ESRNN`
+class remains as a thin deprecation shim delegating to the pure functions,
+so old call sites keep working (and stay bit-for-bit identical).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from functools import partial
 from typing import Optional, Tuple
 
@@ -32,7 +44,7 @@ import jax.numpy as jnp
 
 from repro.core import losses as L
 from repro.core.drnn import drnn_apply, drnn_init
-from repro.core.holt_winters import HWParams, extend_seasonality, hw_init_params, hw_smooth
+from repro.core.holt_winters import HWParams, hw_init_params, hw_smooth
 
 
 @dataclasses.dataclass(frozen=True)
@@ -80,148 +92,253 @@ def make_config(name: str, **overrides) -> ESRNNConfig:
     return ESRNNConfig(**base)
 
 
-class ESRNN:
-    """Functional model wrapper: ``init`` -> params pytree, pure step fns."""
+# ---------------------------------------------------------------------------
+# Pure init
+# ---------------------------------------------------------------------------
 
-    def __init__(self, config: ESRNNConfig):
+
+def esrnn_init(key, cfg: ESRNNConfig, n_series: int):
+    """Initialize the params pytree: {"hw": HWParams, "rnn": ..., "head": ...}.
+
+    The ``hw`` subtree is the per-series table (leading axis N); everything
+    else is shared across series.
+    """
+    rnn_key, head_key1, head_key2 = jax.random.split(key, 3)
+    feat = cfg.input_size + cfg.n_categories
+    hw = hw_init_params(
+        n_series, cfg.seasonality, seasonality2=cfg.seasonality2, dtype=cfg.jdtype
+    )
+    rnn = drnn_init(rnn_key, feat, cfg.hidden_size, cfg.dilations, cfg.jdtype)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(cfg.hidden_size, jnp.float32))
+    head = {
+        "dense_w": (jax.random.uniform(head_key1, (cfg.hidden_size, cfg.hidden_size), jnp.float32, -1, 1) * scale).astype(cfg.jdtype),
+        "dense_b": jnp.zeros((cfg.hidden_size,), cfg.jdtype),
+        "out_w": (jax.random.uniform(head_key2, (cfg.hidden_size, cfg.output_size), jnp.float32, -1, 1) * scale).astype(cfg.jdtype),
+        "out_b": jnp.zeros((cfg.output_size,), cfg.jdtype),
+    }
+    params = {"hw": hw, "rnn": rnn, "head": head}
+    if cfg.attention:
+        ka, kb, kc = jax.random.split(head_key1, 3)
+        h = cfg.hidden_size
+        params["attn"] = {
+            "wq": (jax.random.normal(ka, (h, h)) * scale).astype(cfg.jdtype),
+            "wk": (jax.random.normal(kb, (h, h)) * scale).astype(cfg.jdtype),
+            "wv": (jax.random.normal(kc, (h, h)) * scale).astype(cfg.jdtype),
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Pure apply internals (shared by loss and forecast)
+# ---------------------------------------------------------------------------
+
+
+def _smooth(cfg: ESRNNConfig, params, y):
+    return hw_smooth(
+        y,
+        params["hw"],
+        seasonality=cfg.seasonality,
+        seasonality2=cfg.seasonality2,
+        use_pallas=cfg.use_pallas,
+    )
+
+
+def _window_positions(cfg: ESRNNConfig, t_len: int):
+    """Valid window positions t = W-1 .. T-1 (input window fully observed)."""
+    return jnp.arange(cfg.input_size - 1, t_len)
+
+
+def _future_seasonal_idx(out_idx, t_len: int, m: int):
+    """Seasonality indices for targets t+1..t+H, cyclically clamped.
+
+    ``seas`` from :func:`hw_smooth` has T+m valid entries; indices beyond
+    that wrap into the last smoothed season. This single helper is the
+    seasonal-extension rule for BOTH the loss targets and the forecast
+    de-normalization, so the two paths cannot drift apart.
+    """
+    return jnp.where(
+        out_idx < t_len + m,
+        out_idx,
+        t_len + jnp.mod(out_idx - t_len, m),
+    )
+
+
+def _input_windows(cfg: ESRNNConfig, y, levels, seas):
+    """Normalized + de-seasonalized + log input windows (Eq. 6).
+
+    Returns feats (N, P, W) and the position vector (P,). Every returned
+    position has a fully-observed input window (positions start at W-1), so
+    no input-side mask is needed; target-side validity is handled by
+    :func:`_target_windows`.
+    """
+    w = cfg.input_size
+    _, t_len = y.shape
+    pos = _window_positions(cfg, t_len)                        # (P,)
+    in_idx = pos[:, None] + jnp.arange(-w + 1, 1)[None, :]     # (P, W)
+    y_in = y[:, in_idx]                                        # (N, P, W)
+    s_in = seas[:, in_idx]
+    lvl = levels[:, pos]                                       # (N, P)
+    x_in = jnp.log(jnp.maximum(y_in / (lvl[:, :, None] * s_in), 1e-8))
+    return x_in, pos
+
+
+def _target_windows(cfg: ESRNNConfig, y, levels, seas, pos):
+    """Normalized output windows + the position-validity mask.
+
+    Output windows need y up to t+H, so the last H positions have no
+    (complete) target; ``out_mask`` (N, P, H) in {0,1} marks real targets.
+    Clamped (out-of-range) entries are masked out of the loss.
+    """
+    n, t_len = y.shape
+    h = cfg.output_size
+    out_idx = pos[:, None] + jnp.arange(1, h + 1)[None, :]     # (P, H)
+    out_valid = out_idx < t_len                                # (P, H)
+    out_idx_c = jnp.minimum(out_idx, t_len - 1)
+    lvl = levels[:, pos]                                       # (N, P)
+    y_out = y[:, out_idx_c]                                    # (N, P, H)
+    m = max(cfg.seasonality, 1)
+    s_out = seas[:, _future_seasonal_idx(out_idx, t_len, m)]
+    y_out_n = jnp.log(jnp.maximum(y_out / (lvl[:, :, None] * s_out), 1e-8))
+    out_mask = out_valid[None, :, :].astype(y.dtype) * jnp.ones((n, 1, 1), y.dtype)
+    return y_out_n, out_mask
+
+
+def _rnn_head(cfg: ESRNNConfig, params, feats):
+    hid, c_sq = drnn_apply(
+        params["rnn"], feats, dilations=cfg.dilations, use_pallas=cfg.use_pallas
+    )
+    if cfg.attention:
+        ap = params["attn"]
+        q = hid @ ap["wq"]
+        k = hid @ ap["wk"]
+        v = hid @ ap["wv"]
+        s = jnp.einsum("nph,nqh->npq", q, k) / jnp.sqrt(
+            jnp.asarray(cfg.hidden_size, jnp.float32)).astype(hid.dtype)
+        p_idx = jnp.arange(hid.shape[1])
+        mask = p_idx[:, None] >= p_idx[None, :]
+        s = jnp.where(mask[None], s.astype(jnp.float32), -jnp.inf)
+        hid = hid + jnp.einsum(
+            "npq,nqh->nph", jax.nn.softmax(s, axis=-1).astype(v.dtype), v)
+    head = params["head"]
+    z = jnp.tanh(hid @ head["dense_w"] + head["dense_b"])
+    return z @ head["out_w"] + head["out_b"], c_sq
+
+
+def _features(x_in, cats):
+    n, p, _ = x_in.shape
+    cat_feat = jnp.broadcast_to(cats[:, None, :], (n, p, cats.shape[-1]))
+    return jnp.concatenate([x_in, cat_feat.astype(x_in.dtype)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Pure public apply functions
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def esrnn_loss(cfg: ESRNNConfig, params, y, cats, mask=None):
+    """Training loss on series y (N, T) with category one-hots (N, C).
+
+    ``mask`` (N, T), optional: 1 where y is a real observation, 0 on the
+    left-padding of variable-length series (``data.pipeline`` section-8.1
+    convention). Window positions whose input window overlaps padding are
+    excluded from the loss; with left-padding a window [t-W+1..t] is fully
+    real iff its first element is (the mask is 0..0 1..1). ``None`` (the
+    equalized default) is bit-identical to an all-ones mask.
+    """
+    levels, seas = _smooth(cfg, params, y)
+    x_in, pos = _input_windows(cfg, y, levels, seas)
+    y_out_n, out_mask = _target_windows(cfg, y, levels, seas, pos)
+    if mask is not None:
+        valid_in = mask[:, pos - cfg.input_size + 1]          # (N, P)
+        out_mask = out_mask * valid_in[:, :, None]
+    feats = _features(x_in, cats)
+    yhat_n, c_sq = _rnn_head(cfg, params, feats)
+    loss = L.pinball_loss(yhat_n, y_out_n, tau=cfg.tau, mask=out_mask)
+    loss = loss + L.level_variability_penalty(levels, cfg.level_penalty)
+    loss = loss + L.cstate_penalty(c_sq, cfg.cstate_penalty)
+    return loss
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def esrnn_forecast(cfg: ESRNNConfig, params, y, cats):
+    """h-step forecast from the end of y: (N, H), de-normalized (3.4).
+
+    Shares the exact window/seasonal machinery of :func:`esrnn_loss`: the
+    features come from the same :func:`_input_windows` path (whose positions
+    are valid by construction -- the same invariant the loss mask encodes),
+    and the future seasonality uses the same :func:`_future_seasonal_idx`
+    cyclic rule applied at the final position T-1, i.e. indices T..T+H-1.
+    """
+    n, t_len = y.shape
+    levels, seas = _smooth(cfg, params, y)
+    x_in, _pos = _input_windows(cfg, y, levels, seas)
+    feats = _features(x_in, cats)
+    yhat_n, _ = _rnn_head(cfg, params, feats)
+    last = yhat_n[:, -1, :]                              # (N, H) log-space
+    m = max(cfg.seasonality, 1)
+    fut_idx = t_len + jnp.arange(cfg.output_size)        # targets of pos T-1
+    s_fut = seas[:, _future_seasonal_idx(fut_idx, t_len, m)]
+    return jnp.exp(last) * levels[:, -1:] * s_fut
+
+
+def esrnn_loss_and_grad(cfg: ESRNNConfig, params, y, cats, mask=None):
+    return jax.value_and_grad(
+        lambda p: esrnn_loss(cfg, p, y, cats, mask))(params)
+
+
+def gather_series(params, idx):
+    """Per-series row gather: hw rows at ``idx``, shared weights untouched.
+
+    The gradient scatter back to the full table happens automatically
+    through the indexing when differentiated (used by the trainer and the
+    serving path).
+    """
+    return {k: (jax.tree_util.tree_map(lambda a: a[idx], v) if k == "hw" else v)
+            for k, v in params.items()}
+
+
+# ---------------------------------------------------------------------------
+# Legacy class shim (deprecated)
+# ---------------------------------------------------------------------------
+
+
+class ESRNN:
+    """Deprecated thin wrapper over the pure functional API.
+
+    Prefer ``repro.forecast.ESRNNForecaster`` (estimator API) or the pure
+    functions in this module. Kept so existing call sites keep working; it
+    delegates to the exact same jitted functions, so results are bit-for-bit
+    identical to the functional path.
+    """
+
+    def __init__(self, config: ESRNNConfig, *, _warn: bool = True):
+        if _warn:
+            warnings.warn(
+                "ESRNN is deprecated; use repro.forecast.ESRNNForecaster or "
+                "the pure esrnn_init/esrnn_loss/esrnn_forecast functions",
+                DeprecationWarning,
+                stacklevel=2,
+            )
         self.config = config
 
-    # -- params ------------------------------------------------------------
-
     def init(self, key, n_series: int):
-        cfg = self.config
-        rnn_key, head_key1, head_key2 = jax.random.split(key, 3)
-        feat = cfg.input_size + cfg.n_categories
-        hw = hw_init_params(
-            n_series, cfg.seasonality, seasonality2=cfg.seasonality2, dtype=cfg.jdtype
-        )
-        rnn = drnn_init(rnn_key, feat, cfg.hidden_size, cfg.dilations, cfg.jdtype)
-        scale = 1.0 / jnp.sqrt(jnp.asarray(cfg.hidden_size, jnp.float32))
-        head = {
-            "dense_w": (jax.random.uniform(head_key1, (cfg.hidden_size, cfg.hidden_size), jnp.float32, -1, 1) * scale).astype(cfg.jdtype),
-            "dense_b": jnp.zeros((cfg.hidden_size,), cfg.jdtype),
-            "out_w": (jax.random.uniform(head_key2, (cfg.hidden_size, cfg.output_size), jnp.float32, -1, 1) * scale).astype(cfg.jdtype),
-            "out_b": jnp.zeros((cfg.output_size,), cfg.jdtype),
-        }
-        params = {"hw": hw, "rnn": rnn, "head": head}
-        if cfg.attention:
-            ka, kb, kc = jax.random.split(head_key1, 3)
-            h = cfg.hidden_size
-            params["attn"] = {
-                "wq": (jax.random.normal(ka, (h, h)) * scale).astype(cfg.jdtype),
-                "wk": (jax.random.normal(kb, (h, h)) * scale).astype(cfg.jdtype),
-                "wv": (jax.random.normal(kc, (h, h)) * scale).astype(cfg.jdtype),
-            }
-        return params
+        return esrnn_init(key, self.config, n_series)
 
-    # -- shared internals ---------------------------------------------------
+    def loss_fn(self, params, y, cats, mask=None):
+        return esrnn_loss(self.config, params, y, cats, mask)
 
-    def _smooth(self, params, y):
-        cfg = self.config
-        return hw_smooth(
-            y,
-            params["hw"],
-            seasonality=cfg.seasonality,
-            seasonality2=cfg.seasonality2,
-            use_pallas=cfg.use_pallas,
-        )
-
-    def _windows(self, y, levels, seas):
-        """Input/output windows, normalized + de-seasonalized + log (Eq. 6).
-
-        Positions t = W-1 .. T-1. Output windows need y up to t+H, so the
-        last H positions have no (complete) target; a position-validity mask
-        is returned alongside. Returns:
-          feats (N, P, W), out  (N, P, H), out_mask (N, P, H) in {0,1}
-        """
-        cfg = self.config
-        n, t_len = y.shape
-        w, h = cfg.input_size, cfg.output_size
-        pos = jnp.arange(w - 1, t_len)                       # (P,)
-        p = pos.shape[0]
-
-        in_idx = pos[:, None] + jnp.arange(-w + 1, 1)[None, :]     # (P, W)
-        out_idx = pos[:, None] + jnp.arange(1, h + 1)[None, :]     # (P, H)
-        out_valid = out_idx < t_len                                # (P, H)
-        out_idx_c = jnp.minimum(out_idx, t_len - 1)
-
-        y_in = y[:, in_idx]                                   # (N, P, W)
-        s_in = seas[:, in_idx]
-        lvl = levels[:, pos]                                  # (N, P)
-        x_in = jnp.log(jnp.maximum(y_in / (lvl[:, :, None] * s_in), 1e-8))
-
-        y_out = y[:, out_idx_c]                               # (N, P, H)
-        # seasonality for t+1..t+H: seas has T+m entries; clamp + cyclic tile
-        # is handled by indexing into the (N, T+m) array -- indices t+k with
-        # k <= H. For H > m beyond T they would run past T+m; clamp into the
-        # last season cyclically.
-        m = max(cfg.seasonality, 1)
-        s_idx = jnp.where(
-            out_idx < t_len + m,
-            out_idx,
-            t_len + jnp.mod(out_idx - t_len, m),
-        )
-        s_out = seas[:, s_idx]
-        y_out_n = jnp.log(jnp.maximum(y_out / (lvl[:, :, None] * s_out), 1e-8))
-        out_mask = out_valid[None, :, :].astype(y.dtype) * jnp.ones((n, 1, 1), y.dtype)
-        return x_in, y_out_n, out_mask, pos
-
-    def _rnn_head(self, params, feats):
-        cfg = self.config
-        hid, c_sq = drnn_apply(
-            params["rnn"], feats, dilations=cfg.dilations, use_pallas=cfg.use_pallas
-        )
-        if cfg.attention:
-            ap = params["attn"]
-            q = hid @ ap["wq"]
-            k = hid @ ap["wk"]
-            v = hid @ ap["wv"]
-            s = jnp.einsum("nph,nqh->npq", q, k) / jnp.sqrt(
-                jnp.asarray(cfg.hidden_size, jnp.float32)).astype(hid.dtype)
-            p_idx = jnp.arange(hid.shape[1])
-            mask = p_idx[:, None] >= p_idx[None, :]
-            s = jnp.where(mask[None], s.astype(jnp.float32), -jnp.inf)
-            hid = hid + jnp.einsum(
-                "npq,nqh->nph", jax.nn.softmax(s, axis=-1).astype(v.dtype), v)
-        head = params["head"]
-        z = jnp.tanh(hid @ head["dense_w"] + head["dense_b"])
-        return z @ head["out_w"] + head["out_b"], c_sq
-
-    def _features(self, x_in, cats):
-        n, p, _ = x_in.shape
-        cat_feat = jnp.broadcast_to(cats[:, None, :], (n, p, cats.shape[-1]))
-        return jnp.concatenate([x_in, cat_feat.astype(x_in.dtype)], axis=-1)
-
-    # -- public API ----------------------------------------------------------
-
-    @partial(jax.jit, static_argnames=("self",))
-    def loss_fn(self, params, y, cats):
-        """Training loss on series y (N, T) with category one-hots (N, C)."""
-        cfg = self.config
-        levels, seas = self._smooth(params, y)
-        x_in, y_out_n, out_mask, _pos = self._windows(y, levels, seas)
-        feats = self._features(x_in, cats)
-        yhat_n, c_sq = self._rnn_head(params, feats)
-        loss = L.pinball_loss(yhat_n, y_out_n, tau=cfg.tau, mask=out_mask)
-        loss = loss + L.level_variability_penalty(levels, cfg.level_penalty)
-        loss = loss + L.cstate_penalty(c_sq, cfg.cstate_penalty)
-        return loss
-
-    @partial(jax.jit, static_argnames=("self",))
     def forecast(self, params, y, cats):
-        """h-step forecast from the end of y: (N, H), de-normalized (3.4)."""
-        cfg = self.config
-        n, t_len = y.shape
-        levels, seas = self._smooth(params, y)
-        x_in, _, _, _pos = self._windows(y, levels, seas)
-        feats = self._features(x_in, cats)
-        yhat_n, _ = self._rnn_head(params, feats)
-        last = yhat_n[:, -1, :]                              # (N, H) log-space
-        s_fut = extend_seasonality(seas, t_len, cfg.output_size, cfg.seasonality)
-        return jnp.exp(last) * levels[:, -1:][:, :] * s_fut
+        return esrnn_forecast(self.config, params, y, cats)
 
     def loss_and_grad(self, params, y, cats):
-        return jax.value_and_grad(lambda p: self.loss_fn(p, y, cats))(params)
+        return esrnn_loss_and_grad(self.config, params, y, cats)
+
+
+def _as_config(model_or_cfg) -> ESRNNConfig:
+    if isinstance(model_or_cfg, ESRNN):
+        return model_or_cfg.config
+    return model_or_cfg
 
 
 # ---------------------------------------------------------------------------
@@ -229,18 +346,17 @@ class ESRNN:
 # ---------------------------------------------------------------------------
 
 
-def esrnn_loss_loop_reference(model: ESRNN, params, y, cats) -> jax.Array:
+def esrnn_loss_loop_reference(model_or_cfg, params, y, cats) -> jax.Array:
     """Compute the same loss one series at a time (batch of 1 each).
 
     Used by the equivalence test and the Table-5 speedup benchmark: identical
     math, but the series axis is a python loop as in Smyl's original C++.
+    Accepts either an :class:`ESRNNConfig` or the legacy :class:`ESRNN` shim.
     """
+    cfg = _as_config(model_or_cfg)
     n = y.shape[0]
-    tree = jax.tree_util.tree_map
-
     losses = []
     for i in range(n):
-        p_i = {k: (tree(lambda a: a[i : i + 1], v) if k == "hw" else v)
-               for k, v in params.items()}
-        losses.append(model.loss_fn(p_i, y[i : i + 1], cats[i : i + 1]))
+        p_i = gather_series(params, slice(i, i + 1))
+        losses.append(esrnn_loss(cfg, p_i, y[i : i + 1], cats[i : i + 1]))
     return jnp.mean(jnp.stack(losses))

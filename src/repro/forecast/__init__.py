@@ -1,0 +1,40 @@
+"""Unified forecasting API: spec registry, estimator, batched serving.
+
+    from repro.forecast import ESRNNForecaster, get_spec
+
+    f = ESRNNForecaster("esrnn-quarterly").fit()
+    f.predict(); f.evaluate(); f.save("/tmp/fq")
+
+CLI: ``python -m repro.launch.forecast {fit|predict|eval|serve} ...``.
+
+Submodules are imported lazily (PEP 562) so that ``repro.train.trainer`` can
+import :mod:`repro.forecast.spec` without a cycle through the estimator.
+"""
+
+from __future__ import annotations
+
+from repro.forecast.spec import ForecastSpec, get_smoke_spec, get_spec, list_specs
+
+__all__ = [
+    "ForecastSpec", "get_spec", "get_smoke_spec", "list_specs",
+    "ESRNNForecaster", "NotFittedError",
+    "BatchedForecastServer", "ForecastRequest", "ServeStats",
+    "synthetic_request_stream",
+]
+
+_LAZY = {
+    "ESRNNForecaster": "repro.forecast.estimator",
+    "NotFittedError": "repro.forecast.estimator",
+    "BatchedForecastServer": "repro.forecast.serving",
+    "ForecastRequest": "repro.forecast.serving",
+    "ServeStats": "repro.forecast.serving",
+    "synthetic_request_stream": "repro.forecast.serving",
+}
+
+
+def __getattr__(name: str):
+    if name in _LAZY:
+        import importlib
+
+        return getattr(importlib.import_module(_LAZY[name]), name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

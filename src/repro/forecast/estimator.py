@@ -1,0 +1,291 @@
+"""ESRNNForecaster: estimator-style entry point for the hybrid ES-RNN.
+
+One object, five verbs -- the whole paper workflow behind a stable surface:
+
+    f = ESRNNForecaster("esrnn-quarterly")          # or a ForecastSpec
+    f.fit(data)                                     # joint two-group training
+    yhat = f.predict()                              # (N, H) point forecast
+    bands = f.predict_quantiles(taus=(0.1, 0.5, 0.9))
+    scores = f.evaluate(split="test")               # sMAPE/MASE/OWA vs
+                                                    # Comb / Naive2
+    f.save(path);  g = ESRNNForecaster.load(path)   # shared Checkpointer
+
+The estimator wraps the pure ``esrnn_init/esrnn_loss/esrnn_forecast``
+functions from ``repro.core.esrnn`` -- it holds state (spec, params, data),
+the math stays functional and jitted.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.core import losses as L
+from repro.core.comb import comb_forecast, naive2_forecast
+from repro.core.esrnn import (
+    esrnn_forecast, esrnn_init, esrnn_loss, esrnn_loss_and_grad, gather_series,
+)
+from repro.core.holt_winters import hw_smooth
+from repro.data.pipeline import PreparedData, prepare
+from repro.data.synthetic_m4 import M4Dataset, generate
+from repro.forecast.spec import ForecastSpec, get_spec
+from repro.train.trainer import train_from_spec
+
+_META_FILE = "forecaster.json"
+
+
+class NotFittedError(RuntimeError):
+    pass
+
+
+class ESRNNForecaster:
+    """Scikit-style estimator over the vectorized ES-RNN."""
+
+    def __init__(self, spec: Union[str, ForecastSpec] = "esrnn-quarterly",
+                 **overrides):
+        if isinstance(spec, str):
+            spec = get_spec(spec, **overrides)
+        elif overrides:
+            spec = spec.replace(**overrides)
+        self.spec = spec
+        self.params_: Optional[Dict] = None
+        self.history_: Optional[Dict] = None
+        self.n_series_: Optional[int] = None
+        self.data_: Optional[PreparedData] = None
+        self.cats_: Optional[np.ndarray] = None   # fitted one-hots, persisted
+
+    # -- config shortcuts ----------------------------------------------------
+
+    @property
+    def config(self):
+        return self.spec.model
+
+    @property
+    def horizon(self) -> int:
+        return self.spec.horizon
+
+    def _check_fitted(self):
+        if self.params_ is None:
+            raise NotFittedError(
+                "this ESRNNForecaster has no params; call fit(), "
+                "init_params(), or load() first")
+
+    # -- data ----------------------------------------------------------------
+
+    def make_data(self) -> PreparedData:
+        """Spec-driven synthetic M4 slice (Tables 2/3 profile, section 5)."""
+        spec = self.spec
+        ds = generate(spec.frequency, scale=spec.data_scale, seed=spec.data_seed)
+        return prepare(ds, min_length=spec.min_length,
+                       variable_length=spec.variable_length)
+
+    def _coerce_data(self, data) -> PreparedData:
+        if data is None:
+            return self.make_data()
+        if isinstance(data, M4Dataset):
+            return prepare(data, min_length=self.spec.min_length,
+                           variable_length=self.spec.variable_length)
+        if isinstance(data, PreparedData):
+            return data
+        raise TypeError(f"cannot fit on {type(data).__name__}; "
+                        "pass PreparedData, M4Dataset, or None")
+
+    # -- fit -----------------------------------------------------------------
+
+    def init_params(self, n_series: int, seed: Optional[int] = None):
+        """Primer initialization without training (cold-start serving)."""
+        seed = self.spec.seed if seed is None else seed
+        self.params_ = esrnn_init(jax.random.PRNGKey(seed), self.config, n_series)
+        self.n_series_ = n_series
+        return self.params_
+
+    def fit(self, data=None, *, ckpt_dir: Optional[str] = None,
+            n_steps: Optional[int] = None, hooks=None) -> "ESRNNForecaster":
+        """Joint two-group training (spec's rnn_lr / hw_lr); returns self."""
+        pdata = self._coerce_data(data)
+        out = train_from_spec(self.spec, pdata, ckpt_dir=ckpt_dir,
+                              n_steps=n_steps, params=self.params_, hooks=hooks)
+        self.params_ = out["params"]
+        self.history_ = out["history"]
+        self.n_series_ = pdata.n_series
+        self.data_ = pdata
+        self.cats_ = np.asarray(pdata.cats, np.float32)
+        return self
+
+    # -- predict -------------------------------------------------------------
+
+    def _resolve_inputs(self, y, cats, series_idx):
+        self._check_fitted()
+        if y is None:
+            if self.data_ is None:
+                raise NotFittedError("predict() without y requires fit(data)")
+            y = self.data_.train
+        y = jnp.asarray(y, self.config.jdtype)
+        if cats is None and self.cats_ is not None:
+            # fitted categories: the rows of y are (a subset of) the fitted
+            # series, so reuse their one-hots rather than zeroing the feature
+            # (survives save/load -- cats_ is persisted in forecaster.json)
+            if series_idx is not None:
+                cats = self.cats_[np.asarray(series_idx)]
+            elif y.shape[0] == self.cats_.shape[0]:
+                cats = self.cats_
+        if cats is None:
+            cats = jnp.zeros((y.shape[0], self.config.n_categories))
+        cats = jnp.asarray(cats, self.config.jdtype)
+        params = self.params_
+        if series_idx is not None:
+            params = gather_series(params, np.asarray(series_idx))
+        n_hw = params["hw"].alpha_logit.shape[0]
+        if y.shape[0] != n_hw:
+            raise ValueError(
+                f"y has {y.shape[0]} series but the fitted per-series table "
+                f"has {n_hw}; pass series_idx to select rows")
+        return params, y, cats
+
+    def predict(self, y=None, cats=None, *,
+                series_idx: Optional[Sequence[int]] = None) -> np.ndarray:
+        """Point forecast (N, H) from the end of each series (Eq. 5).
+
+        With no arguments, forecasts the fitted training series. ``y`` may be
+        any history for the fitted series (e.g. train+val to forecast the test
+        window); ``series_idx`` selects per-series HW rows when y is a subset.
+        """
+        params, y, cats = self._resolve_inputs(y, cats, series_idx)
+        return np.asarray(esrnn_forecast(self.config, params, y, cats))
+
+    def predict_quantiles(
+        self, y=None, cats=None, *, taus: Tuple[float, ...] = (0.1, 0.5, 0.9),
+        series_idx: Optional[Sequence[int]] = None,
+    ) -> Dict[float, np.ndarray]:
+        """Quantile bands around the point forecast.
+
+        The model is trained on a single pinball quantile (spec ``tau``), so
+        its output is one quantile path. Bands are derived from the fitted
+        Holt-Winters in-sample residuals: the multiplicative model says
+        y_t = l_t * s_t * eps_t, so per-series log-residual spread sigma gives
+        q_tau(h) = yhat * exp(z_tau * sigma * sqrt(h)) -- a random-walk
+        widening in log-space (beyond-paper convenience; tau=0.5 returns the
+        point forecast exactly).
+        """
+        params, y, cats = self._resolve_inputs(y, cats, series_idx)
+        point = esrnn_forecast(self.config, params, y, cats)      # (N, H)
+        levels, seas = hw_smooth(
+            y, params["hw"], seasonality=self.config.seasonality,
+            seasonality2=self.config.seasonality2,
+            use_pallas=self.config.use_pallas)
+        t_len = y.shape[1]
+        fitted = levels * seas[:, :t_len]
+        log_resid = jnp.log(jnp.maximum(y, 1e-8)) - jnp.log(
+            jnp.maximum(fitted, 1e-8))
+        sigma = jnp.std(log_resid, axis=1, keepdims=True)          # (N, 1)
+        steps = jnp.sqrt(jnp.arange(1, self.horizon + 1))[None, :]  # (1, H)
+        out = {}
+        for tau in taus:
+            z = jax.scipy.special.ndtri(jnp.asarray(tau, jnp.float32))
+            out[tau] = np.asarray(point * jnp.exp(z * sigma * steps))
+        return out
+
+    # -- loss (golden-equivalence surface + benchmarks) ----------------------
+
+    def loss(self, y, cats) -> jax.Array:
+        """Training loss through the estimator (same jitted fn the fit uses)."""
+        self._check_fitted()
+        return esrnn_loss(self.config, self.params_,
+                          jnp.asarray(y), jnp.asarray(cats))
+
+    def loss_and_grad(self, y, cats):
+        self._check_fitted()
+        return esrnn_loss_and_grad(self.config, self.params_,
+                                   jnp.asarray(y), jnp.asarray(cats))
+
+    # -- evaluate ------------------------------------------------------------
+
+    def evaluate(self, data: Optional[PreparedData] = None,
+                 split: str = "test") -> Dict[str, float]:
+        """M4-style scores: sMAPE/MASE/OWA vs the Comb and Naive2 benchmarks.
+
+        ``split="test"`` forecasts from train+val and scores on the test
+        window (Eq. 7); ``split="val"`` forecasts from train and scores on
+        the validation window.
+        """
+        self._check_fitted()
+        data = data if data is not None else self.data_
+        if data is None:
+            raise NotFittedError("evaluate() needs PreparedData (fit or pass)")
+        if split == "test":
+            insample, target = data.val_input, data.test_target
+        elif split == "val":
+            insample, target = data.train, data.val_target
+        else:
+            raise ValueError(f"split must be 'val' or 'test', got {split!r}")
+        m, h = data.seasonality, min(self.horizon, target.shape[1])
+        target_j = jnp.asarray(target[:, :h])
+        insample_j = jnp.asarray(insample)
+
+        fc = self.predict(insample, data.cats)[:, :h]
+        fc_comb = np.asarray(comb_forecast(insample, h, m), np.float32)
+        fc_n2 = np.asarray(naive2_forecast(insample, h, m), np.float32)
+
+        def score(f):
+            f = jnp.asarray(f)
+            return (float(L.smape(f, target_j)),
+                    float(L.mase(f, target_j, insample_j, m)))
+
+        s_es, m_es = score(fc)
+        s_cb, m_cb = score(fc_comb)
+        s_n2, m_n2 = score(fc_n2)
+        return {
+            "split": split,
+            "smape": s_es, "mase": m_es,
+            "owa": float(L.owa(s_es, m_es, s_n2, m_n2)),
+            "smape_comb": s_cb, "mase_comb": m_cb,
+            "owa_comb": float(L.owa(s_cb, m_cb, s_n2, m_n2)),
+            "smape_naive2": s_n2, "mase_naive2": m_n2,
+        }
+
+    # -- persistence (shared Checkpointer) -----------------------------------
+
+    def save(self, directory: str) -> str:
+        """Persist spec + params atomically via the shared Checkpointer.
+
+        Params live under ``<directory>/params/`` so a saved estimator can
+        share a directory with trainer checkpoints (``fit(ckpt_dir=...)``
+        writes ``step_<n>/`` trees of (params, opt_state) at the top level;
+        colliding with those would corrupt crash-resume).
+        """
+        self._check_fitted()
+        ckpt = Checkpointer(os.path.join(directory, "params"), keep=self.spec.keep)
+        step = len(self.history_["loss"]) if self.history_ else 0
+        ckpt.save(step, self.params_)
+        meta = {
+            "spec": self.spec.to_dict(),
+            "n_series": int(self.n_series_),
+            "step": step,
+            "cats": self.cats_.tolist() if self.cats_ is not None else None,
+        }
+        tmp = os.path.join(directory, _META_FILE + ".tmp")
+        with open(tmp, "w") as f:
+            json.dump(meta, f, indent=2)
+        os.replace(tmp, os.path.join(directory, _META_FILE))
+        return directory
+
+    @classmethod
+    def load(cls, directory: str) -> "ESRNNForecaster":
+        with open(os.path.join(directory, _META_FILE)) as f:
+            meta = json.load(f)
+        spec = ForecastSpec.from_dict(meta["spec"])
+        f = cls(spec)
+        template = esrnn_init(
+            jax.random.PRNGKey(spec.seed), spec.model, meta["n_series"])
+        _, f.params_ = Checkpointer(
+            os.path.join(directory, "params")).restore(template, step=meta["step"])
+        f.n_series_ = meta["n_series"]
+        if meta.get("cats") is not None:
+            f.cats_ = np.asarray(meta["cats"], np.float32)
+        return f

@@ -1,0 +1,136 @@
+"""ForecastSpec: the single registry behind the unified forecasting API.
+
+Mirrors the arch-string pattern of ``repro.configs.get_config`` for the
+paper's own model: one name resolves the full recipe -- model hyperparameters
+(subsuming ``core.esrnn.PRESETS``), data preparation, and the two-group
+training setup (per-series Holt-Winters vs shared-RNN learning rates are
+first-class fields, Smyl's joint-training arrangement).
+
+    spec = get_spec("esrnn-quarterly", n_steps=500, hidden_size=64)
+    smoke = get_smoke_spec("esrnn-quarterly")
+
+Override kwargs are routed by field name: ``ESRNNConfig`` fields go into the
+nested model config, everything else into the spec itself.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+from repro.core.esrnn import ESRNNConfig, make_config
+
+_MODEL_FIELDS = {f.name for f in dataclasses.fields(ESRNNConfig)} - {"name"}
+
+
+@dataclasses.dataclass(frozen=True)
+class ForecastSpec:
+    """Everything needed to fit / predict / eval / serve one forecaster."""
+
+    name: str                        # registry name, e.g. "esrnn-quarterly"
+    model: ESRNNConfig
+
+    # -- data preparation (paper section 5) --------------------------------
+    data_scale: float = 0.01         # fraction of the Table-2 series counts
+    data_seed: int = 0
+    min_length: Optional[int] = None # None -> pipeline.MIN_LENGTH[frequency]
+    variable_length: bool = False    # section 8.1 left-pad + mask path
+
+    # -- joint two-group training (paper section 3.2) ----------------------
+    batch_size: int = 256
+    n_steps: int = 300
+    rnn_lr: float = 1e-3             # shared RNN / head / attention weights
+    hw_lr: float = 1e-2              # per-series Holt-Winters parameters
+                                     # (Smyl: ~10x the shared-weight lr)
+    clip_norm: Optional[float] = 20.0
+    seed: int = 0
+    eval_every: int = 50
+    ckpt_every: int = 50
+    keep: int = 3
+    smoke: bool = False
+
+    @property
+    def frequency(self) -> str:
+        return self.model.name
+
+    @property
+    def horizon(self) -> int:
+        return self.model.output_size
+
+    def replace(self, **overrides) -> "ForecastSpec":
+        """Override by field name; model-config fields route into ``model``."""
+        model_kw = {k: v for k, v in overrides.items() if k in _MODEL_FIELDS}
+        spec_kw = {k: v for k, v in overrides.items() if k not in _MODEL_FIELDS}
+        unknown = [k for k in spec_kw
+                   if k not in {f.name for f in dataclasses.fields(ForecastSpec)}]
+        if unknown:
+            raise TypeError(f"unknown ForecastSpec override(s): {unknown}")
+        spec = self
+        if model_kw:
+            if isinstance(model_kw.get("dilations"), list):
+                model_kw["dilations"] = tuple(tuple(d) for d in model_kw["dilations"])
+            spec = dataclasses.replace(
+                spec, model=dataclasses.replace(spec.model, **model_kw))
+        if spec_kw:
+            spec = dataclasses.replace(spec, **spec_kw)
+        return spec
+
+    # -- serialization (estimator save/load) --------------------------------
+
+    def to_dict(self) -> Dict:
+        d = dataclasses.asdict(self)
+        d["model"]["dilations"] = [list(g) for g in self.model.dilations]
+        return d
+
+    @staticmethod
+    def from_dict(d: Dict) -> "ForecastSpec":
+        model_kw = dict(d["model"])
+        model_kw["dilations"] = tuple(tuple(g) for g in model_kw["dilations"])
+        spec_kw = {k: v for k, v in d.items() if k != "model"}
+        return ForecastSpec(model=ESRNNConfig(**model_kw), **spec_kw)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+# Frequency -> spec-level defaults beyond the shared dataclass defaults.
+_FREQ_SPECS: Dict[str, Dict] = {
+    "yearly": dict(),
+    "quarterly": dict(),
+    "monthly": dict(),
+    "hourly": dict(batch_size=64, data_scale=0.05),
+}
+
+# Per-frequency smoke shrinkage: tiny model + tiny run, same code paths.
+_SMOKE_OVERRIDES = dict(
+    data_scale=0.002, batch_size=16, n_steps=20, eval_every=10,
+    ckpt_every=10, hidden_size=8, smoke=True,
+)
+
+
+def list_specs() -> List[str]:
+    return [f"esrnn-{freq}" for freq in _FREQ_SPECS]
+
+
+def get_spec(name: str, **overrides) -> ForecastSpec:
+    """Resolve a registry name (+ optional overrides) into a ForecastSpec.
+
+    Accepts ``esrnn-<freq>``, the launcher-facing ``m4-<freq>`` alias from
+    ``repro.configs.ESRNN_CONFIGS``, or a bare frequency name.
+    """
+    freq = name
+    for prefix in ("esrnn-", "m4-"):
+        if freq.startswith(prefix):
+            freq = freq[len(prefix):]
+    if freq not in _FREQ_SPECS:
+        raise KeyError(
+            f"unknown forecast spec {name!r}; available: {list_specs()}")
+    spec = ForecastSpec(
+        name=f"esrnn-{freq}", model=make_config(freq), **_FREQ_SPECS[freq])
+    return spec.replace(**overrides) if overrides else spec
+
+
+def get_smoke_spec(name: str, **overrides) -> ForecastSpec:
+    """Smoke variant: same pipeline end-to-end, seconds on CPU."""
+    return get_spec(name).replace(**{**_SMOKE_OVERRIDES, **overrides})

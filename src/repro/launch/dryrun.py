@@ -126,19 +126,19 @@ ESRNN_CELLS = {
 
 
 def lower_esrnn(arch: str, shape: str, mesh):
-    from repro.core.esrnn import ESRNN, make_config
+    from repro.core.esrnn import esrnn_init, esrnn_loss, make_config
     from repro.train.optimizer import AdamConfig, adam_init, adam_update, esrnn_group_fn
 
     freq = arch.split("-", 1)[1]
     cfg = make_config(freq)
     cell = ESRNN_CELLS[shape]
     n, t_len = cell["n_series"], cell["t_len"]
-    model = ESRNN(cfg)
     axes = specs.axes_for(mesh)
     specs.set_mesh(mesh)
     dp = axes["dp"]
 
-    params_abs = jax.eval_shape(lambda k: model.init(k, n), jax.random.PRNGKey(0))
+    params_abs = jax.eval_shape(
+        lambda k: esrnn_init(k, cfg, n), jax.random.PRNGKey(0))
 
     def esrnn_param_spec(path, leaf):
         names = specs._path_names(path)
@@ -156,7 +156,7 @@ def lower_esrnn(arch: str, shape: str, mesh):
 
     def train_step(params, opt_state, y, cats):
         loss, grads = jax.value_and_grad(
-            lambda p: model.loss_fn(p, y, cats))(params)
+            lambda p: esrnn_loss(cfg, p, y, cats))(params)
         params, opt_state = adam_update(grads, opt_state, params, adam,
                                         group_fn=esrnn_group_fn)
         return params, opt_state, loss

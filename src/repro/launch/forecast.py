@@ -1,0 +1,186 @@
+"""Forecast launcher: the one CLI over the unified ESRNNForecaster API.
+
+    PYTHONPATH=src python -m repro.launch.forecast fit     --spec esrnn-quarterly --smoke
+    PYTHONPATH=src python -m repro.launch.forecast predict --dir /tmp/fq
+    PYTHONPATH=src python -m repro.launch.forecast eval    --spec esrnn-quarterly --smoke
+    PYTHONPATH=src python -m repro.launch.forecast serve   --smoke --requests 64
+
+``fit`` trains (spec-driven synthetic M4 by default) and optionally saves the
+estimator; ``predict``/``eval`` run on a saved estimator (``--dir``) or fit a
+fresh one; ``serve`` runs the batched pad-to-bucket forecast server over a
+synthetic ragged request stream and reports throughput + jit-cache reuse,
+mirroring the prefill/decode serving loop of ``repro.launch.serve``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import logging
+
+import numpy as np
+
+from repro.forecast import (
+    BatchedForecastServer, ESRNNForecaster, get_smoke_spec, get_spec,
+    list_specs, synthetic_request_stream,
+)
+
+log = logging.getLogger("repro.launch.forecast")
+
+
+def _parse_overrides(pairs):
+    out = {}
+    for pair in pairs or []:
+        key, eq, val = pair.partition("=")
+        if not eq or not key or not val:
+            raise SystemExit(
+                f"error: --set expects KEY=VAL, got {pair!r}")
+        if val.lower() in ("true", "false"):
+            out[key] = val.lower() == "true"
+            continue
+        try:
+            out[key] = int(val)
+        except ValueError:
+            try:
+                out[key] = float(val)
+            except ValueError:
+                out[key] = val
+    return out
+
+
+def _build(args) -> ESRNNForecaster:
+    over = _parse_overrides(getattr(args, "set", None))
+    if getattr(args, "steps", None) is not None:
+        over["n_steps"] = args.steps
+    spec = (get_smoke_spec(args.spec, **over) if args.smoke
+            else get_spec(args.spec, **over))
+    return ESRNNForecaster(spec)
+
+
+def _fitted(args) -> ESRNNForecaster:
+    """Saved estimator if --dir given, else a freshly fitted one."""
+    if getattr(args, "dir", None):
+        f = ESRNNForecaster.load(args.dir)
+        f.data_ = f.make_data()
+        return f
+    f = _build(args)
+    log.info("no --dir: fitting %s for %d steps", f.spec.name, f.spec.n_steps)
+    return f.fit()
+
+
+def cmd_fit(args):
+    f = _build(args)
+    f.fit(ckpt_dir=args.ckpt_dir)
+    h = f.history_["loss"]
+    if h:
+        print(f"{f.spec.name}: {len(h)} steps, loss {h[0]:.4f} -> {h[-1]:.4f}, "
+              f"{f.n_series_} series")
+    else:
+        print(f"{f.spec.name}: resumed from a finished checkpoint, "
+              f"{f.n_series_} series")
+    if f.history_["val_smape"]:
+        step, vs = f.history_["val_smape"][-1]
+        print(f"val sMAPE @ step {step}: {vs:.3f}")
+    if args.out_dir:
+        print("saved to", f.save(args.out_dir))
+    return 0
+
+
+def cmd_predict(args):
+    f = _fitted(args)
+    if args.quantiles:
+        taus = tuple(float(t) for t in args.quantiles.split(","))
+        bands = f.predict_quantiles(taus=taus)
+        for tau in taus:
+            print(f"tau={tau}: first series", np.round(bands[tau][0], 2))
+    else:
+        fc = f.predict()
+        print(f"forecast {fc.shape}; first series", np.round(fc[0], 2))
+    return 0
+
+
+def cmd_eval(args):
+    f = _fitted(args)
+    scores = f.evaluate(split=args.split)
+    print(f"{f.spec.name} [{args.split}]")
+    for suffix, label in (("", "esrnn"), ("_comb", "comb"), ("_naive2", "naive2")):
+        smape = scores[f"smape{suffix}"]
+        mase = scores[f"mase{suffix}"]
+        owa = scores.get(f"owa{suffix}")
+        owa_s = f"  owa {owa:7.3f}" if owa is not None else ""
+        print(f"  {label:8s} smape {smape:7.3f}  mase {mase:7.3f}{owa_s}")
+    return 0
+
+
+def cmd_serve(args):
+    f = _fitted(args)
+    srv = BatchedForecastServer(
+        f.config, f.params_,
+        length_buckets=tuple(int(b) for b in args.length_buckets.split(",")),
+        batch_buckets=tuple(int(b) for b in args.batch_buckets.split(",")),
+        max_batch=args.max_batch,
+    )
+    rng_seeds = range(args.waves)
+    for w in rng_seeds:
+        reqs = synthetic_request_stream(
+            f.config, args.requests, n_known=f.n_series_ or 0, seed=w)
+        out = srv.forecast_batch(reqs)
+        assert all(np.isfinite(o).all() for o in out)
+    s = srv.stats
+    print(f"served {s.requests} requests in {s.batches} batches over "
+          f"{args.waves} waves: {s.requests_per_s:.0f} req/s")
+    print(f"jit cache: {s.compiles} compiles, {s.cache_hits} bucket hits "
+          f"({s.padded_series} padded lanes)")
+    return 0
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        prog="repro.launch.forecast",
+        description=__doc__, formatter_class=argparse.RawDescriptionHelpFormatter)
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    def common(p):
+        p.add_argument("--spec", default="esrnn-quarterly",
+                       help=f"registry name; one of {list_specs()}")
+        p.add_argument("--smoke", action="store_true",
+                       help="tiny model + tiny data, seconds on CPU")
+        p.add_argument("--steps", type=int, help="override spec n_steps")
+        p.add_argument("--set", action="append", metavar="KEY=VAL",
+                       help="spec/model override, e.g. --set hidden_size=16")
+
+    p_fit = sub.add_parser("fit", help="train an estimator")
+    common(p_fit)
+    p_fit.add_argument("--ckpt-dir", help="mid-training checkpoint/restart dir")
+    p_fit.add_argument("--out-dir", help="save the fitted estimator here")
+    p_fit.set_defaults(fn=cmd_fit)
+
+    p_pred = sub.add_parser("predict", help="point/quantile forecasts")
+    common(p_pred)
+    p_pred.add_argument("--dir", help="load a saved estimator")
+    p_pred.add_argument("--quantiles", help="comma list of taus, e.g. 0.1,0.5,0.9")
+    p_pred.set_defaults(fn=cmd_predict)
+
+    p_eval = sub.add_parser("eval", help="sMAPE/MASE/OWA vs Comb/Naive2")
+    common(p_eval)
+    p_eval.add_argument("--dir", help="load a saved estimator")
+    p_eval.add_argument("--split", default="test", choices=["val", "test"])
+    p_eval.set_defaults(fn=cmd_eval)
+
+    p_srv = sub.add_parser("serve", help="batched pad-to-bucket forecast serving")
+    common(p_srv)
+    p_srv.add_argument("--dir", help="load a saved estimator")
+    p_srv.add_argument("--requests", type=int, default=64, help="per wave")
+    p_srv.add_argument("--waves", type=int, default=2,
+                       help="request waves (wave 2+ shows jit-cache reuse)")
+    p_srv.add_argument("--length-buckets", default="32,64,128,256")
+    p_srv.add_argument("--batch-buckets", default="1,4,16,64")
+    p_srv.add_argument("--max-batch", type=int, default=64)
+    p_srv.set_defaults(fn=cmd_serve)
+
+    args = ap.parse_args(argv)
+    logging.basicConfig(level=logging.INFO)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

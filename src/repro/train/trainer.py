@@ -26,7 +26,9 @@ import numpy as np
 
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.core import losses as L
-from repro.core.esrnn import ESRNN
+from repro.core.esrnn import (
+    _as_config, esrnn_forecast, esrnn_init, esrnn_loss, gather_series,
+)
 from repro.data.pipeline import PreparedData, batch_indices
 from repro.train.optimizer import AdamConfig, adam_init, adam_update, esrnn_group_fn
 
@@ -46,6 +48,28 @@ class TrainConfig:
     ckpt_dir: Optional[str] = None
     keep: int = 3
     straggler_factor: float = 3.0
+
+    @classmethod
+    def from_spec(cls, spec, *, ckpt_dir: Optional[str] = None,
+                  n_steps: Optional[int] = None) -> "TrainConfig":
+        """Build from a ``repro.forecast.ForecastSpec``.
+
+        The spec carries the two learning rates as first-class fields
+        (``rnn_lr`` for shared weights, ``hw_lr`` for the per-series HW
+        group); the trainer's group machinery consumes them as a ratio.
+        """
+        return cls(
+            batch_size=spec.batch_size,
+            n_steps=spec.n_steps if n_steps is None else n_steps,
+            lr=spec.rnn_lr,
+            per_series_lr_mult=spec.hw_lr / spec.rnn_lr,
+            clip_norm=spec.clip_norm,
+            seed=spec.seed,
+            eval_every=spec.eval_every,
+            ckpt_every=spec.ckpt_every,
+            ckpt_dir=ckpt_dir,
+            keep=spec.keep,
+        )
 
 
 class PreemptionHandler:
@@ -68,14 +92,20 @@ class PreemptionHandler:
 
 
 def train_esrnn(
-    model: ESRNN,
+    model,
     data: PreparedData,
     cfg: TrainConfig,
     *,
     params=None,
     hooks: Optional[Dict[str, Callable]] = None,
 ) -> Dict:
-    """Train; returns dict(params, history, resumed_from)."""
+    """Train; returns dict(params, history, resumed_from).
+
+    ``model`` may be an :class:`~repro.core.esrnn.ESRNNConfig` (preferred) or
+    the legacy ``ESRNN`` shim; training runs through the pure functional API
+    either way.
+    """
+    mcfg = _as_config(model)
     cfg_adam = AdamConfig(
         lr=cfg.lr,
         clip_norm=cfg.clip_norm,
@@ -83,7 +113,7 @@ def train_esrnn(
     )
     n = data.n_series
     if params is None:
-        params = model.init(jax.random.PRNGKey(cfg.seed), n)
+        params = esrnn_init(jax.random.PRNGKey(cfg.seed), mcfg, n)
     opt_state = adam_init(params)
     start_step = 0
 
@@ -94,18 +124,20 @@ def train_esrnn(
 
     y_all = jnp.asarray(data.train)
     cats_all = jnp.asarray(data.cats)
+    mask_all = jnp.asarray(data.mask)
 
     @jax.jit
     def step_fn(params, opt_state, idx):
         yb = y_all[idx]
         cb = cats_all[idx]
+        mb = mask_all[idx]
 
         def batch_loss(p):
             # per-series params are gathered for the batch; gradient scatter
             # back to the full table happens automatically through indexing.
-            pb = {k: (jax.tree_util.tree_map(lambda a: a[idx], v)
-                      if k == "hw" else v) for k, v in p.items()}
-            return model.loss_fn(pb, yb, cb)
+            # The observation mask keeps left-padded (variable-length)
+            # positions out of the loss; it is all-ones for equalized data.
+            return esrnn_loss(mcfg, gather_series(p, idx), yb, cb, mb)
 
         loss, grads = jax.value_and_grad(batch_loss)(params)
         params, opt_state = adam_update(
@@ -115,7 +147,7 @@ def train_esrnn(
 
     @jax.jit
     def val_smape(params):
-        fc = model.forecast(params, jnp.asarray(data.train), cats_all)
+        fc = esrnn_forecast(mcfg, params, jnp.asarray(data.train), cats_all)
         h = min(fc.shape[1], data.val_target.shape[1])
         return L.smape(fc[:, :h], jnp.asarray(data.val_target)[:, :h])
 
@@ -156,3 +188,22 @@ def train_esrnn(
 
     return {"params": params, "opt_state": opt_state, "history": history,
             "resumed_from": start_step}
+
+
+def train_from_spec(
+    spec,
+    data: PreparedData,
+    *,
+    ckpt_dir: Optional[str] = None,
+    n_steps: Optional[int] = None,
+    params=None,
+    hooks: Optional[Dict[str, Callable]] = None,
+) -> Dict:
+    """Spec-driven entry point: ``ForecastSpec`` in, trained params out.
+
+    This is the path ``repro.forecast.ESRNNForecaster.fit`` and the
+    ``repro.launch.forecast`` CLI use; the two-group learning rates come
+    straight from the spec's first-class ``rnn_lr`` / ``hw_lr`` fields.
+    """
+    cfg = TrainConfig.from_spec(spec, ckpt_dir=ckpt_dir, n_steps=n_steps)
+    return train_esrnn(spec.model, data, cfg, params=params, hooks=hooks)

@@ -80,6 +80,29 @@ def test_hourly_dual_seasonality_config():
     assert bool(jnp.isfinite(loss))
 
 
+def test_observation_mask_excludes_padded_windows(quarterly):
+    """Section 8.1: left-padded positions must not contribute to the loss."""
+    cfg, model, params, data = quarterly
+    n = 4
+    pb = {"hw": jax.tree_util.tree_map(lambda a: a[:n], params["hw"]),
+          "rnn": params["rnn"], "head": params["head"]}
+    y = np.asarray(data.train[:n]).copy()
+    t = y.shape[1]
+    pad = t // 2
+    y[:, :pad] = y[:, pad:pad + 1]  # fake left-padding (constant fill)
+    mask = np.ones_like(y)
+    mask[:, :pad] = 0.0
+    c = jnp.asarray(data.cats[:n])
+    yj = jnp.asarray(y)
+    masked = model.loss_fn(pb, yj, c, jnp.asarray(mask))
+    unmasked = model.loss_fn(pb, yj, c)
+    assert bool(jnp.isfinite(masked))
+    assert float(masked) != float(unmasked)  # padding excluded vs trained-on
+    # all-ones mask is bit-identical to no mask (the equalized default)
+    ones = model.loss_fn(pb, yj, c, jnp.ones_like(yj))
+    assert float(ones) == float(unmasked)
+
+
 def test_attentive_variant_trains():
     """Section 7/8.5: the attentive head (the piece whose absence the paper
     blamed for its yearly deficit). One train step must run + improve loss

@@ -1,0 +1,62 @@
+"""repro.launch.forecast CLI smoke: every subcommand end-to-end on CPU."""
+
+import pytest
+
+from repro.launch.forecast import main
+
+
+@pytest.fixture(scope="module")
+def saved_dir(tmp_path_factory):
+    d = str(tmp_path_factory.mktemp("fq"))
+    rc = main(["fit", "--spec", "esrnn-quarterly", "--smoke", "--steps", "3",
+               "--out-dir", d])
+    assert rc == 0
+    return d
+
+
+def test_fit_with_overrides(tmp_path, capsys):
+    rc = main(["fit", "--smoke", "--steps", "2", "--set", "hidden_size=4"])
+    assert rc == 0
+    assert "loss" in capsys.readouterr().out
+
+
+def test_set_parses_booleans():
+    from repro.launch.forecast import _parse_overrides
+
+    out = _parse_overrides(["use_pallas=false", "smoke=True", "n_steps=3",
+                            "rnn_lr=0.5", "name=x"])
+    assert out["use_pallas"] is False and out["smoke"] is True
+    assert out["n_steps"] == 3 and out["rnn_lr"] == 0.5 and out["name"] == "x"
+
+
+def test_fit_resume_from_finished_checkpoint(tmp_path, capsys):
+    ck = str(tmp_path / "ck")
+    assert main(["fit", "--smoke", "--steps", "2", "--ckpt-dir", ck]) == 0
+    capsys.readouterr()
+    assert main(["fit", "--smoke", "--steps", "2", "--ckpt-dir", ck]) == 0
+    assert "resumed from a finished checkpoint" in capsys.readouterr().out
+
+
+def test_predict_from_saved(saved_dir, capsys):
+    assert main(["predict", "--dir", saved_dir]) == 0
+    assert "forecast" in capsys.readouterr().out
+
+
+def test_predict_quantiles(saved_dir, capsys):
+    assert main(["predict", "--dir", saved_dir, "--quantiles", "0.1,0.9"]) == 0
+    out = capsys.readouterr().out
+    assert "tau=0.1" in out and "tau=0.9" in out
+
+
+def test_eval_from_saved(saved_dir, capsys):
+    assert main(["eval", "--dir", saved_dir, "--split", "val"]) == 0
+    out = capsys.readouterr().out
+    assert "esrnn" in out and "comb" in out and "naive2" in out
+
+
+def test_serve_smoke(saved_dir, capsys):
+    assert main(["serve", "--dir", saved_dir, "--requests", "8",
+                 "--waves", "2", "--length-buckets", "32,64",
+                 "--batch-buckets", "1,8"]) == 0
+    out = capsys.readouterr().out
+    assert "jit cache" in out and "compiles" in out

@@ -1,0 +1,96 @@
+"""Batched forecast serving tests: bucketing, jit-cache reuse, cold-start."""
+
+import numpy as np
+import pytest
+
+from repro.forecast import (
+    BatchedForecastServer, ESRNNForecaster, ForecastRequest, get_smoke_spec,
+    synthetic_request_stream,
+)
+
+
+@pytest.fixture(scope="module")
+def server():
+    f = ESRNNForecaster(get_smoke_spec("esrnn-quarterly", data_seed=5))
+    f.fit(n_steps=3)
+    srv = BatchedForecastServer(
+        f.config, f.params_,
+        length_buckets=(32, 64, 128), batch_buckets=(1, 4, 16))
+    return f, srv
+
+
+def test_ragged_stream_served_in_order(server):
+    f, srv = server
+    reqs = synthetic_request_stream(f.config, 20, n_known=f.n_series_, seed=0)
+    out = srv.forecast_batch(reqs)
+    assert len(out) == 20
+    for fc in out:
+        assert fc.shape == (f.config.output_size,)
+        assert np.isfinite(fc).all() and (fc > 0).all()
+
+
+def test_jit_cache_reuse_across_waves(server):
+    f, srv = server
+    srv.forecast_batch(synthetic_request_stream(f.config, 24, seed=1))
+    compiles_first = srv.stats.compiles
+    hits_before = srv.stats.cache_hits
+    srv.forecast_batch(synthetic_request_stream(f.config, 24, seed=1))
+    # replaying the wave: every bucket shape is already compiled
+    assert srv.stats.compiles == compiles_first
+    assert srv.stats.cache_hits > hits_before
+    # the cache can never exceed the bucket grid
+    assert srv.stats.compiles <= 3 * 3
+
+
+def test_length_bucketing_pads_and_trims():
+    f = ESRNNForecaster(get_smoke_spec("esrnn-quarterly"))
+    f.init_params(4)
+    srv = BatchedForecastServer(
+        f.config, f.params_, length_buckets=(32, 64), batch_buckets=(1, 4))
+    short = srv._shape_history(np.full(20, 7.0, np.float32), 32)
+    assert short.shape == (32,) and (short[:12] == 7.0).all()  # left-pad
+    long = srv._shape_history(np.arange(1, 101, dtype=np.float32), 64)
+    assert long.shape == (64,) and long[-1] == 100.0           # keep recent
+
+
+def test_cold_start_unknown_series_uses_primer(server):
+    f, srv = server
+    y = np.abs(np.random.default_rng(0).lognormal(3, 0.2, 40)).astype(np.float32) + 1
+    known = ForecastRequest(y=y, category=1, series_id=0)
+    unknown = ForecastRequest(y=y, category=1, series_id=None)
+    fc_known, fc_unknown = srv.forecast_batch([known, unknown])
+    assert np.isfinite(fc_known).all() and np.isfinite(fc_unknown).all()
+    # different HW rows -> (generically) different forecasts for the same y
+    assert not np.array_equal(fc_known, fc_unknown)
+
+
+def test_batch_padding_dropped_on_return(server):
+    f, srv = server
+    reqs = synthetic_request_stream(f.config, 3, seed=4)  # pads 3 -> bucket 4
+    out = srv.forecast_batch(reqs)
+    assert len(out) == 3
+
+
+def test_bad_category_degrades_to_cold_start_not_crash(server):
+    f, srv = server
+    y = np.abs(np.random.default_rng(1).lognormal(3, 0.2, 40)).astype(np.float32) + 1
+    good = ForecastRequest(y=y, category=1)
+    bad_hi = ForecastRequest(y=y, category=99)
+    bad_lo = ForecastRequest(y=y, category=-1)
+    out = srv.forecast_batch([good, bad_hi, bad_lo])
+    assert all(np.isfinite(o).all() for o in out)
+    # out-of-range categories share the all-zero one-hot
+    np.testing.assert_array_equal(out[1], out[2])
+
+
+def test_max_batch_clamped_to_largest_bucket():
+    """max_batch beyond the bucket grid must not produce oversized chunks."""
+    f = ESRNNForecaster(get_smoke_spec("esrnn-quarterly"))
+    f.init_params(4)
+    srv = BatchedForecastServer(
+        f.config, f.params_, length_buckets=(32,), batch_buckets=(1, 4),
+        max_batch=16)
+    assert srv.max_batch == 4
+    out = srv.forecast_batch(synthetic_request_stream(f.config, 10, seed=0))
+    assert len(out) == 10 and all(np.isfinite(o).all() for o in out)
+    assert srv.stats.padded_series >= 0

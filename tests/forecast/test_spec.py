@@ -1,0 +1,70 @@
+"""ForecastSpec registry tests: resolution, overrides, smoke variants."""
+
+import dataclasses
+
+import pytest
+
+from repro.core.esrnn import PRESETS
+from repro.forecast import ForecastSpec, get_smoke_spec, get_spec, list_specs
+
+
+def test_registry_covers_all_presets():
+    names = list_specs()
+    for freq in PRESETS:
+        assert f"esrnn-{freq}" in names
+
+
+@pytest.mark.parametrize("freq", list(PRESETS))
+def test_spec_subsumes_presets(freq):
+    spec = get_spec(f"esrnn-{freq}")
+    for field, value in PRESETS[freq].items():
+        assert getattr(spec.model, field) == value
+    assert spec.frequency == freq
+    assert spec.horizon == spec.model.output_size
+
+
+def test_name_aliases():
+    for name in ("esrnn-quarterly", "m4-quarterly", "quarterly"):
+        assert get_spec(name).name == "esrnn-quarterly"
+
+
+def test_unknown_name_raises():
+    with pytest.raises(KeyError, match="available"):
+        get_spec("esrnn-weekly")
+
+
+def test_overrides_route_by_field_name():
+    spec = get_spec("esrnn-quarterly", hidden_size=16, n_steps=7, hw_lr=0.5)
+    assert spec.model.hidden_size == 16     # model-config field
+    assert spec.n_steps == 7                # spec field
+    assert spec.hw_lr == 0.5
+    # untouched fields keep preset values
+    assert spec.model.seasonality == 4
+
+
+def test_unknown_override_raises():
+    with pytest.raises(TypeError, match="unknown"):
+        get_spec("esrnn-quarterly", not_a_field=1)
+
+
+def test_smoke_variant_is_smaller():
+    full = get_spec("esrnn-quarterly")
+    smoke = get_smoke_spec("esrnn-quarterly")
+    assert smoke.smoke and not full.smoke
+    assert smoke.n_steps < full.n_steps
+    assert smoke.model.hidden_size < full.model.hidden_size
+    assert smoke.data_scale < full.data_scale
+    # smoke overrides still composable
+    assert get_smoke_spec("esrnn-quarterly", n_steps=3).n_steps == 3
+
+
+def test_specs_are_frozen_and_hashable():
+    spec = get_spec("esrnn-quarterly")
+    hash(spec.model)  # jit static-arg requirement
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        spec.n_steps = 1
+
+
+def test_dict_roundtrip():
+    spec = get_spec("esrnn-hourly", n_steps=11)
+    assert ForecastSpec.from_dict(spec.to_dict()) == spec
