@@ -2,11 +2,51 @@
 
 ``python -m benchmarks.run [--fast]`` runs Table 4/5/6 analogs and the
 roofline report, printing ``name,us_per_call,derived`` CSV lines plus the
-human-readable tables, and saving JSON under experiments/bench/.
+human-readable tables, and saving JSON under experiments/bench/. It also
+writes the repo-root ``BENCH_PR2.json`` trajectory point (speedup through
+the public estimator, sMAPE, device sweep, git sha) that CI archives as an
+artifact -- the perf record the next regression gets compared against.
 """
 
 import argparse
+import json
+import os
+import subprocess
 import time
+
+BENCH_TRAJECTORY = os.path.join(
+    os.path.dirname(__file__), "..", "BENCH_PR2.json")
+
+
+def _git_sha() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            cwd=os.path.dirname(__file__), timeout=10,
+        ).stdout.strip() or "unknown"
+    except (OSError, subprocess.SubprocessError):
+        return "unknown"
+
+
+def write_trajectory(t5, t4) -> str:
+    """BENCH_PR2.json: the machine-readable perf point CI archives."""
+    import jax
+
+    payload = {
+        "bench": "PR2",
+        "git_sha": _git_sha(),
+        "devices": len(jax.devices()),
+        "speedup_vectorized_vs_loop": t5["estimator_path"]["speedup"],
+        "speedup_batch_rows": [
+            {"batch": r["batch"], "speedup": r["speedup"]} for r in t5["rows"]],
+        "smape_quarterly": t4["per_frequency"]["quarterly"]["esrnn"]["smape"],
+        "owa_quarterly": t4["per_frequency"]["quarterly"]["esrnn"]["owa"],
+        "device_sweep": t5["device_sweep"],
+    }
+    path = os.path.abspath(BENCH_TRAJECTORY)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    return path
 
 
 def main() -> None:
@@ -57,6 +97,8 @@ def main() -> None:
     print("\nname,us_per_call,derived")
     for name, us, derived in csv:
         print(f"{name},{us:.0f},{derived}")
+
+    print("\nwrote", write_trajectory(t5, t4))
 
 
 if __name__ == "__main__":

@@ -10,6 +10,7 @@ anything). Batch sizes sweep up to 2048 as in the paper's discussion.
 
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
@@ -24,6 +25,7 @@ from repro.forecast import ESRNNForecaster, get_spec
 
 BATCH_SIZES = (64, 256, 512, 1024, 2048)
 LOOP_SAMPLE = 16  # series actually looped; scaled to N
+DEVICE_SWEEP = (1, 2, 4, 8)
 
 
 def _measure(cfg, params, y, cats, loop_sample):
@@ -108,7 +110,52 @@ def _hw_component(n_max: int = 512):
             "speedup": t_loop / t_vec}
 
 
-def run(fast: bool = False):
+def device_sweep(devices=DEVICE_SWEEP, *, fast: bool = False):
+    """--devices sweep: the vectorized loss+grad step, series-sharded.
+
+    Times one jitted ``value_and_grad`` of the shard_map data-parallel loss
+    (``repro.sharding.series.esrnn_loss_dp``) for each device count that is
+    actually available. On a CPU host run under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` the 8 "devices"
+    share the same cores, so this measures the *path* (sharded params,
+    collectives in the backward pass), not a speedup; on real multi-chip
+    hosts the same sweep is the scaling trajectory.
+    """
+    from repro.sharding.series import esrnn_loss_dp, make_series_mesh
+
+    avail = len(jax.devices())
+    ks = sorted({k for k in devices if k <= avail})
+    if not ks:
+        ks = [1]
+    data = prepare(generate("quarterly", scale=0.05 if fast else 0.2, seed=0))
+    kmax = max(ks)
+    n = max(kmax, data.n_series - data.n_series % kmax)
+    cfg = make_config("quarterly")
+    params = esrnn_init(jax.random.PRNGKey(0), cfg, n)
+    y = jnp.asarray(data.train[:n])
+    c = jnp.asarray(data.cats[:n])
+
+    rows = []
+    for k in ks:
+        mesh = make_series_mesh(k)
+        if k == 1:
+            step = jax.jit(jax.value_and_grad(
+                lambda p: esrnn_loss(cfg, p, y, c)))
+        else:
+            step = jax.jit(jax.value_and_grad(
+                lambda p, m=mesh: esrnn_loss_dp(cfg, p, y, c, mesh=m)))
+        jax.block_until_ready(step(params))  # warm/compile
+        t0 = time.perf_counter()
+        for _ in range(3):
+            loss, grads = step(params)
+        jax.block_until_ready(loss)
+        rows.append({"devices": k, "batch": n,
+                     "step_s": (time.perf_counter() - t0) / 3,
+                     "loss": float(loss)})
+    return rows
+
+
+def run(fast: bool = False, devices=DEVICE_SWEEP):
     data = prepare(generate("quarterly", scale=0.35, seed=0))
     cfg = make_config("quarterly")
     sizes = BATCH_SIZES[:3] if fast else BATCH_SIZES
@@ -128,6 +175,7 @@ def run(fast: bool = False):
     out = {"rows": rows,
            "hw_component": _hw_component(256 if fast else 2048),
            "estimator_path": _estimator_path(fast),
+           "device_sweep": device_sweep(devices, fast=fast),
            "paper_speedups": {"quarterly": 322, "monthly": 113},
            "note": ("single-core host: both paths share one core, so the "
                     "full-model speedup reflects dispatch/loop overhead "
@@ -138,8 +186,17 @@ def run(fast: bool = False):
     return out
 
 
-def main():
-    out = run()
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fast", action="store_true", help="reduced sizes")
+    ap.add_argument("--devices", default=",".join(map(str, DEVICE_SWEEP)),
+                    help="comma list of device counts to sweep the "
+                         "series-sharded step over (counts beyond the "
+                         "available devices are skipped; on CPU export "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+    args = ap.parse_args(argv)
+    devices = tuple(int(k) for k in args.devices.split(","))
+    out = run(fast=args.fast, devices=devices)
     print(f"{'batch':>8s} {'loop_s':>12s} {'vectorized_s':>14s} {'speedup':>9s}")
     for r in out["rows"]:
         print(f"{r['batch']:8d} {r['loop_s']:12.3f} {r['vectorized_s']:14.4f} "
@@ -150,6 +207,9 @@ def main():
     est = out["estimator_path"]
     print(f"public estimator predict (N={est['n']}): loop {est['loop_s']:.2f}s "
           f"vs vectorized {est['vectorized_s']:.4f}s -> {est['speedup']:.0f}x")
+    for r in out["device_sweep"]:
+        print(f"series-sharded step on {r['devices']} device(s), "
+              f"batch {r['batch']}: {r['step_s']:.4f}s")
     print("(paper: 322x quarterly / 113x monthly, GPU batch vs CPU loop)")
 
 

@@ -1,21 +1,15 @@
 #!/usr/bin/env bash
 # Tier-1 gate + forecast-surface smoke. Run from anywhere:
 #   bash scripts/ci.sh
+# Also the entry point of .github/workflows/ci.yml. No --deselect list:
+# everything collected must pass; the one wall-clock-dependent test gates
+# itself behind the `slow` marker + ESRNN_TIMING=1 (see tests/test_system.py).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 
 echo "== tier-1 tests =="
-# The --deselect list is the known pre-existing jax-version drift, identical
-# at the seed commit (see .claude/skills/verify/SKILL.md): 3 sharding tests
-# hitting the removed jax.sharding.AxisType, the LM launcher behind the same
-# drift, and a wall-clock speedup assert that is flaky on single-core hosts.
-python -m pytest -x -q \
-  --deselect tests/distributed/test_sharding.py::test_param_spec_rules \
-  --deselect tests/distributed/test_sharding.py::test_divisibility_guard \
-  --deselect tests/distributed/test_sharding.py::test_mini_dryrun_and_real_step_on_8_devices \
-  --deselect tests/test_system.py::test_lm_training_loss_decreases \
-  --deselect tests/test_system.py::test_vectorized_faster_than_loop
+python -m pytest -x -q
 
 echo "== forecast fit smoke (20 steps) =="
 python -m repro.launch.forecast fit --spec esrnn-quarterly --smoke --steps 20

@@ -235,16 +235,14 @@ def _features(x_in, cats):
 # ---------------------------------------------------------------------------
 
 
-@partial(jax.jit, static_argnames=("cfg",))
-def esrnn_loss(cfg: ESRNNConfig, params, y, cats, mask=None):
-    """Training loss on series y (N, T) with category one-hots (N, C).
+def esrnn_loss_fn(cfg: ESRNNConfig, params, y, cats, mask=None):
+    """Unjitted loss body -- the batch-shardable entry point.
 
-    ``mask`` (N, T), optional: 1 where y is a real observation, 0 on the
-    left-padding of variable-length series (``data.pipeline`` section-8.1
-    convention). Window positions whose input window overlaps padding are
-    excluded from the loss; with left-padding a window [t-W+1..t] is fully
-    real iff its first element is (the mask is 0..0 1..1). ``None`` (the
-    equalized default) is bit-identical to an all-ones mask.
+    Every operation is elementwise or reduces over the batch's own rows, so
+    the function can run per-shard inside ``shard_map`` (see
+    ``repro.sharding.series.esrnn_loss_dp``, which maps it over a ``series``
+    mesh axis and pmean-reduces). Use :func:`esrnn_loss` (the jitted wrapper)
+    everywhere else.
     """
     levels, seas = _smooth(cfg, params, y)
     x_in, pos = _input_windows(cfg, y, levels, seas)
@@ -258,6 +256,20 @@ def esrnn_loss(cfg: ESRNNConfig, params, y, cats, mask=None):
     loss = loss + L.level_variability_penalty(levels, cfg.level_penalty)
     loss = loss + L.cstate_penalty(c_sq, cfg.cstate_penalty)
     return loss
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def esrnn_loss(cfg: ESRNNConfig, params, y, cats, mask=None):
+    """Training loss on series y (N, T) with category one-hots (N, C).
+
+    ``mask`` (N, T), optional: 1 where y is a real observation, 0 on the
+    left-padding of variable-length series (``data.pipeline`` section-8.1
+    convention). Window positions whose input window overlaps padding are
+    excluded from the loss; with left-padding a window [t-W+1..t] is fully
+    real iff its first element is (the mask is 0..0 1..1). ``None`` (the
+    equalized default) is bit-identical to an all-ones mask.
+    """
+    return esrnn_loss_fn(cfg, params, y, cats, mask)
 
 
 @partial(jax.jit, static_argnames=("cfg",))

@@ -106,11 +106,20 @@ class ESRNNForecaster:
         return self.params_
 
     def fit(self, data=None, *, ckpt_dir: Optional[str] = None,
-            n_steps: Optional[int] = None, hooks=None) -> "ESRNNForecaster":
-        """Joint two-group training (spec's rnn_lr / hw_lr); returns self."""
+            n_steps: Optional[int] = None, hooks=None,
+            mesh=None) -> "ESRNNForecaster":
+        """Joint two-group training (spec's rnn_lr / hw_lr); returns self.
+
+        ``mesh``: optional 1-D series mesh for multi-device data-parallel
+        training (see ``repro.sharding.series.make_series_mesh``); without
+        one, ``spec.data_parallel > 1`` builds a mesh over that many local
+        devices. Fitted params are identical in structure either way, so
+        predict/evaluate/save/serve are unchanged.
+        """
         pdata = self._coerce_data(data)
         out = train_from_spec(self.spec, pdata, ckpt_dir=ckpt_dir,
-                              n_steps=n_steps, params=self.params_, hooks=hooks)
+                              n_steps=n_steps, params=self.params_, hooks=hooks,
+                              mesh=mesh)
         self.params_ = out["params"]
         self.history_ = out["history"]
         self.n_series_ = pdata.n_series

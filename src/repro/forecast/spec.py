@@ -49,6 +49,12 @@ class ForecastSpec:
     keep: int = 3
     smoke: bool = False
 
+    # -- multi-device scaling ----------------------------------------------
+    data_parallel: int = 0           # devices to shard the series axis over
+                                     # (0/1 = single device; must divide
+                                     # batch_size; CPU needs XLA_FLAGS=
+                                     # --xla_force_host_platform_device_count)
+
     @property
     def frequency(self) -> str:
         return self.model.name

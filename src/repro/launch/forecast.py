@@ -51,6 +51,8 @@ def _build(args) -> ESRNNForecaster:
     over = _parse_overrides(getattr(args, "set", None))
     if getattr(args, "steps", None) is not None:
         over["n_steps"] = args.steps
+    if getattr(args, "devices", None) is not None:
+        over["data_parallel"] = args.devices
     spec = (get_smoke_spec(args.spec, **over) if args.smoke
             else get_spec(args.spec, **over))
     return ESRNNForecaster(spec)
@@ -145,6 +147,10 @@ def main(argv=None):
         p.add_argument("--smoke", action="store_true",
                        help="tiny model + tiny data, seconds on CPU")
         p.add_argument("--steps", type=int, help="override spec n_steps")
+        p.add_argument("--devices", type=int, metavar="N",
+                       help="series-data-parallel training over N devices "
+                            "(CPU: export XLA_FLAGS="
+                            "--xla_force_host_platform_device_count=N)")
         p.add_argument("--set", action="append", metavar="KEY=VAL",
                        help="spec/model override, e.g. --set hidden_size=16")
 

@@ -48,6 +48,8 @@ class TrainConfig:
     ckpt_dir: Optional[str] = None
     keep: int = 3
     straggler_factor: float = 3.0
+    data_parallel: int = 0              # devices for the series-sharded path
+                                        # (0/1 = single-device)
 
     @classmethod
     def from_spec(cls, spec, *, ckpt_dir: Optional[str] = None,
@@ -69,6 +71,7 @@ class TrainConfig:
             ckpt_every=spec.ckpt_every,
             ckpt_dir=ckpt_dir,
             keep=spec.keep,
+            data_parallel=spec.data_parallel,
         )
 
 
@@ -98,14 +101,37 @@ def train_esrnn(
     *,
     params=None,
     hooks: Optional[Dict[str, Callable]] = None,
+    mesh=None,
 ) -> Dict:
     """Train; returns dict(params, history, resumed_from).
 
     ``model`` may be an :class:`~repro.core.esrnn.ESRNNConfig` (preferred) or
     the legacy ``ESRNN`` shim; training runs through the pure functional API
     either way.
+
+    ``mesh``: optional 1-D series mesh (``repro.sharding.series``). With more
+    than one device the loss runs series-sharded under ``shard_map``: each
+    device owns its slice of the batch and of the gathered per-series HW
+    rows (device-local gradients), while the shared RNN/head weights stay
+    replicated with all-reduced gradients. The batch schedule, optimizer,
+    and checkpoint format are identical to the single-device path, so the
+    loss trajectory matches up to float summation order. If ``mesh`` is None
+    a ``cfg.data_parallel > 1`` builds one over the first that many local
+    devices.
     """
     mcfg = _as_config(model)
+    if mesh is None and cfg.data_parallel and cfg.data_parallel > 1:
+        from repro.sharding.series import make_series_mesh
+
+        mesh = make_series_mesh(cfg.data_parallel)
+    if mesh is not None and mesh.devices.size == 1:
+        mesh = None  # 1-device mesh: identical math, skip the shard_map hop
+    if mesh is not None:
+        from repro.sharding.series import check_series_divisible, esrnn_loss_dp
+
+        check_series_divisible(min(cfg.batch_size, data.n_series), mesh)
+        log.info("series-data-parallel training on %d devices (%s)",
+                 mesh.devices.size, ",".join(mesh.axis_names))
     cfg_adam = AdamConfig(
         lr=cfg.lr,
         clip_norm=cfg.clip_norm,
@@ -137,7 +163,10 @@ def train_esrnn(
             # back to the full table happens automatically through indexing.
             # The observation mask keeps left-padded (variable-length)
             # positions out of the loss; it is all-ones for equalized data.
-            return esrnn_loss(mcfg, gather_series(p, idx), yb, cb, mb)
+            pb = gather_series(p, idx)
+            if mesh is not None:
+                return esrnn_loss_dp(mcfg, pb, yb, cb, mb, mesh=mesh)
+            return esrnn_loss(mcfg, pb, yb, cb, mb)
 
         loss, grads = jax.value_and_grad(batch_loss)(params)
         params, opt_state = adam_update(
@@ -198,12 +227,16 @@ def train_from_spec(
     n_steps: Optional[int] = None,
     params=None,
     hooks: Optional[Dict[str, Callable]] = None,
+    mesh=None,
 ) -> Dict:
     """Spec-driven entry point: ``ForecastSpec`` in, trained params out.
 
     This is the path ``repro.forecast.ESRNNForecaster.fit`` and the
     ``repro.launch.forecast`` CLI use; the two-group learning rates come
     straight from the spec's first-class ``rnn_lr`` / ``hw_lr`` fields.
+    ``spec.data_parallel`` (or an explicit ``mesh``) turns on series-sharded
+    multi-device training.
     """
     cfg = TrainConfig.from_spec(spec, ckpt_dir=ckpt_dir, n_steps=n_steps)
-    return train_esrnn(spec.model, data, cfg, params=params, hooks=hooks)
+    return train_esrnn(spec.model, data, cfg, params=params, hooks=hooks,
+                       mesh=mesh)

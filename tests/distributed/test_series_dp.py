@@ -1,0 +1,143 @@
+"""Series-data-parallel ES-RNN: sharded vs single-device equivalence.
+
+The multi-device checks run in a subprocess with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` because XLA locks the
+host device count at first jax init (the main test process must keep seeing
+one device). Spec/guard tests run in-process on the 1-device mesh.
+
+Tolerances (documented, asserted below): the shard_map path evaluates the
+same math with per-shard partial sums pmean-reduced, so results differ from
+the single-device batch mean only by float32 summation order --
+|loss_dp - loss| <= 1e-6 per evaluation, and <= 5e-7 * step accumulated
+drift over an Adam trajectory (we assert atol=1e-5 over 12 smoke steps,
+~400x headroom on what we observe, ~2e-8).
+"""
+
+import json
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from jax.sharding import PartitionSpec as P
+
+from repro.core.esrnn import esrnn_init, make_config
+from repro.sharding import series
+
+
+def test_param_specs_shard_hw_only():
+    cfg = make_config("quarterly", hidden_size=8, attention=True)
+    params = esrnn_init(jax.random.PRNGKey(0), cfg, n_series=4)
+    specs = series.esrnn_param_specs(params)
+    hw_specs = jax.tree_util.tree_leaves(
+        specs["hw"], is_leaf=lambda x: isinstance(x, P))
+    assert hw_specs and all(s == P("series") for s in hw_specs)
+    for group in ("rnn", "head", "attn"):
+        leaves = jax.tree_util.tree_leaves(
+            specs[group], is_leaf=lambda x: isinstance(x, P))
+        assert leaves and all(s == P() for s in leaves), group
+
+
+def test_param_shardings_match_tree():
+    cfg = make_config("quarterly", hidden_size=8)
+    params = esrnn_init(jax.random.PRNGKey(0), cfg, n_series=4)
+    mesh = series.make_series_mesh(1)
+    sh = series.esrnn_param_shardings(mesh, params)
+    assert sh["hw"].alpha_logit.spec == P("series")
+    assert sh["head"]["dense_w"].spec == P()
+    # structure mirrors params exactly (same keys, incl. optional leaves)
+    jax.tree_util.tree_map(lambda a, b: None, params, sh,
+                           is_leaf=lambda x: x is None)
+
+
+def test_divisibility_guard_raises():
+    mesh = series.make_series_mesh(1)
+    assert series.check_series_divisible(5, mesh) == 1
+    with pytest.raises(ValueError, match="does not divide"):
+        # fake a 8-wide mesh requirement via a simple stand-in object
+        class FakeDevices:
+            size = 8
+
+        class FakeMesh:
+            devices = FakeDevices()
+            axis_names = ("series",)
+
+        series.check_series_divisible(12, FakeMesh())
+
+
+def test_make_series_mesh_rejects_unavailable_devices():
+    n = len(jax.devices())
+    with pytest.raises(ValueError, match="are available"):
+        series.make_series_mesh(n + 1)
+
+
+_SUBPROC = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax, jax.numpy as jnp
+import numpy as np
+
+from repro.core.esrnn import esrnn_init, esrnn_loss, make_config
+from repro.forecast import ESRNNForecaster, get_smoke_spec
+from repro.sharding.series import esrnn_loss_dp, make_series_mesh
+
+out = {"devices": len(jax.devices())}
+mesh = make_series_mesh(8)
+
+# -- direct loss + grad equivalence on random series ------------------------
+cfg = make_config("quarterly", hidden_size=8)
+rng = np.random.default_rng(0)
+n = 16
+y = jnp.asarray(np.abs(rng.lognormal(3, 0.5, (n, 72))).astype(np.float32) + 1)
+cats = jnp.asarray(np.eye(6, dtype=np.float32)[rng.integers(0, 6, n)])
+params = esrnn_init(jax.random.PRNGKey(0), cfg, n)
+l_single = esrnn_loss(cfg, params, y, cats)
+l_dp = esrnn_loss_dp(cfg, params, y, cats, mesh=mesh)
+out["loss_absdiff"] = float(abs(l_single - l_dp))
+
+g_single = jax.grad(lambda p: esrnn_loss(cfg, p, y, cats))(params)
+g_dp = jax.grad(lambda p: esrnn_loss_dp(cfg, p, y, cats, mesh=mesh))(params)
+out["grad_absdiff"] = float(max(
+    jax.tree_util.tree_leaves(jax.tree_util.tree_map(
+        lambda a, b: jnp.max(jnp.abs(a - b)), g_single, g_dp))))
+
+# the backward pass must all-reduce the replicated shared-weight grads
+hlo = (jax.jit(jax.grad(lambda p: esrnn_loss_dp(cfg, p, y, cats, mesh=mesh)))
+       .lower(params).compile().as_text())
+out["grad_has_all_reduce"] = "all-reduce" in hlo
+
+# -- fit equivalence through the public estimator ---------------------------
+spec = get_smoke_spec("esrnn-quarterly", data_seed=3, n_steps=12)
+f_single = ESRNNForecaster(spec).fit()
+f_dp = ESRNNForecaster(spec.replace(data_parallel=8)).fit()
+h1 = np.asarray(f_single.history_["loss"])
+h2 = np.asarray(f_dp.history_["loss"])
+out["n_steps"] = len(h1)
+out["fit_loss_absdiff"] = float(np.max(np.abs(h1 - h2)))
+p1, p2 = f_single.predict(), f_dp.predict()
+out["predict_reldiff"] = float(np.max(np.abs(p1 - p2) / np.abs(p1)))
+print(json.dumps(out))
+"""
+
+
+@pytest.mark.slow
+def test_sharded_fit_matches_single_device_on_8_devices():
+    r = subprocess.run(
+        [sys.executable, "-c", _SUBPROC], capture_output=True, text=True,
+        timeout=560)
+    assert r.returncode == 0, r.stderr[-3000:]
+    out = json.loads(r.stdout.strip().splitlines()[-1])
+    assert out["devices"] == 8
+    # single loss/grad evaluation: float-summation-order noise only
+    assert out["loss_absdiff"] <= 1e-6, out
+    assert out["grad_absdiff"] <= 1e-6, out
+    # shared-weight grads are psum'd across the series axis
+    assert out["grad_has_all_reduce"], "dp grad compiled without a collective"
+    # full smoke fit through ESRNNForecaster: documented atol=1e-5 over the
+    # 12-step Adam trajectory (observed ~2e-8); forecasts track to 1e-4 rel
+    assert out["n_steps"] == 12
+    assert out["fit_loss_absdiff"] <= 1e-5, out
+    assert out["predict_reldiff"] <= 1e-4, out

@@ -16,11 +16,9 @@ from repro.sharding import specs
 
 
 def test_param_spec_rules():
-    import jax.numpy as jnp
     from jax.sharding import PartitionSpec as P
 
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
     specs.set_mesh(mesh)
     axes = {"dp": "data", "tp": "model"}
 
@@ -48,9 +46,6 @@ def test_param_spec_rules():
 def test_divisibility_guard():
     from jax.sharding import PartitionSpec as P
 
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
-    # pretend mesh axes of size 16 via the internal table
     specs._MESH = None  # no mesh -> sizes default 1 -> everything "divides"
 
     class Leaf:
@@ -82,8 +77,7 @@ from repro.roofline.jaxpr_cost import jaxpr_flops
 from repro.sharding import specs
 from repro.sharding.ctx import activation_sharding
 
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = jax.make_mesh((4, 2), ("data", "model"))
 cfg = get_smoke_config("yi-6b")
 cell = ShapeCell("t", "train", 32, 8, microbatch=4)
 model = build_model(cfg)
