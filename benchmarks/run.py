@@ -3,9 +3,11 @@
 ``python -m benchmarks.run [--fast]`` runs Table 4/5/6 analogs and the
 roofline report, printing ``name,us_per_call,derived`` CSV lines plus the
 human-readable tables, and saving JSON under experiments/bench/. It also
-writes the repo-root ``BENCH_PR2.json`` trajectory point (speedup through
-the public estimator, sMAPE, device sweep, git sha) that CI archives as an
-artifact -- the perf record the next regression gets compared against.
+writes the repo-root ``BENCH_PR3.json`` trajectory point (speedup through
+the public estimator, the ``use_pallas`` train-step timing column, sMAPE,
+device sweep, git sha) that CI archives as an artifact -- the perf record
+the next regression gets compared against (``BENCH_PR2.json`` is the prior
+point, kept for comparison).
 """
 
 import argparse
@@ -15,7 +17,7 @@ import subprocess
 import time
 
 BENCH_TRAJECTORY = os.path.join(
-    os.path.dirname(__file__), "..", "BENCH_PR2.json")
+    os.path.dirname(__file__), "..", "BENCH_PR3.json")
 
 
 def _git_sha() -> str:
@@ -29,16 +31,19 @@ def _git_sha() -> str:
 
 
 def write_trajectory(t5, t4) -> str:
-    """BENCH_PR2.json: the machine-readable perf point CI archives."""
+    """BENCH_PR3.json: the machine-readable perf point CI archives."""
     import jax
 
     payload = {
-        "bench": "PR2",
+        "bench": "PR3",
         "git_sha": _git_sha(),
         "devices": len(jax.devices()),
         "speedup_vectorized_vs_loop": t5["estimator_path"]["speedup"],
         "speedup_batch_rows": [
             {"batch": r["batch"], "speedup": r["speedup"]} for r in t5["rows"]],
+        # trainable-kernel column: full value_and_grad step through the
+        # custom_vjp kernel path vs pure jax (interpret mode off-TPU)
+        "train_step": t5["train_step"],
         "smape_quarterly": t4["per_frequency"]["quarterly"]["esrnn"]["smape"],
         "owa_quarterly": t4["per_frequency"]["quarterly"]["esrnn"]["owa"],
         "device_sweep": t5["device_sweep"],
@@ -68,6 +73,10 @@ def main() -> None:
     for r in t5["rows"]:
         print(f"  batch {r['batch']:5d}: loop {r['loop_s']:8.2f}s  "
               f"vectorized {r['vectorized_s']:8.4f}s  -> {r['speedup']:7.1f}x")
+    ts = t5["train_step"]
+    print(f"  train step (batch {ts['batch']}, backend {ts['backend']}): "
+          f"pure-jax {ts['use_pallas_false']['step_s']:.4f}s  "
+          f"pallas {ts['use_pallas_true']['step_s']:.4f}s")
 
     t0 = time.perf_counter()
     t4 = table4_accuracy.run(fast=args.fast)

@@ -18,7 +18,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import save_result
-from repro.core.esrnn import esrnn_init, esrnn_loss, esrnn_loss_and_grad, gather_series, make_config
+from repro.core.esrnn import (
+    esrnn_init, esrnn_loss, esrnn_loss_and_grad, esrnn_loss_fn,
+    gather_series, make_config,
+)
 from repro.data.pipeline import prepare
 from repro.data.synthetic_m4 import generate
 from repro.forecast import ESRNNForecaster, get_spec
@@ -110,6 +113,37 @@ def _hw_component(n_max: int = 512):
             "speedup": t_loop / t_vec}
 
 
+def train_step_timing(fast: bool = False):
+    """Trainable-kernel column: one jitted ``value_and_grad`` train step,
+    pure-jax dispatch vs the Pallas kernel path (``use_pallas=True``).
+
+    The kernels carry custom_vjp backward kernels, so this times the full
+    forward+backward through them. Off-TPU the kernels run in interpret
+    mode -- the number then tracks dispatch correctness cost, not a
+    speedup; on TPU the same column is the paper's train-step claim.
+    """
+    n, t = (64, 60) if fast else (256, 72)
+    rng = np.random.default_rng(0)
+    y = jnp.asarray(np.abs(rng.lognormal(3, 0.5, (n, t))).astype(np.float32) + 1)
+    cats = jnp.asarray(np.eye(6, dtype=np.float32)[rng.integers(0, 6, n)])
+    out = {"backend": jax.default_backend(), "batch": n, "t_len": t}
+    for label, use_pallas in (("use_pallas_false", False),
+                              ("use_pallas_true", True)):
+        cfg = make_config("quarterly", use_pallas=use_pallas)
+        params = esrnn_init(jax.random.PRNGKey(0), cfg, n)
+        step = jax.jit(jax.value_and_grad(
+            lambda p, c=cfg: esrnn_loss_fn(c, p, y, cats)))
+        jax.block_until_ready(step(params))  # warm/compile
+        iters = 3
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            loss, _ = step(params)
+        jax.block_until_ready(loss)
+        out[label] = {"step_s": (time.perf_counter() - t0) / iters,
+                      "loss": float(loss)}
+    return out
+
+
 def device_sweep(devices=DEVICE_SWEEP, *, fast: bool = False):
     """--devices sweep: the vectorized loss+grad step, series-sharded.
 
@@ -175,6 +209,7 @@ def run(fast: bool = False, devices=DEVICE_SWEEP):
     out = {"rows": rows,
            "hw_component": _hw_component(256 if fast else 2048),
            "estimator_path": _estimator_path(fast),
+           "train_step": train_step_timing(fast),
            "device_sweep": device_sweep(devices, fast=fast),
            "paper_speedups": {"quarterly": 322, "monthly": 113},
            "note": ("single-core host: both paths share one core, so the "
@@ -207,6 +242,10 @@ def main(argv=None):
     est = out["estimator_path"]
     print(f"public estimator predict (N={est['n']}): loop {est['loop_s']:.2f}s "
           f"vs vectorized {est['vectorized_s']:.4f}s -> {est['speedup']:.0f}x")
+    ts = out["train_step"]
+    print(f"train step (batch {ts['batch']}, backend {ts['backend']}): "
+          f"pure-jax {ts['use_pallas_false']['step_s']:.4f}s vs "
+          f"pallas {ts['use_pallas_true']['step_s']:.4f}s")
     for r in out["device_sweep"]:
         print(f"series-sharded step on {r['devices']} device(s), "
               f"batch {r['batch']}: {r['step_s']:.4f}s")

@@ -235,14 +235,16 @@ def _features(x_in, cats):
 # ---------------------------------------------------------------------------
 
 
-def esrnn_loss_fn(cfg: ESRNNConfig, params, y, cats, mask=None):
-    """Unjitted loss body -- the batch-shardable entry point.
+def esrnn_loss_terms_fn(cfg: ESRNNConfig, params, y, cats, mask=None):
+    """Per-batch loss *terms*: ``(pinball_sum, valid_count, penalties)``.
 
-    Every operation is elementwise or reduces over the batch's own rows, so
-    the function can run per-shard inside ``shard_map`` (see
-    ``repro.sharding.series.esrnn_loss_dp``, which maps it over a ``series``
-    mesh axis and pmean-reduces). Use :func:`esrnn_loss` (the jitted wrapper)
-    everywhere else.
+    The decomposed form exists for exact distributed reduction: the sharded
+    loss (``repro.sharding.series.esrnn_loss_dp``) psums the masked pin-ball
+    numerator and denominator across shards and divides once globally, which
+    matches the single-device masked mean even when shards carry unequal
+    valid-target counts (``variable_length`` data). ``penalties`` is the sum
+    of the section-8.4 terms, whose reductions are over equal-shaped
+    per-shard tensors (a pmean of them is already exact).
     """
     levels, seas = _smooth(cfg, params, y)
     x_in, pos = _input_windows(cfg, y, levels, seas)
@@ -252,10 +254,24 @@ def esrnn_loss_fn(cfg: ESRNNConfig, params, y, cats, mask=None):
         out_mask = out_mask * valid_in[:, :, None]
     feats = _features(x_in, cats)
     yhat_n, c_sq = _rnn_head(cfg, params, feats)
-    loss = L.pinball_loss(yhat_n, y_out_n, tau=cfg.tau, mask=out_mask)
-    loss = loss + L.level_variability_penalty(levels, cfg.level_penalty)
-    loss = loss + L.cstate_penalty(c_sq, cfg.cstate_penalty)
-    return loss
+    pin_sum, pin_cnt = L.pinball_terms(yhat_n, y_out_n, tau=cfg.tau,
+                                       mask=out_mask)
+    penalties = (L.level_variability_penalty(levels, cfg.level_penalty)
+                 + L.cstate_penalty(c_sq, cfg.cstate_penalty))
+    return pin_sum, pin_cnt, penalties
+
+
+def esrnn_loss_fn(cfg: ESRNNConfig, params, y, cats, mask=None):
+    """Unjitted loss body -- the batch-shardable entry point.
+
+    Every operation is elementwise or reduces over the batch's own rows, so
+    the function can run per-shard inside ``shard_map`` (see
+    ``repro.sharding.series.esrnn_loss_dp``, which reduces the decomposed
+    :func:`esrnn_loss_terms_fn` exactly). Use :func:`esrnn_loss` (the jitted
+    wrapper) everywhere else.
+    """
+    pin_sum, pin_cnt, penalties = esrnn_loss_terms_fn(cfg, params, y, cats, mask)
+    return pin_sum / jnp.maximum(pin_cnt, 1.0) + penalties
 
 
 @partial(jax.jit, static_argnames=("cfg",))

@@ -125,7 +125,10 @@ def hw_smooth(
       seasonality2: optional second period (0 => disabled).
       use_pallas: route the recurrence through the Pallas TPU kernel
         (``kernels/hw_scan.py``); only the single-seasonality path has a
-        kernel. Numerics are identical (kernel is tested against this path).
+        kernel. Numerics are identical (kernel is tested against this path)
+        and the kernel is differentiable -- its custom_vjp runs the adjoint
+        recurrence time-reversed as a second kernel, so training with
+        ``use_pallas=True`` works end-to-end.
 
     Returns:
       levels: ``(N, T)`` level l_t after observing y_t.

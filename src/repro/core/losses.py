@@ -20,8 +20,26 @@ def pinball_loss(pred, target, tau: float = 0.49, mask=None):
     loss = jnp.maximum(tau * diff, (tau - 1.0) * diff)
     if mask is None:
         return jnp.mean(loss)
+    num, den = pinball_terms(pred, target, tau=tau, mask=mask)
+    return num / jnp.maximum(den, 1.0)
+
+
+def pinball_terms(pred, target, tau: float = 0.49, mask=None):
+    """Masked pin-ball numerator and denominator: ``(sum, valid_count)``.
+
+    The building block for *exact* distributed masked means: psum the two
+    terms across shards and divide once globally
+    (``repro.sharding.series.esrnn_loss_dp``), instead of averaging
+    per-shard means -- the two only agree when every shard has the same
+    valid-target count. ``pinball_loss(mask=...)`` is exactly
+    ``sum / max(count, 1)`` of these terms.
+    """
+    diff = target - pred
+    loss = jnp.maximum(tau * diff, (tau - 1.0) * diff)
+    if mask is None:
+        return jnp.sum(loss), jnp.asarray(loss.size, loss.dtype)
     mask = jnp.broadcast_to(mask, loss.shape)
-    return jnp.sum(loss * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.sum(loss * mask), jnp.sum(mask)
 
 
 def smape(pred, target, mask=None, axis=None):

@@ -63,6 +63,19 @@ class ForecastSpec:
     def horizon(self) -> int:
         return self.model.output_size
 
+    @property
+    def use_pallas(self) -> bool:
+        """Whether fit/predict route through the Pallas kernels.
+
+        A model-config field surfaced on the spec: override it like any
+        other (``get_spec("esrnn-quarterly", use_pallas=True)``, estimator
+        kwargs, or ``forecast fit --set use_pallas=true``) and
+        ``train_from_spec`` trains through the kernels end-to-end -- the
+        hw_scan/lstm_cell custom_vjp backward kernels make the path
+        differentiable, and it composes with ``data_parallel``.
+        """
+        return self.model.use_pallas
+
     def replace(self, **overrides) -> "ForecastSpec":
         """Override by field name; model-config fields route into ``model``."""
         model_kw = {k: v for k, v in overrides.items() if k in _MODEL_FIELDS}

@@ -14,6 +14,31 @@ schedule is:
 The seasonality ring holds rows ``s`` for times ``t === row (mod M)``; at step
 ``t`` slot ``t mod M`` is read (s_t) and overwritten with ``s_{t+M}``, exactly
 Eq. 3 with multiplicative seasonality and no trend (Smyl variant).
+
+Differentiation (the paper's actual workload is *training*): ``hw_scan_tm``
+carries a :func:`jax.custom_vjp` whose backward pass is a second Pallas
+kernel running the adjoint recurrence time-reversed. The forward already
+emits the ``(levels, seas)`` residuals the adjoint needs, so nothing extra is
+saved beyond the inputs. With ``lam_t`` the level cotangent and ``sig_t`` the
+seasonality cotangent, reversing
+
+    l_t     = alpha * y_t / s_t + (1 - alpha) * l_{t-1}
+    s_{t+m} = gamma * y_t / l_t + (1 - gamma) * s_t
+
+gives, for t = T-1 .. 0 (``dl``/``ds`` are the output cotangents):
+
+    lam_t = dl_t + (1 - alpha) * lam_{t+1} - sig_{t+m} * gamma * y_t / l_t^2
+    sig_t = ds_t + (1 - gamma) * sig_{t+m} - lam_t * alpha * y_t / s_t^2
+    dy_t    = lam_t * alpha / s_t + sig_{t+m} * gamma / l_t
+    dalpha += lam_t * (y_t / s_t - l_{t-1})
+    dgamma += sig_{t+m} * (y_t / l_t - s_t)
+
+The ``sig`` values live in the same M-row VMEM ring as the forward (slot
+``t mod m`` holds ``sig_{t+m}`` before step t and ``sig_t`` after), seeded
+with the trailing future-factor cotangents ``ds_{T..T+M-1}``; after the loop
+the ring *is* ``d init_seas`` (slot k holds ``sig_k``). The synthetic initial
+level ``l_{-1} = y_0 / s_0`` closes the recurrence: its cotangent
+``(1 - alpha) * lam_0`` routes to ``y_0`` and ring slot 0.
 """
 
 from __future__ import annotations
@@ -57,13 +82,74 @@ def _hw_scan_kernel(y_ref, a_ref, g_ref, s0_ref, lev_ref, seas_ref, ring_ref,
         pl.store(seas_ref, (pl.ds(t_len + k, 1), slice(None)), row)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def hw_scan_tm(y_tm, alpha, gamma, init_seas_tm, *, interpret: bool = False):
-    """Time-major entry. y_tm: (T, N); alpha/gamma: (N,); init_seas_tm: (M, N).
+def _hw_scan_bwd_kernel(y_ref, a_ref, g_ref, lev_ref, seas_ref,
+                        dlev_ref, dseas_ref,
+                        dy_ref, da_ref, dg_ref, ds0_ref, ring_ref,
+                        *, t_len: int, m: int):
+    """Adjoint recurrence, time-reversed, same (T, BN) lane layout.
 
-    N must be a multiple of BLOCK_N (ops.py pads). Returns levels_tm (T, N)
-    and seas_tm (T+M, N).
+    The sigma ring mirrors the forward's seasonality ring: before reverse
+    step t, slot ``t mod m`` holds ``sig_{t+m}`` (the fully-accumulated
+    cotangent of s_{t+m}); the step overwrites it with ``sig_t``.
     """
+    alpha = a_ref[0, :]                     # (BN,)
+    gamma = g_ref[0, :]
+    # s_0 == init_seas_0: the forward emits it as seas row 0, so the
+    # init_seas array itself need not be streamed into the backward.
+    s00 = seas_ref[0, :]
+
+    # seed: the trailing future factors s_T .. s_{T+M-1} are pure outputs,
+    # so their cotangents are exactly the incoming dseas rows.
+    for k in range(m):
+        slot = (t_len + k) % m
+        row = pl.load(dseas_ref, (pl.ds(t_len + k, 1), slice(None)))
+        pl.store(ring_ref, (pl.ds(slot, 1), slice(None)), row)
+
+    zeros = jnp.zeros_like(alpha)
+
+    def body(i, carry):
+        lam_next, da, dg = carry
+        t = t_len - 1 - i
+        slot = jax.lax.rem(t, m)
+        y_t = pl.load(y_ref, (pl.ds(t, 1), slice(None)))[0]
+        l_t = pl.load(lev_ref, (pl.ds(t, 1), slice(None)))[0]
+        s_t = pl.load(seas_ref, (pl.ds(t, 1), slice(None)))[0]
+        # l_{t-1}: levels row t-1 for t > 0, else the primer l_{-1} = y_0/s_0
+        l_prev = pl.load(lev_ref, (pl.ds(jnp.maximum(t - 1, 0), 1),
+                                   slice(None)))[0]
+        l_prev = jnp.where(t > 0, l_prev, y_ref[0, :] / s00)
+        sig_tpm = pl.load(ring_ref, (pl.ds(slot, 1), slice(None)))[0]
+
+        lam_t = (pl.load(dlev_ref, (pl.ds(t, 1), slice(None)))[0]
+                 + (1.0 - alpha) * lam_next
+                 - sig_tpm * gamma * y_t / (l_t * l_t))
+        sig_t = (pl.load(dseas_ref, (pl.ds(t, 1), slice(None)))[0]
+                 + (1.0 - gamma) * sig_tpm
+                 - lam_t * alpha * y_t / (s_t * s_t))
+        pl.store(ring_ref, (pl.ds(slot, 1), slice(None)), sig_t[None, :])
+
+        dy_t = lam_t * alpha / s_t + sig_tpm * gamma / l_t
+        # l_{-1} = y_0 / s_0 adds (1-alpha)*lam_0 / s_0 to dy_0
+        dy_t = dy_t + jnp.where(t == 0, (1.0 - alpha) * lam_t / s00, 0.0)
+        pl.store(dy_ref, (pl.ds(t, 1), slice(None)), dy_t[None, :])
+
+        da = da + lam_t * (y_t / s_t - l_prev)
+        dg = dg + sig_tpm * (y_t / l_t - s_t)
+        return lam_t, da, dg
+
+    lam0, da, dg = jax.lax.fori_loop(0, t_len, body, (zeros, zeros, zeros))
+
+    da_ref[...] = da[None, :]
+    dg_ref[...] = dg[None, :]
+    # after the loop, ring slot k holds sig_k == d loss / d init_seas_k
+    ds0_ref[...] = ring_ref[...]
+    # ... minus the primer-level term through l_{-1} = y_0 / s_0 on slot 0
+    corr = (1.0 - alpha) * lam0 * y_ref[0, :] / (s00 * s00)
+    row0 = pl.load(ds0_ref, (pl.ds(0, 1), slice(None)))[0]
+    pl.store(ds0_ref, (pl.ds(0, 1), slice(None)), (row0 - corr)[None, :])
+
+
+def _hw_scan_fwd_call(y_tm, alpha, gamma, init_seas_tm, *, interpret: bool):
     t_len, n = y_tm.shape
     m = init_seas_tm.shape[0]
     dtype = y_tm.dtype
@@ -93,11 +179,84 @@ def hw_scan_tm(y_tm, alpha, gamma, init_seas_tm, *, interpret: bool = False):
     return levels, seas
 
 
+def _hw_scan_bwd_call(y_tm, alpha, gamma, levels, seas, dlev, dseas, *,
+                      m: int, interpret: bool):
+    t_len, n = y_tm.shape
+    dtype = y_tm.dtype
+    grid = (n // BLOCK_N,)
+
+    kernel = functools.partial(_hw_scan_bwd_kernel, t_len=t_len, m=m)
+    col = lambda rows: pl.BlockSpec((rows, BLOCK_N), lambda i: (0, i))
+    dy, da, dg, ds0 = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            col(t_len),              # y
+            col(1),                  # alpha
+            col(1),                  # gamma
+            col(t_len),              # levels
+            col(t_len + m),          # seas
+            col(t_len),              # dlevels
+            col(t_len + m),          # dseas
+        ],
+        out_specs=[col(t_len), col(1), col(1), col(m)],
+        out_shape=[
+            jax.ShapeDtypeStruct((t_len, n), dtype),
+            jax.ShapeDtypeStruct((1, n), dtype),
+            jax.ShapeDtypeStruct((1, n), dtype),
+            jax.ShapeDtypeStruct((m, n), dtype),
+        ],
+        scratch_shapes=[_vmem_scratch((m, BLOCK_N), dtype)],
+        interpret=interpret,
+    )(y_tm, alpha[None, :], gamma[None, :], levels, seas, dlev, dseas)
+    return dy, da[0], dg[0], ds0
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _hw_scan_tm(interpret, y_tm, alpha, gamma, init_seas_tm):
+    return _hw_scan_fwd_call(y_tm, alpha, gamma, init_seas_tm,
+                             interpret=interpret)
+
+
+def _hw_scan_tm_fwd(interpret, y_tm, alpha, gamma, init_seas_tm):
+    levels, seas = _hw_scan_fwd_call(y_tm, alpha, gamma, init_seas_tm,
+                                     interpret=interpret)
+    # residuals: the inputs plus the (levels, seas) the forward already
+    # emits (seas row 0 covers init_seas_0, so the ring itself is not saved)
+    return (levels, seas), (y_tm, alpha, gamma, levels, seas)
+
+
+def _hw_scan_tm_bwd(interpret, res, cotangents):
+    y_tm, alpha, gamma, levels, seas = res
+    dlev, dseas = cotangents
+    dy, da, dg, ds0 = _hw_scan_bwd_call(
+        y_tm, alpha, gamma, levels, seas,
+        jnp.asarray(dlev, y_tm.dtype), jnp.asarray(dseas, y_tm.dtype),
+        m=seas.shape[0] - y_tm.shape[0], interpret=interpret)
+    return dy, da, dg, ds0
+
+
+_hw_scan_tm.defvjp(_hw_scan_tm_fwd, _hw_scan_tm_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def hw_scan_tm(y_tm, alpha, gamma, init_seas_tm, *, interpret: bool = False):
+    """Time-major entry. y_tm: (T, N); alpha/gamma: (N,); init_seas_tm: (M, N).
+
+    N must be a multiple of BLOCK_N (ops.py pads). Returns levels_tm (T, N)
+    and seas_tm (T+M, N). Differentiable: carries a custom_vjp whose backward
+    is the time-reversed adjoint kernel (see module docstring).
+    """
+    return _hw_scan_tm(interpret, y_tm, alpha, gamma, init_seas_tm)
+
+
 def _vmem_scratch(shape, dtype):
     """VMEM scratch allocation, tolerant of pallas API surface differences."""
     try:
         from jax.experimental.pallas import tpu as pltpu
 
         return pltpu.VMEM(shape, dtype)
-    except Exception:  # pragma: no cover - CPU-only environments
-        return pl.MemorySpace.ANY(shape, dtype)  # type: ignore[attr-defined]
+    except Exception:  # CPU-only interpret environments without the TPU ext
+        # pl.MemorySpace.ANY is an enum member, not a constructor; wrap it in
+        # a MemoryRef the way pltpu.VMEM does (see test_hw_scan fallback test)
+        return pl.MemoryRef(shape, jnp.dtype(dtype), pl.MemorySpace.ANY)

@@ -8,6 +8,15 @@ and the gate nonlinearities + state update run on the VPU without the
 Blocking: grid over batch tiles; weights are small for the paper's sizes
 (H <= 50 padded to 128) and live fully in VMEM per block. ops.py pads
 (B -> 8k, I/H -> 128k) and strips.
+
+Training path: ``lstm_cell_padded`` carries a :func:`jax.custom_vjp`. Its
+forward rule runs an extended kernel that additionally emits the gate
+activations ``[sigmoid(i) | sigmoid(f) | tanh(g) | sigmoid(o)]`` as one
+``(B, 4H)`` residual; the backward rule is a second fused kernel that turns
+``(dh, dc)`` into the pre-activation gate cotangents on the VPU and runs all
+four transposed GEMMs (``dx``, ``dh_prev`` and the weight gradients) from the
+same VMEM residency. Weight/bias gradients accumulate across batch-grid
+steps into a single revisited output block (grid is sequential on TPU).
 """
 
 from __future__ import annotations
@@ -21,16 +30,20 @@ from jax.experimental import pallas as pl
 BLOCK_B = 128
 
 
+def _gates(wx_ref, wh_ref, b_ref, x, h):
+    return (
+        jnp.dot(x, wx_ref[...], preferred_element_type=jnp.float32)
+        + jnp.dot(h, wh_ref[...], preferred_element_type=jnp.float32)
+        + b_ref[0, :][None, :].astype(jnp.float32)
+    )
+
+
 def _lstm_kernel(wx_ref, wh_ref, b_ref, x_ref, h_ref, c_ref, h_out_ref, c_out_ref,
                  *, hidden: int):
     x = x_ref[...]
     h = h_ref[...]
     c = c_ref[...]
-    gates = (
-        jnp.dot(x, wx_ref[...], preferred_element_type=jnp.float32)
-        + jnp.dot(h, wh_ref[...], preferred_element_type=jnp.float32)
-        + b_ref[0, :][None, :].astype(jnp.float32)
-    )
+    gates = _gates(wx_ref, wh_ref, b_ref, x, h)
     i = gates[:, 0 * hidden : 1 * hidden]
     f = gates[:, 1 * hidden : 2 * hidden]
     g = gates[:, 2 * hidden : 3 * hidden]
@@ -41,33 +54,184 @@ def _lstm_kernel(wx_ref, wh_ref, b_ref, x_ref, h_ref, c_ref, h_out_ref, c_out_re
     c_out_ref[...] = c_new.astype(c_out_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def lstm_cell_padded(wx, wh, b, x, h, c, *, interpret: bool = False):
-    """Padded entry: B % BLOCK_B == 0; I, H already lane-aligned by ops.py."""
+def _lstm_fwd_kernel(wx_ref, wh_ref, b_ref, x_ref, h_ref, c_ref,
+                     h_out_ref, c_out_ref, act_ref, *, hidden: int):
+    """Forward that also emits the gate activations as backward residuals."""
+    x = x_ref[...]
+    h = h_ref[...]
+    c = c_ref[...]
+    gates = _gates(wx_ref, wh_ref, b_ref, x, h)
+    si = jax.nn.sigmoid(gates[:, 0 * hidden : 1 * hidden])
+    sf = jax.nn.sigmoid(gates[:, 1 * hidden : 2 * hidden])
+    tg = jnp.tanh(gates[:, 2 * hidden : 3 * hidden])
+    so = jax.nn.sigmoid(gates[:, 3 * hidden : 4 * hidden])
+    c_new = sf * c.astype(jnp.float32) + si * tg
+    h_new = so * jnp.tanh(c_new)
+    h_out_ref[...] = h_new.astype(h_out_ref.dtype)
+    c_out_ref[...] = c_new.astype(c_out_ref.dtype)
+    act_ref[...] = jnp.concatenate([si, sf, tg, so], axis=1).astype(act_ref.dtype)
+
+
+def _lstm_bwd_kernel(wx_ref, wh_ref, x_ref, h_ref, c_ref, c_new_ref, act_ref,
+                     dh_ref, dc_ref,
+                     dx_ref, dhp_ref, dcp_ref, dwx_ref, dwh_ref, db_ref,
+                     *, hidden: int):
+    """Fused backward: (dh, dc) -> (dx, dh_prev, dc_prev, dwx, dwh, db)."""
+    act = act_ref[...].astype(jnp.float32)
+    si = act[:, 0 * hidden : 1 * hidden]
+    sf = act[:, 1 * hidden : 2 * hidden]
+    tg = act[:, 2 * hidden : 3 * hidden]
+    so = act[:, 3 * hidden : 4 * hidden]
+    c = c_ref[...].astype(jnp.float32)
+    tc = jnp.tanh(c_new_ref[...].astype(jnp.float32))
+    dh = dh_ref[...].astype(jnp.float32)
+    dc = dc_ref[...].astype(jnp.float32)
+
+    # h = so * tanh(c_new); c_new = sf * c + si * tg
+    do_pre = dh * tc * so * (1.0 - so)
+    dct = dc + dh * so * (1.0 - tc * tc)
+    df_pre = dct * c * sf * (1.0 - sf)
+    di_pre = dct * tg * si * (1.0 - si)
+    dg_pre = dct * si * (1.0 - tg * tg)
+    dgates = jnp.concatenate([di_pre, df_pre, dg_pre, do_pre], axis=1)  # (B,4H)
+
+    # contract the 4H axis without materializing transposed weights
+    contract_4h = (((1,), (1,)), ((), ()))
+    dx_ref[...] = jax.lax.dot_general(
+        dgates, wx_ref[...], contract_4h,
+        preferred_element_type=jnp.float32).astype(dx_ref.dtype)
+    dhp_ref[...] = jax.lax.dot_general(
+        dgates, wh_ref[...], contract_4h,
+        preferred_element_type=jnp.float32).astype(dhp_ref.dtype)
+    dcp_ref[...] = (dct * sf).astype(dcp_ref.dtype)
+
+    # weight/bias grads sum over the whole batch: every grid step maps to the
+    # same output block, so zero it on the first step and accumulate after.
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        dwx_ref[...] = jnp.zeros_like(dwx_ref)
+        dwh_ref[...] = jnp.zeros_like(dwh_ref)
+        db_ref[...] = jnp.zeros_like(db_ref)
+
+    contract_b = (((0,), (0,)), ((), ()))
+    dwx_ref[...] += jax.lax.dot_general(
+        x_ref[...], dgates, contract_b,
+        preferred_element_type=jnp.float32).astype(dwx_ref.dtype)
+    dwh_ref[...] += jax.lax.dot_general(
+        h_ref[...], dgates, contract_b,
+        preferred_element_type=jnp.float32).astype(dwh_ref.dtype)
+    db_ref[...] += jnp.sum(dgates, axis=0)[None, :].astype(db_ref.dtype)
+
+
+def _lstm_call_specs():
+    full = lambda rows, cols: pl.BlockSpec((rows, cols), lambda i: (0, 0))
+    tile = lambda cols: pl.BlockSpec((BLOCK_B, cols), lambda i: (i, 0))
+    return full, tile
+
+
+def _lstm_fwd_call(wx, wh, b, x, h, c, *, interpret: bool, with_acts: bool):
     bsz, input_size = x.shape
     hidden = h.shape[1]
     dtype = x.dtype
     grid = (bsz // BLOCK_B,)
-    kernel = functools.partial(_lstm_kernel, hidden=hidden)
-    h_new, c_new = pl.pallas_call(
+    full, tile = _lstm_call_specs()
+    in_specs = [
+        full(input_size, 4 * hidden),
+        full(hidden, 4 * hidden),
+        full(1, 4 * hidden),
+        tile(input_size),
+        tile(hidden),
+        tile(hidden),
+    ]
+    out_specs = [tile(hidden), tile(hidden)]
+    out_shape = [
+        jax.ShapeDtypeStruct((bsz, hidden), dtype),
+        jax.ShapeDtypeStruct((bsz, hidden), dtype),
+    ]
+    if with_acts:
+        kernel = functools.partial(_lstm_fwd_kernel, hidden=hidden)
+        out_specs = out_specs + [tile(4 * hidden)]
+        out_shape = out_shape + [jax.ShapeDtypeStruct((bsz, 4 * hidden), dtype)]
+    else:
+        kernel = functools.partial(_lstm_kernel, hidden=hidden)
+    return pl.pallas_call(
+        kernel, grid=grid, in_specs=in_specs, out_specs=out_specs,
+        out_shape=out_shape, interpret=interpret,
+    )(wx, wh, b[None, :], x, h, c)
+
+
+def _lstm_bwd_call(wx, wh, x, h, c, c_new, act, dh, dc, *, interpret: bool):
+    bsz, input_size = x.shape
+    hidden = h.shape[1]
+    dtype = x.dtype
+    grid = (bsz // BLOCK_B,)
+    full, tile = _lstm_call_specs()
+    kernel = functools.partial(_lstm_bwd_kernel, hidden=hidden)
+    dx, dhp, dcp, dwx, dwh, db = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((input_size, 4 * hidden), lambda i: (0, 0)),
-            pl.BlockSpec((hidden, 4 * hidden), lambda i: (0, 0)),
-            pl.BlockSpec((1, 4 * hidden), lambda i: (0, 0)),
-            pl.BlockSpec((BLOCK_B, input_size), lambda i: (i, 0)),
-            pl.BlockSpec((BLOCK_B, hidden), lambda i: (i, 0)),
-            pl.BlockSpec((BLOCK_B, hidden), lambda i: (i, 0)),
+            full(input_size, 4 * hidden),
+            full(hidden, 4 * hidden),
+            tile(input_size),          # x
+            tile(hidden),              # h
+            tile(hidden),              # c
+            tile(hidden),              # c_new
+            tile(4 * hidden),          # gate activations
+            tile(hidden),              # dh
+            tile(hidden),              # dc
         ],
         out_specs=[
-            pl.BlockSpec((BLOCK_B, hidden), lambda i: (i, 0)),
-            pl.BlockSpec((BLOCK_B, hidden), lambda i: (i, 0)),
+            tile(input_size),
+            tile(hidden),
+            tile(hidden),
+            full(input_size, 4 * hidden),
+            full(hidden, 4 * hidden),
+            full(1, 4 * hidden),
         ],
         out_shape=[
+            jax.ShapeDtypeStruct((bsz, input_size), dtype),
             jax.ShapeDtypeStruct((bsz, hidden), dtype),
             jax.ShapeDtypeStruct((bsz, hidden), dtype),
+            jax.ShapeDtypeStruct((input_size, 4 * hidden), dtype),
+            jax.ShapeDtypeStruct((hidden, 4 * hidden), dtype),
+            jax.ShapeDtypeStruct((1, 4 * hidden), dtype),
         ],
         interpret=interpret,
-    )(wx, wh, b[None, :], x, h, c)
-    return h_new, c_new
+    )(wx, wh, x, h, c, c_new, act, dh, dc)
+    return dwx, dwh, db[0], dx, dhp, dcp
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _lstm_cell_padded(interpret, wx, wh, b, x, h, c):
+    return _lstm_fwd_call(wx, wh, b, x, h, c, interpret=interpret,
+                          with_acts=False)
+
+
+def _lstm_cell_padded_fwd(interpret, wx, wh, b, x, h, c):
+    h_new, c_new, act = _lstm_fwd_call(wx, wh, b, x, h, c,
+                                       interpret=interpret, with_acts=True)
+    return (h_new, c_new), (wx, wh, x, h, c, c_new, act)
+
+
+def _lstm_cell_padded_bwd(interpret, res, cotangents):
+    wx, wh, x, h, c, c_new, act = res
+    dh, dc = cotangents
+    dwx, dwh, db, dx, dhp, dcp = _lstm_bwd_call(
+        wx, wh, x, h, c, c_new, act,
+        jnp.asarray(dh, x.dtype), jnp.asarray(dc, x.dtype),
+        interpret=interpret)
+    return dwx, dwh, db, dx, dhp, dcp
+
+
+_lstm_cell_padded.defvjp(_lstm_cell_padded_fwd, _lstm_cell_padded_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def lstm_cell_padded(wx, wh, b, x, h, c, *, interpret: bool = False):
+    """Padded entry: B % BLOCK_B == 0; I, H already lane-aligned by ops.py.
+
+    Differentiable end-to-end: the custom_vjp's backward is the fused
+    gradient kernel (see module docstring).
+    """
+    return _lstm_cell_padded(interpret, wx, wh, b, x, h, c)

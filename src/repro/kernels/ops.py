@@ -4,6 +4,12 @@ Handles: (a) interpret-mode dispatch (kernels execute in Python on CPU, run
 natively on TPU), (b) padding to hardware-aligned shapes (lanes=128,
 sublanes=8) and stripping, (c) constrained-space parameter transforms so the
 kernels stay pure recurrences.
+
+Every wrapper is differentiable: the kernels carry custom_vjp rules
+(analytic backward kernels in hw_scan.py / lstm_cell.py), the constrained
+transforms (sigmoid/exp) and the pad/strip plumbing here are plain jnp ops
+whose transposes JAX derives, and pad lanes are gradient-isolated
+(:func:`_pad_to`) so ``use_pallas=True`` trains end-to-end.
 """
 
 from __future__ import annotations
@@ -23,13 +29,27 @@ def _interpret() -> bool:
 
 
 def _pad_to(x, mult, axis):
+    """Pad ``axis`` up to a multiple of ``mult`` with edge values.
+
+    Edge values (not zeros) keep the HW recurrence finite in pad lanes
+    (y/s/l stay positive, no 0/0). The pad block is wrapped in
+    ``stop_gradient``: a plain ``jnp.pad(mode="edge")`` transposes by
+    *summing* pad-lane cotangents back into the last real lane, so any
+    cotangent mass landing on a duplicated pad lane would corrupt the last
+    series' gradient. With the kernels now differentiable, pad lanes must be
+    gradient-dead by construction (asserted padded-vs-unpadded identical in
+    tests/kernels/test_hw_scan.py).
+    """
     size = x.shape[axis]
     rem = (-size) % mult
     if rem == 0:
         return x
-    pads = [(0, 0)] * x.ndim
-    pads[axis] = (0, rem)
-    return jnp.pad(x, pads, mode="edge")
+    idx = [slice(None)] * x.ndim
+    idx[axis] = slice(size - 1, size)
+    edge = jax.lax.stop_gradient(x[tuple(idx)])
+    reps = [1] * x.ndim
+    reps[axis] = rem
+    return jnp.concatenate([x, jnp.tile(edge, reps)], axis=axis)
 
 
 # ---------------------------------------------------------------------------

@@ -10,6 +10,10 @@ estimator; ``predict``/``eval`` run on a saved estimator (``--dir``) or fit a
 fresh one; ``serve`` runs the batched pad-to-bucket forecast server over a
 synthetic ragged request stream and reports throughput + jit-cache reuse,
 mirroring the prefill/decode serving loop of ``repro.launch.serve``.
+
+``--set use_pallas=true`` routes fit *and* predict through the Pallas
+kernels (trainable via their custom_vjp backward kernels; interpret mode
+off-TPU); it composes with ``--devices N`` series data parallelism.
 """
 
 from __future__ import annotations
@@ -152,7 +156,8 @@ def main(argv=None):
                             "(CPU: export XLA_FLAGS="
                             "--xla_force_host_platform_device_count=N)")
         p.add_argument("--set", action="append", metavar="KEY=VAL",
-                       help="spec/model override, e.g. --set hidden_size=16")
+                       help="spec/model override, e.g. --set hidden_size=16 "
+                            "or --set use_pallas=true (trainable kernel path)")
 
     p_fit = sub.add_parser("fit", help="train an estimator")
     common(p_fit)

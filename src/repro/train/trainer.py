@@ -132,6 +132,11 @@ def train_esrnn(
         check_series_divisible(min(cfg.batch_size, data.n_series), mesh)
         log.info("series-data-parallel training on %d devices (%s)",
                  mesh.devices.size, ",".join(mesh.axis_names))
+    if mcfg.use_pallas:
+        # trains end-to-end: hw_scan/lstm_cell carry custom_vjp backward
+        # kernels (interpret mode off-TPU), so no forward-only fallback here
+        log.info("training through the Pallas kernel path (backend=%s)",
+                 jax.default_backend())
     cfg_adam = AdamConfig(
         lr=cfg.lr,
         clip_norm=cfg.clip_norm,

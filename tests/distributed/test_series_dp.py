@@ -6,8 +6,9 @@ host device count at first jax init (the main test process must keep seeing
 one device). Spec/guard tests run in-process on the 1-device mesh.
 
 Tolerances (documented, asserted below): the shard_map path evaluates the
-same math with per-shard partial sums pmean-reduced, so results differ from
-the single-device batch mean only by float32 summation order --
+same math with per-shard partial sums psum-reduced into a single global
+masked mean (exact even for unequal per-shard mask counts), so results
+differ from the single-device batch mean only by float32 summation order --
 |loss_dp - loss| <= 1e-6 per evaluation, and <= 5e-7 * step accumulated
 drift over an Adam trajectory (we assert atol=1e-5 over 12 smoke steps,
 ~400x headroom on what we observe, ~2e-8).
@@ -18,6 +19,7 @@ import subprocess
 import sys
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -73,6 +75,33 @@ def test_make_series_mesh_rejects_unavailable_devices():
         series.make_series_mesh(n + 1)
 
 
+def test_masked_mean_exact_on_available_devices():
+    """psum(sum)/psum(count) masked-mean semantics on the default backend.
+
+    With one device this degenerates to the single-device mean; under the
+    CI sharded-smoke job (8 forced host devices) the shards carry unequal
+    valid-target counts and the equality is the real exactness check (the
+    8-device-from-1-process variant lives in the subprocess test below).
+    """
+    from repro.core.esrnn import esrnn_loss
+
+    d = len(jax.devices())
+    mesh = series.make_series_mesh(d)
+    cfg = make_config("quarterly", hidden_size=8)
+    rng = np.random.default_rng(1)
+    n, t = 2 * d, 60
+    y = jnp.asarray(np.abs(rng.lognormal(3, 0.5, (n, t))).astype(np.float32) + 1)
+    cats = jnp.asarray(np.eye(6, dtype=np.float32)[rng.integers(0, 6, n)])
+    mask = np.ones((n, t), np.float32)
+    for i in range(n):
+        mask[i, : rng.integers(0, t // 3)] = 0.0  # ragged -> unequal shards
+    mask = jnp.asarray(mask)
+    params = esrnn_init(jax.random.PRNGKey(0), cfg, n)
+    l_single = esrnn_loss(cfg, params, y, cats, mask)
+    l_dp = series.esrnn_loss_dp(cfg, params, y, cats, mask, mesh=mesh)
+    assert abs(float(l_single) - float(l_dp)) <= 1e-6
+
+
 _SUBPROC = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -109,6 +138,36 @@ hlo = (jax.jit(jax.grad(lambda p: esrnn_loss_dp(cfg, p, y, cats, mesh=mesh)))
        .lower(params).compile().as_text())
 out["grad_has_all_reduce"] = "all-reduce" in hlo
 
+# -- exact global masked mean under unequal per-shard mask counts -----------
+# ragged left-padding: every series (and so every 2-series shard) has a
+# different valid-target count; psum(sum)/psum(count) must still equal the
+# single-device masked mean (the old per-shard-mean pmean did not)
+mask = np.ones((n, 72), np.float32)
+for i in range(n):
+    mask[i, : rng.integers(0, 30)] = 0.0
+mask = jnp.asarray(mask)
+counts = [float(mask[s : s + 2].sum()) for s in range(0, n, 2)]
+out["shard_mask_counts_unequal"] = len(set(counts)) > 1
+l_single_m = esrnn_loss(cfg, params, y, cats, mask)
+l_dp_m = esrnn_loss_dp(cfg, params, y, cats, mask, mesh=mesh)
+out["masked_loss_absdiff"] = float(abs(l_single_m - l_dp_m))
+g_single_m = jax.grad(lambda p: esrnn_loss(cfg, p, y, cats, mask))(params)
+g_dp_m = jax.grad(
+    lambda p: esrnn_loss_dp(cfg, p, y, cats, mask, mesh=mesh))(params)
+out["masked_grad_absdiff"] = float(max(
+    jax.tree_util.tree_leaves(jax.tree_util.tree_map(
+        lambda a, b: jnp.max(jnp.abs(a - b)), g_single_m, g_dp_m))))
+
+# -- Pallas kernel path composes with shard_map -----------------------------
+cfg_k = make_config("quarterly", hidden_size=8, use_pallas=True)
+l_dp_k = esrnn_loss_dp(cfg_k, params, y, cats, mask, mesh=mesh)
+out["pallas_dp_loss_absdiff"] = float(abs(l_single_m - l_dp_k))
+g_dp_k = jax.grad(
+    lambda p: esrnn_loss_dp(cfg_k, p, y, cats, mask, mesh=mesh))(params)
+out["pallas_dp_grad_absdiff"] = float(max(
+    jax.tree_util.tree_leaves(jax.tree_util.tree_map(
+        lambda a, b: jnp.max(jnp.abs(a - b)), g_single_m, g_dp_k))))
+
 # -- fit equivalence through the public estimator ---------------------------
 spec = get_smoke_spec("esrnn-quarterly", data_seed=3, n_steps=12)
 f_single = ESRNNForecaster(spec).fit()
@@ -136,6 +195,14 @@ def test_sharded_fit_matches_single_device_on_8_devices():
     assert out["grad_absdiff"] <= 1e-6, out
     # shared-weight grads are psum'd across the series axis
     assert out["grad_has_all_reduce"], "dp grad compiled without a collective"
+    # exact global masked mean: unequal per-shard valid counts still match
+    # the single-device masked mean (psum(sum)/psum(count) semantics)
+    assert out["shard_mask_counts_unequal"], "test data failed to be ragged"
+    assert out["masked_loss_absdiff"] <= 1e-6, out
+    assert out["masked_grad_absdiff"] <= 1e-6, out
+    # the trainable Pallas kernel path composes with shard_map
+    assert out["pallas_dp_loss_absdiff"] <= 1e-6, out
+    assert out["pallas_dp_grad_absdiff"] <= 1e-6, out
     # full smoke fit through ESRNNForecaster: documented atol=1e-5 over the
     # 12-step Adam trajectory (observed ~2e-8); forecasts track to 1e-4 rel
     assert out["n_steps"] == 12
