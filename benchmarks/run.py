@@ -3,11 +3,12 @@
 ``python -m benchmarks.run [--fast]`` runs Table 4/5/6 analogs and the
 roofline report, printing ``name,us_per_call,derived`` CSV lines plus the
 human-readable tables, and saving JSON under experiments/bench/. It also
-writes the repo-root ``BENCH_PR3.json`` trajectory point (speedup through
-the public estimator, the ``use_pallas`` train-step timing column, sMAPE,
-device sweep, git sha) that CI archives as an artifact -- the perf record
-the next regression gets compared against (``BENCH_PR2.json`` is the prior
-point, kept for comparison).
+writes the repo-root ``BENCH_PR4.json`` trajectory point (speedup through
+the public estimator, the ``use_pallas`` train-step timing column, the
+fused-engine ``scan_steps`` steps/sec column, sMAPE, device sweep, git sha)
+that CI archives as an artifact -- the perf record the next regression gets
+compared against (``BENCH_PR2.json``/``BENCH_PR3.json`` are the prior
+points, kept for comparison).
 """
 
 import argparse
@@ -17,7 +18,7 @@ import subprocess
 import time
 
 BENCH_TRAJECTORY = os.path.join(
-    os.path.dirname(__file__), "..", "BENCH_PR3.json")
+    os.path.dirname(__file__), "..", "BENCH_PR4.json")
 
 
 def _git_sha() -> str:
@@ -31,11 +32,11 @@ def _git_sha() -> str:
 
 
 def write_trajectory(t5, t4) -> str:
-    """BENCH_PR3.json: the machine-readable perf point CI archives."""
+    """BENCH_PR4.json: the machine-readable perf point CI archives."""
     import jax
 
     payload = {
-        "bench": "PR3",
+        "bench": "PR4",
         "git_sha": _git_sha(),
         "devices": len(jax.devices()),
         "speedup_vectorized_vs_loop": t5["estimator_path"]["speedup"],
@@ -44,6 +45,9 @@ def write_trajectory(t5, t4) -> str:
         # trainable-kernel column: full value_and_grad step through the
         # custom_vjp kernel path vs pure jax (interpret mode off-TPU)
         "train_step": t5["train_step"],
+        # fused-engine column: steps/sec for scan_steps in {1, 32} at batch
+        # 64 on the same schedule (final losses must agree; CI asserts it)
+        "scan_steps": t5["scan_steps"],
         "smape_quarterly": t4["per_frequency"]["quarterly"]["esrnn"]["smape"],
         "owa_quarterly": t4["per_frequency"]["quarterly"]["esrnn"]["owa"],
         "device_sweep": t5["device_sweep"],
@@ -77,6 +81,12 @@ def main() -> None:
     print(f"  train step (batch {ts['batch']}, backend {ts['backend']}): "
           f"pure-jax {ts['use_pallas_false']['step_s']:.4f}s  "
           f"pallas {ts['use_pallas_true']['step_s']:.4f}s")
+    sc = t5["scan_steps"]
+    cells = "  ".join(f"scan{r['scan_steps']}={r['steps_per_sec']:.0f}/s"
+                      for r in sc["rows"])
+    print(f"  fused engine (batch {sc['batch']}): {cells}  "
+          f"-> {sc['speedup_scan_vs_perstep']:.2f}x, "
+          f"loss diff {sc['final_loss_absdiff']:.1e}")
 
     t0 = time.perf_counter()
     t4 = table4_accuracy.run(fast=args.fast)

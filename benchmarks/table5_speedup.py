@@ -144,6 +144,114 @@ def train_step_timing(fast: bool = False):
     return out
 
 
+def scan_steps_timing(fast: bool = False, scan_steps=(1, 32)):
+    """Fused-superstep column: steps/sec for ``scan_steps`` in {1, 32}.
+
+    Times the two training engines on the same stateless schedule: the
+    per-step loop (one donated jit dispatch + one host sync per step -- the
+    dispatch-bound baseline) vs the fused ``lax.scan`` superstep (one
+    dispatch + one sync per 32 steps). The operating point is deliberately
+    *small* (batch 64 of a 256-row table, T=8, hidden 4, one LSTM layer):
+    per-step compute then sits at dispatch-overhead scale, which is the
+    regime the fusion targets -- on a big model the same column measures the
+    host-sync stall instead. Both engines must land on the same final loss
+    (``final_loss_absdiff``; the scan is the same step math in the same
+    order), which the CI gate asserts.
+
+    Also reports the sparse per-series Adam variant (``scan32_sparse_bigN``)
+    on an M4-sized table (16k rows fast / 65k full): the segment update
+    touches only the batch's 64 rows where dense Adam walks the whole table
+    every step.
+    """
+    from repro.data.pipeline import batch_indices, batch_schedule
+    from repro.train.engine import (
+        make_perstep_fn, make_step_fn, make_superstep_fn,
+    )
+    from repro.train.optimizer import (
+        AdamConfig, adam_init, adam_init_sparse,
+    )
+
+    def build(n, t, sparse):
+        rng = np.random.default_rng(0)
+        y = jnp.asarray(np.abs(rng.lognormal(3, 0.5, (n, t))).astype(np.float32) + 1)
+        cats = jnp.asarray(np.eye(6, dtype=np.float32)[rng.integers(0, 6, n)])
+        mask = jnp.ones((n, t), jnp.float32)
+        cfg = make_config("quarterly", hidden_size=4, input_size=4,
+                          output_size=4, dilations=((1,),))
+        cfg_adam = AdamConfig(lr=1e-3, clip_norm=20.0,
+                              group_lr={"per_series": 10.0, "default": 1.0})
+        step = make_step_fn(cfg, cfg_adam, y, cats, mask, sparse=sparse)
+        params = esrnn_init(jax.random.PRNGKey(0), cfg, n)
+        opt = adam_init_sparse(params) if sparse else adam_init(params)
+        return step, params, opt
+
+    n, t, bs = 256, 8, 64
+    steps = 64 if fast else 128
+    repeats = 3                         # best-of-3: shields the CI runner's
+                                        # scheduler noise out of the ratio
+    out = {"backend": jax.default_backend(), "batch": bs, "n_series": n,
+           "t_len": t, "steps_timed": steps, "repeats": repeats, "rows": []}
+    final_losses = {}
+    for k in scan_steps:
+        step, _, _ = build(n, t, sparse=False)
+        fn = make_perstep_fn(step) if k <= 1 else make_superstep_fn(step)
+        best = float("inf")
+        for _ in range(repeats):
+            params, opt = build(n, t, sparse=False)[1:]
+            if k <= 1:
+                # warm outside the clock (compiles on the first repeat only)
+                params, opt, l = fn(params, opt,
+                                    jnp.asarray(batch_indices(n, bs, 0)))
+                params, opt = build(n, t, sparse=False)[1:]
+                t0 = time.perf_counter()
+                for s in range(steps):
+                    idx = jnp.asarray(batch_indices(n, bs, s))
+                    params, opt, l = fn(params, opt, idx)
+                    final_losses[k] = float(l)  # host sync, as the trainer does
+                best = min(best, time.perf_counter() - t0)
+            else:
+                params, opt, ls = fn(params, opt,
+                                     jnp.asarray(batch_schedule(n, bs, 0, k)))
+                params, opt = build(n, t, sparse=False)[1:]
+                t0 = time.perf_counter()
+                for s0 in range(0, steps, k):
+                    sched = jnp.asarray(batch_schedule(n, bs, s0, k))
+                    params, opt, ls = fn(params, opt, sched)
+                    losses = np.asarray(ls)     # one host sync per superstep
+                best = min(best, time.perf_counter() - t0)
+                final_losses[k] = float(losses[-1])
+        out["rows"].append({"scan_steps": k, "steps_per_sec": steps / best,
+                            "step_s": best / steps,
+                            "final_loss": final_losses[k]})
+    if len(final_losses) >= 2:
+        # key by scan_steps, not argument order: the ratio is always
+        # most-fused over least-fused no matter how the tuple was passed
+        by_k = {r["scan_steps"]: r for r in out["rows"]}
+        lo, hi = min(by_k), max(by_k)
+        out["speedup_scan_vs_perstep"] = (
+            by_k[hi]["steps_per_sec"] / by_k[lo]["steps_per_sec"])
+        out["final_loss_absdiff"] = abs(final_losses[lo] - final_losses[hi])
+
+    # sparse per-series Adam on an M4-sized table: dense Adam walks every
+    # row every step (plus the zero-padded scatter gradient), the segment
+    # update touches only the batch's 64 -- the gap widens linearly with N
+    # (measured here: ~2x at 16k rows, ~4.7x at 65k)
+    n_big = 16384 if fast else 65536
+    k = max(scan_steps)
+    for label, sparse in (("scan32_dense_bigN", False), ("scan32_sparse_bigN", True)):
+        step, params, opt = build(n_big, t, sparse=sparse)
+        fn = make_superstep_fn(step)
+        params, opt, ls = fn(params, opt,
+                             jnp.asarray(batch_schedule(n_big, bs, 0, k)))  # warm
+        t0 = time.perf_counter()
+        params, opt, ls = fn(params, opt,
+                             jnp.asarray(batch_schedule(n_big, bs, k, k)))
+        np.asarray(ls)
+        dt = time.perf_counter() - t0
+        out[label] = {"n_series": n_big, "steps_per_sec": k / dt}
+    return out
+
+
 def device_sweep(devices=DEVICE_SWEEP, *, fast: bool = False):
     """--devices sweep: the vectorized loss+grad step, series-sharded.
 
@@ -210,6 +318,7 @@ def run(fast: bool = False, devices=DEVICE_SWEEP):
            "hw_component": _hw_component(256 if fast else 2048),
            "estimator_path": _estimator_path(fast),
            "train_step": train_step_timing(fast),
+           "scan_steps": scan_steps_timing(fast),
            "device_sweep": device_sweep(devices, fast=fast),
            "paper_speedups": {"quarterly": 322, "monthly": 113},
            "note": ("single-core host: both paths share one core, so the "
@@ -246,6 +355,15 @@ def main(argv=None):
     print(f"train step (batch {ts['batch']}, backend {ts['backend']}): "
           f"pure-jax {ts['use_pallas_false']['step_s']:.4f}s vs "
           f"pallas {ts['use_pallas_true']['step_s']:.4f}s")
+    sc = out["scan_steps"]
+    for r in sc["rows"]:
+        print(f"engine scan_steps={r['scan_steps']:3d} (batch {sc['batch']}): "
+              f"{r['steps_per_sec']:8.1f} steps/s  final loss {r['final_loss']:.6f}")
+    print(f"fused-vs-perstep speedup {sc['speedup_scan_vs_perstep']:.2f}x, "
+          f"final-loss absdiff {sc['final_loss_absdiff']:.2e}; sparse Adam on "
+          f"{sc['scan32_sparse_bigN']['n_series']} rows: "
+          f"{sc['scan32_sparse_bigN']['steps_per_sec']:.1f} steps/s vs dense "
+          f"{sc['scan32_dense_bigN']['steps_per_sec']:.1f}")
     for r in out["device_sweep"]:
         print(f"series-sharded step on {r['devices']} device(s), "
               f"batch {r['batch']}: {r['step_s']:.4f}s")

@@ -14,6 +14,10 @@ python -m pytest -x -q
 echo "== forecast fit smoke (20 steps) =="
 python -m repro.launch.forecast fit --spec esrnn-quarterly --smoke --steps 20
 
+echo "== fused-superstep fit smoke (scan_steps=8, sparse per-series adam) =="
+python -m repro.launch.forecast fit --spec esrnn-quarterly --smoke --steps 20 \
+    --set scan_steps=8 --set sparse_adam=true
+
 echo "== forecast serve smoke =="
 python -m repro.launch.forecast serve --smoke --steps 3 --requests 16
 

@@ -320,10 +320,32 @@ def gather_series(params, idx):
 
     The gradient scatter back to the full table happens automatically
     through the indexing when differentiated (used by the trainer and the
-    serving path).
+    serving path). Note the scattered gradient is a dense zero-padded
+    (N, ...) table; the sparse-optimizer path avoids it by differentiating
+    w.r.t. the gathered rows directly (see :func:`partition_series` and
+    ``repro.train.engine``).
     """
     return {k: (jax.tree_util.tree_map(lambda a: a[idx], v) if k == "hw" else v)
             for k, v in params.items()}
+
+
+def partition_series(params, idx):
+    """Split params into (gathered per-series rows, shared weights).
+
+    ``hw_rows`` is the per-series subtree gathered at ``idx`` (leaves
+    (B, ...)); ``shared`` is everything else, untouched. Differentiating a
+    loss w.r.t. ``hw_rows`` yields *per-row* gradients -- no zero-padded
+    scatter over the full table -- which is what the sparse segment
+    optimizer (``adam_update_sparse``) consumes.
+    """
+    hw_rows = jax.tree_util.tree_map(lambda a: a[idx], params["hw"])
+    shared = {k: v for k, v in params.items() if k != "hw"}
+    return hw_rows, shared
+
+
+def combine_series(hw_rows, shared):
+    """Inverse of :func:`partition_series` (batch-rows params tree)."""
+    return {"hw": hw_rows, **shared}
 
 
 # ---------------------------------------------------------------------------

@@ -14,6 +14,7 @@
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Iterator, Optional, Tuple
 
 import numpy as np
@@ -116,22 +117,61 @@ def prepare(
     )
 
 
+@functools.lru_cache(maxsize=64)
+def epoch_permutation(n_series: int, epoch: int, seed: int = 0) -> np.ndarray:
+    """The (cached) series permutation for one epoch of the schedule.
+
+    Bit-identical to ``np.random.default_rng(SeedSequence([seed, epoch]))
+    .permutation(n_series)`` -- the contract :func:`batch_indices` has always
+    had -- but materialized once per ``(n_series, epoch, seed)`` instead of
+    on every call: a 300-step epoch used to re-draw the same permutation 300
+    times. The returned array is marked read-only because it is shared by
+    every caller of the cache.
+    """
+    rng = np.random.default_rng(np.random.SeedSequence([seed, epoch]))
+    perm = rng.permutation(n_series)
+    perm.flags.writeable = False
+    return perm
+
+
 def batch_indices(
     n_series: int, batch_size: int, step: int, *, seed: int = 0
 ) -> np.ndarray:
     """Stateless batch schedule: (epoch, step-within-epoch) -> series indices.
 
     Deterministic in (seed, step); a restarted trainer replays the same order
-    without any iterator state in the checkpoint.
+    without any iterator state in the checkpoint. The per-epoch permutation
+    comes from the :func:`epoch_permutation` cache, so repeated calls within
+    an epoch only slice.
     """
     steps_per_epoch = max(1, -(-n_series // batch_size))
     epoch, k = divmod(step, steps_per_epoch)
-    rng = np.random.default_rng(np.random.SeedSequence([seed, epoch]))
-    perm = rng.permutation(n_series)
+    perm = epoch_permutation(n_series, epoch, seed)
     sl = perm[k * batch_size : (k + 1) * batch_size]
     if len(sl) < batch_size:  # wrap to keep shapes static
         sl = np.concatenate([sl, perm[: batch_size - len(sl)]])
-    return sl
+    return np.array(sl)  # private, writable copy (the cache stays frozen)
+
+
+def batch_schedule(
+    n_series: int, batch_size: int, start_step: int, n_steps: int, *,
+    seed: int = 0,
+) -> np.ndarray:
+    """Materialize ``n_steps`` of the stateless schedule as one index array.
+
+    Returns an ``(n_steps, batch_size)`` int array whose row ``i`` equals
+    ``batch_indices(n_series, batch_size, start_step + i, seed=seed)`` -- the
+    fused training engine uploads it to the device once and ``lax.scan``s
+    over the rows, instead of drawing + transferring one batch per Python
+    step. Stateless in ``start_step``, so a resumed run slices the same
+    global schedule (fault-tolerance contract unchanged).
+    """
+    if n_steps <= 0:
+        return np.empty((0, batch_size), dtype=np.int64)
+    return np.stack([
+        batch_indices(n_series, batch_size, s, seed=seed)
+        for s in range(start_step, start_step + n_steps)
+    ])
 
 
 def iterate_batches(

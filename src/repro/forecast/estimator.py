@@ -115,6 +115,14 @@ class ESRNNForecaster:
         one, ``spec.data_parallel > 1`` builds a mesh over that many local
         devices. Fitted params are identical in structure either way, so
         predict/evaluate/save/serve are unchanged.
+
+        ``spec.scan_steps > 1`` trains through the fused superstep engine
+        (K steps per donated ``lax.scan`` dispatch, host sync at superstep
+        boundaries) -- same loss trajectory, fewer dispatches; composes
+        with ``mesh``/``data_parallel`` and ``use_pallas``. When ``hooks``
+        contains ``on_step`` it then fires once per superstep with the
+        segment's loss array. ``spec.sparse_adam`` switches the per-series
+        table to the sparse segment optimizer.
         """
         pdata = self._coerce_data(data)
         out = train_from_spec(self.spec, pdata, ckpt_dir=ckpt_dir,

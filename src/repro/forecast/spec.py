@@ -48,6 +48,13 @@ class ForecastSpec:
     ckpt_every: int = 50
     keep: int = 3
     smoke: bool = False
+    scan_steps: int = 1              # steps fused per donated lax.scan
+                                     # superstep (1 = per-step dispatch);
+                                     # eval/ckpt/hooks fire at superstep
+                                     # boundaries, same absolute steps
+    sparse_adam: bool = False        # segment per-series Adam: touch only
+                                     # the batch's HW rows, closed-form
+                                     # moment catch-up for skipped rows
 
     # -- multi-device scaling ----------------------------------------------
     data_parallel: int = 0           # devices to shard the series axis over

@@ -14,6 +14,12 @@ mirroring the prefill/decode serving loop of ``repro.launch.serve``.
 ``--set use_pallas=true`` routes fit *and* predict through the Pallas
 kernels (trainable via their custom_vjp backward kernels; interpret mode
 off-TPU); it composes with ``--devices N`` series data parallelism.
+
+``--set scan_steps=K`` fuses K training steps into one donated ``lax.scan``
+superstep (the dispatch-bound per-step loop is the K=1 default); eval,
+checkpoints, and hooks fire at superstep boundaries, on the same absolute
+steps. ``--set sparse_adam=true`` adds the sparse per-series Adam segment
+update. Both compose with ``--devices N`` and ``use_pallas``.
 """
 
 from __future__ import annotations
@@ -156,8 +162,10 @@ def main(argv=None):
                             "(CPU: export XLA_FLAGS="
                             "--xla_force_host_platform_device_count=N)")
         p.add_argument("--set", action="append", metavar="KEY=VAL",
-                       help="spec/model override, e.g. --set hidden_size=16 "
-                            "or --set use_pallas=true (trainable kernel path)")
+                       help="spec/model override, e.g. --set hidden_size=16, "
+                            "--set use_pallas=true (trainable kernel path), "
+                            "--set scan_steps=32 (fused superstep engine), "
+                            "--set sparse_adam=true (segment per-series Adam)")
 
     p_fit = sub.add_parser("fit", help="train an estimator")
     common(p_fit)

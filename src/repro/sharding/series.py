@@ -19,6 +19,13 @@ Runs on CPU hosts via forced host devices, which is how CI exercises it:
 
     XLA_FLAGS=--xla_force_host_platform_device_count=8
 
+The loss is a pure traceable function, so the fused training engine
+(``repro.train.engine``) can wrap it in ``jax.lax.scan``: one donated
+superstep scans K training steps, each evaluating this ``shard_map``-wrapped
+loss and its transpose-inserted collectives -- K steps' worth of
+all-reduces dispatch as one XLA computation, which is exactly where
+multi-device training stops being dispatch-bound.
+
 Semantics of :func:`esrnn_loss_dp`: the loss core is evaluated per-shard in
 its decomposed form (``esrnn_loss_terms_fn``: masked pin-ball sum, valid
 count, penalty sum) and reduced exactly -- ``psum(masked_sum) /

@@ -60,6 +60,43 @@ def global_norm(tree):
     return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
 
 
+def _clip_by_global_norm(grads, cfg: AdamConfig):
+    if cfg.clip_norm is None:
+        return grads
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads)
+
+
+def _leaf_lr(path, cfg: AdamConfig, sched, group_fn):
+    mult = 1.0
+    if group_fn is not None:
+        mult = dict(cfg.group_lr or {}).get(group_fn(path), 1.0)
+    return cfg.lr * mult * sched
+
+
+def _dense_leaf_update(path, g, mu, nu, p, *, cfg, step, sched, group_fn):
+    """The one copy of the per-leaf AdamW math (dense and sparse paths)."""
+    g32 = g.astype(jnp.float32)
+    mu_n = cfg.b1 * mu + (1 - cfg.b1) * g32
+    nu_n = cfg.b2 * nu + (1 - cfg.b2) * jnp.square(g32)
+    mu_hat = mu_n / (1 - cfg.b1 ** step.astype(jnp.float32))
+    nu_hat = nu_n / (1 - cfg.b2 ** step.astype(jnp.float32))
+    lr = _leaf_lr(path, cfg, sched, group_fn)
+    upd = mu_hat / (jnp.sqrt(nu_hat) + cfg.eps)
+    if cfg.weight_decay:
+        upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+    return (p.astype(jnp.float32) - lr * upd).astype(p.dtype), mu_n, nu_n
+
+
+def _flat_state(grads, opt_state, params):
+    flat_g = jax.tree_util.tree_flatten_with_path(grads)[0]
+    flat_mu = jax.tree_util.tree_leaves(opt_state["mu"])
+    flat_nu = jax.tree_util.tree_leaves(opt_state["nu"])
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    return flat_g, flat_mu, flat_nu, flat_p, treedef
+
+
 def adam_update(
     grads,
     opt_state,
@@ -71,37 +108,15 @@ def adam_update(
     """One AdamW step. group_fn maps tree path -> group name for group lrs."""
     step = opt_state["step"] + 1
     sched = _schedule_factor(cfg, step)
+    grads = _clip_by_global_norm(grads, cfg)
 
-    if cfg.clip_norm is not None:
-        norm = global_norm(grads)
-        scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(norm, 1e-12))
-        grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
-
-    group_lr = dict(cfg.group_lr or {})
-
-    def leaf_update(path, g, mu, nu, p):
-        g32 = g.astype(jnp.float32)
-        mu_n = cfg.b1 * mu + (1 - cfg.b1) * g32
-        nu_n = cfg.b2 * nu + (1 - cfg.b2) * jnp.square(g32)
-        mu_hat = mu_n / (1 - cfg.b1 ** step.astype(jnp.float32))
-        nu_hat = nu_n / (1 - cfg.b2 ** step.astype(jnp.float32))
-        mult = 1.0
-        if group_fn is not None:
-            mult = group_lr.get(group_fn(path), 1.0)
-        lr = cfg.lr * mult * sched
-        upd = mu_hat / (jnp.sqrt(nu_hat) + cfg.eps)
-        if cfg.weight_decay:
-            upd = upd + cfg.weight_decay * p.astype(jnp.float32)
-        return (p.astype(jnp.float32) - lr * upd).astype(p.dtype), mu_n, nu_n
-
-    flat_g = jax.tree_util.tree_flatten_with_path(grads)[0]
-    flat_mu = jax.tree_util.tree_leaves(opt_state["mu"])
-    flat_nu = jax.tree_util.tree_leaves(opt_state["nu"])
-    flat_p, treedef = jax.tree_util.tree_flatten(params)
-
+    flat_g, flat_mu, flat_nu, flat_p, treedef = _flat_state(
+        grads, opt_state, params)
     new_p, new_mu, new_nu = [], [], []
     for (path, g), mu, nu, p in zip(flat_g, flat_mu, flat_nu, flat_p):
-        p2, mu2, nu2 = leaf_update(path, g, mu, nu, p)
+        p2, mu2, nu2 = _dense_leaf_update(
+            path, g, mu, nu, p, cfg=cfg, step=step, sched=sched,
+            group_fn=group_fn)
         new_p.append(p2)
         new_mu.append(mu2)
         new_nu.append(nu2)
@@ -123,3 +138,124 @@ def esrnn_group_fn(path) -> str:
         if key == "hw":
             return "per_series"
     return "default"
+
+
+# ---------------------------------------------------------------------------
+# Sparse (segment) per-series Adam
+# ---------------------------------------------------------------------------
+#
+# The ES-RNN per-series table ``params["hw"]`` has N rows but each training
+# step touches only the B rows of its batch. The dense path differentiates
+# through the row gather, which scatters a zero-padded (N, ...) gradient and
+# runs Adam over the full table every step -- O(N) work and memory traffic
+# for O(B) information. The sparse path takes the per-row gradients directly
+# (shape (B, ...)), applies Adam only to those rows, and reconciles the rows
+# skipped since their last touch with the closed-form moment catch-up
+# ``mu <- b1^k mu``/``nu <- b2^k nu`` (a zero gradient decays the moments
+# geometrically, so k skipped dense steps collapse into one power).
+#
+# Semantics (asserted by tests/train/test_optimizer.py): moments and the
+# touched rows' bias corrections match the dense path exactly; the one
+# deliberate difference is that *untouched* rows hold still in parameter
+# space, where dense Adam would keep drifting them along their decaying stale
+# momentum (an update that carries no gradient information). With
+# ``b1 = 0`` -- or whenever every row is in every batch -- the two paths are
+# identical step for step.
+
+
+def hw_table_rows(params, hw_key: str = "hw") -> int:
+    """Number of per-series rows in the ``hw`` subtree (its leading axis)."""
+    leaves = jax.tree_util.tree_leaves(params[hw_key])
+    return leaves[0].shape[0]
+
+
+def adam_init_sparse(params, hw_key: str = "hw"):
+    """Adam state for :func:`adam_update_sparse`.
+
+    Same ``mu``/``nu``/``step`` as :func:`adam_init` plus ``t_hw`` (N,), the
+    global step at which each per-series row was last updated (0 = never) --
+    the only extra state the closed-form catch-up needs.
+    """
+    state = adam_init(params)
+    state["t_hw"] = jnp.zeros((hw_table_rows(params, hw_key),), jnp.int32)
+    return state
+
+
+def _is_hw_path(path, hw_key: str) -> bool:
+    for entry in path:
+        if getattr(entry, "key", getattr(entry, "name", None)) == hw_key:
+            return True
+    return False
+
+
+def adam_update_sparse(
+    grads,
+    opt_state,
+    params,
+    cfg: AdamConfig,
+    *,
+    idx,
+    group_fn: Optional[Callable[[tuple], str]] = None,
+    hw_key: str = "hw",
+):
+    """One Adam step touching only the batch's per-series rows.
+
+    ``grads`` mirrors ``params`` except that every leaf under ``hw_key`` is
+    the *per-row* gradient of shape ``(B, ...)`` for the rows ``idx`` (B,)
+    -- i.e. the gradient w.r.t. the gathered batch rows, not the zero-padded
+    scatter over the full table. ``idx`` must not contain duplicates (the
+    stateless epoch-permutation schedule never does for B <= N). Shared
+    (non-hw) leaves update densely, exactly as :func:`adam_update`.
+
+    Global-norm clipping matches the dense path bit-for-bit: the zero padding
+    of the scattered gradient contributes nothing to the norm, so the norm
+    over (per-row hw grads + shared grads) is the same number.
+    """
+    step = opt_state["step"] + 1
+    step_f = step.astype(jnp.float32)
+    sched = _schedule_factor(cfg, step)
+    grads = _clip_by_global_norm(grads, cfg)
+
+    t_hw = opt_state["t_hw"]
+    # rows touched k steps ago: one b1^k / b2^k power replays the k zero-grad
+    # moment decays the dense path performed explicitly
+    k = (step - t_hw[idx]).astype(jnp.float32)                 # (B,)
+    bc1 = 1 - cfg.b1 ** step_f                                 # bias corr.
+    bc2 = 1 - cfg.b2 ** step_f
+
+    def sparse_leaf(path, g, mu, nu, p):
+        kb = k.reshape(k.shape + (1,) * (g.ndim - 1))          # (B, 1...)
+        g32 = g.astype(jnp.float32)
+        mu_rows = (cfg.b1 ** kb) * mu[idx] + (1 - cfg.b1) * g32
+        nu_rows = (cfg.b2 ** kb) * nu[idx] + (1 - cfg.b2) * jnp.square(g32)
+        upd = (mu_rows / bc1) / (jnp.sqrt(nu_rows / bc2) + cfg.eps)
+        p_rows = p[idx].astype(jnp.float32)
+        if cfg.weight_decay:
+            upd = upd + cfg.weight_decay * p_rows
+        lr = _leaf_lr(path, cfg, sched, group_fn)
+        p_new = p.at[idx].set((p_rows - lr * upd).astype(p.dtype))
+        return p_new, mu.at[idx].set(mu_rows), nu.at[idx].set(nu_rows)
+
+    flat_g, flat_mu, flat_nu, flat_p, treedef = _flat_state(
+        grads, opt_state, params)
+    new_p, new_mu, new_nu = [], [], []
+    for (path, g), mu, nu, p in zip(flat_g, flat_mu, flat_nu, flat_p):
+        if _is_hw_path(path, hw_key):
+            p2, mu2, nu2 = sparse_leaf(path, g, mu, nu, p)
+        else:
+            p2, mu2, nu2 = _dense_leaf_update(
+                path, g, mu, nu, p, cfg=cfg, step=step, sched=sched,
+                group_fn=group_fn)
+        new_p.append(p2)
+        new_mu.append(mu2)
+        new_nu.append(nu2)
+
+    return (
+        jax.tree_util.tree_unflatten(treedef, new_p),
+        {
+            "mu": jax.tree_util.tree_unflatten(treedef, new_mu),
+            "nu": jax.tree_util.tree_unflatten(treedef, new_nu),
+            "step": step,
+            "t_hw": t_hw.at[idx].set(step),
+        },
+    )

@@ -1,13 +1,19 @@
 """ES-RNN trainer: joint per-series + shared-weight optimization loop.
 
 Production posture:
+* fused supersteps (``scan_steps > 1``): K steps compile into one donated
+  ``lax.scan`` dispatch over a precomputed on-device batch schedule
+  (``repro.train.engine``); the host syncs once per superstep, which is
+  where eval, checkpointing, the straggler EWMA, and hooks run,
 * checkpoint/restart (atomic, resumable mid-epoch because the batch schedule
-  is stateless in ``step``),
+  is stateless in ``step`` -- a resume lands on any superstep boundary and
+  re-aligns with the same absolute eval/ckpt steps),
 * SIGTERM/SIGINT preemption hook -> checkpoint-and-exit (how a 1000-node job
-  survives maintenance evictions),
-* straggler watchdog: per-step wall-time EWMA; steps slower than
-  ``straggler_factor``x the EWMA are logged (on real fleets this feeds the
-  scheduler; here it exercises the code path),
+  survives maintenance evictions); with fused supersteps the request is
+  honored at the next superstep boundary,
+* straggler watchdog: wall-time EWMA per step (per-step normalized within a
+  superstep); steps slower than ``straggler_factor``x the EWMA are logged
+  (on real fleets this feeds the scheduler; here it exercises the code path),
 * validation-driven best-checkpoint tracking (sMAPE on the held-out window,
   paper section 5.1).
 """
@@ -26,11 +32,12 @@ import numpy as np
 
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.core import losses as L
-from repro.core.esrnn import (
-    _as_config, esrnn_forecast, esrnn_init, esrnn_loss, gather_series,
+from repro.core.esrnn import _as_config, esrnn_forecast, esrnn_init
+from repro.data.pipeline import PreparedData, batch_indices, batch_schedule
+from repro.train.engine import (
+    make_perstep_fn, make_step_fn, make_superstep_fn, segment_steps,
 )
-from repro.data.pipeline import PreparedData, batch_indices
-from repro.train.optimizer import AdamConfig, adam_init, adam_update, esrnn_group_fn
+from repro.train.optimizer import AdamConfig, adam_init, adam_init_sparse
 
 log = logging.getLogger("repro.train")
 
@@ -50,6 +57,10 @@ class TrainConfig:
     straggler_factor: float = 3.0
     data_parallel: int = 0              # devices for the series-sharded path
                                         # (0/1 = single-device)
+    scan_steps: int = 1                 # steps fused per donated superstep
+                                        # (1 = per-step dispatch loop)
+    sparse_adam: bool = False           # segment per-series Adam: update only
+                                        # the batch's HW rows (lazy moments)
 
     @classmethod
     def from_spec(cls, spec, *, ckpt_dir: Optional[str] = None,
@@ -72,6 +83,8 @@ class TrainConfig:
             ckpt_dir=ckpt_dir,
             keep=spec.keep,
             data_parallel=spec.data_parallel,
+            scan_steps=spec.scan_steps,
+            sparse_adam=spec.sparse_adam,
         )
 
 
@@ -118,6 +131,21 @@ def train_esrnn(
     loss trajectory matches up to float summation order. If ``mesh`` is None
     a ``cfg.data_parallel > 1`` builds one over the first that many local
     devices.
+
+    ``cfg.scan_steps > 1`` switches to the fused superstep engine
+    (``repro.train.engine``): K steps per donated ``lax.scan`` dispatch over
+    a precomputed on-device batch schedule, host sync + eval/ckpt/hooks at
+    superstep boundaries only. The per-step loss trajectory is the same math
+    in the same order, so histories match the per-step engine; the
+    ``on_step`` hook fires once per superstep with the segment's loss
+    *array* instead of once per step with a float. Composes with ``mesh``
+    (the scan wraps the ``shard_map``-ped loss) and ``use_pallas``.
+
+    ``cfg.sparse_adam`` switches the per-series Holt-Winters table to the
+    sparse segment update (``adam_update_sparse``): only the batch's rows
+    are touched each step, skipped rows catch up their Adam moments in
+    closed form. Off by default -- untouched rows no longer drift along
+    stale momentum, which changes trajectories slightly vs dense Adam.
     """
     mcfg = _as_config(model)
     if mesh is None and cfg.data_parallel and cfg.data_parallel > 1:
@@ -127,7 +155,7 @@ def train_esrnn(
     if mesh is not None and mesh.devices.size == 1:
         mesh = None  # 1-device mesh: identical math, skip the shard_map hop
     if mesh is not None:
-        from repro.sharding.series import check_series_divisible, esrnn_loss_dp
+        from repro.sharding.series import check_series_divisible
 
         check_series_divisible(min(cfg.batch_size, data.n_series), mesh)
         log.info("series-data-parallel training on %d devices (%s)",
@@ -145,43 +173,48 @@ def train_esrnn(
     n = data.n_series
     if params is None:
         params = esrnn_init(jax.random.PRNGKey(cfg.seed), mcfg, n)
-    opt_state = adam_init(params)
+    else:
+        # the engines donate (params, opt_state) unless hooks are present;
+        # copy the caller's tree once so their reference stays valid
+        params = jax.tree_util.tree_map(lambda a: jnp.array(a, copy=True), params)
+    opt_state = (adam_init_sparse(params) if cfg.sparse_adam
+                 else adam_init(params))
     start_step = 0
 
     ckpt = Checkpointer(cfg.ckpt_dir, keep=cfg.keep) if cfg.ckpt_dir else None
     if ckpt is not None and ckpt.latest_step() is not None:
-        start_step, (params, opt_state) = ckpt.restore((params, opt_state))
+        try:
+            start_step, (params, opt_state) = ckpt.restore((params, opt_state))
+        except ValueError as e:
+            # checkpoints are engine-portable (scan_steps), but the sparse
+            # optimizer state carries an extra per-row clock: flipping
+            # sparse_adam across a resume is a real state mismatch. Other
+            # restore failures (shape drift etc.) pass through untouched.
+            if "tree structure mismatch" not in str(e):
+                raise
+            raise ValueError(
+                f"cannot resume from {cfg.ckpt_dir}: {e}. If this run was "
+                f"checkpointed with a different sparse_adam setting "
+                f"(currently {cfg.sparse_adam}), resume with the original "
+                "setting -- the dense and sparse Adam states are not "
+                "interchangeable") from e
         log.info("resumed from step %d", start_step)
 
     y_all = jnp.asarray(data.train)
     cats_all = jnp.asarray(data.cats)
     mask_all = jnp.asarray(data.mask)
+    bs = min(cfg.batch_size, n)
 
-    @jax.jit
-    def step_fn(params, opt_state, idx):
-        yb = y_all[idx]
-        cb = cats_all[idx]
-        mb = mask_all[idx]
-
-        def batch_loss(p):
-            # per-series params are gathered for the batch; gradient scatter
-            # back to the full table happens automatically through indexing.
-            # The observation mask keeps left-padded (variable-length)
-            # positions out of the loss; it is all-ones for equalized data.
-            pb = gather_series(p, idx)
-            if mesh is not None:
-                return esrnn_loss_dp(mcfg, pb, yb, cb, mb, mesh=mesh)
-            return esrnn_loss(mcfg, pb, yb, cb, mb)
-
-        loss, grads = jax.value_and_grad(batch_loss)(params)
-        params, opt_state = adam_update(
-            grads, opt_state, params, cfg_adam, group_fn=esrnn_group_fn
-        )
-        return params, opt_state, loss
+    # The pure step -- shared verbatim by the per-step loop and the fused
+    # scan, so the two engines walk float-identical trajectories. The
+    # observation mask keeps left-padded (variable-length) positions out of
+    # the loss; it is all-ones for equalized data.
+    step_fn = make_step_fn(mcfg, cfg_adam, y_all, cats_all, mask_all,
+                           mesh=mesh, sparse=cfg.sparse_adam)
 
     @jax.jit
     def val_smape(params):
-        fc = esrnn_forecast(mcfg, params, jnp.asarray(data.train), cats_all)
+        fc = esrnn_forecast(mcfg, params, y_all, cats_all)
         h = min(fc.shape[1], data.val_target.shape[1])
         return L.smape(fc[:, :h], jnp.asarray(data.val_target)[:, :h])
 
@@ -189,34 +222,80 @@ def train_esrnn(
     pre.install()
     history = {"loss": [], "val_smape": [], "stragglers": []}
     ewma = None
+
+    def boundary_work(reached: int, losses: np.ndarray, fused: bool) -> bool:
+        """Host-side work at a step boundary: eval, ckpt, hooks, preemption.
+
+        ``reached`` is the number of completed steps; ``losses`` the per-step
+        losses since the previous boundary (length 1 in the per-step loop).
+        Returns True when the trainer should stop (preemption).
+        """
+        history["loss"].extend(float(l) for l in losses)
+        if reached % cfg.eval_every == 0 or reached == cfg.n_steps:
+            vs = float(val_smape(params))
+            history["val_smape"].append((reached, vs))
+            if ckpt is not None:
+                ckpt.save(reached, (params, opt_state), metric=vs)
+        elif ckpt is not None and reached % cfg.ckpt_every == 0:
+            ckpt.save(reached, (params, opt_state))
+        if hooks and "on_step" in hooks:
+            # fused engine: the last completed step index + the segment's
+            # loss array (always an array, even for a length-1 segment, so
+            # hooks see one stable type); per-step engine: a float per
+            # step, the pre-existing contract
+            hooks["on_step"](reached - 1,
+                             losses if fused else float(losses[0]),
+                             params)
+        if pre.requested:
+            log.warning("preemption requested at step %d; checkpointing",
+                        reached)
+            if ckpt is not None:
+                ckpt.save(reached, (params, opt_state))
+            return True
+        return False
+
+    def track_time(first_step: int, dt_per_step: float, k: int):
+        nonlocal ewma
+        ewma = dt_per_step if ewma is None else 0.9 * ewma + 0.1 * dt_per_step
+        if first_step > 5 and dt_per_step > cfg.straggler_factor * ewma:
+            history["stragglers"].append((first_step, dt_per_step, ewma))
+            log.warning("straggler step %d (x%d): %.3fs/step vs ewma %.3fs",
+                        first_step, k, dt_per_step, ewma)
+
+    # an on_step hook may retain the params tree it is handed; donation
+    # would delete those buffers at the next dispatch, so hooks opt the
+    # engines out of it (the pre-existing undonated behavior)
+    donate = not (hooks and "on_step" in hooks)
     try:
-        for step in range(start_step, cfg.n_steps):
-            idx = jnp.asarray(batch_indices(n, min(cfg.batch_size, n), step, seed=cfg.seed))
-            t0 = time.perf_counter()
-            params, opt_state, loss = step_fn(params, opt_state, idx)
-            loss = float(loss)
-            dt = time.perf_counter() - t0
-            ewma = dt if ewma is None else 0.9 * ewma + 0.1 * dt
-            if step > 5 and dt > cfg.straggler_factor * ewma:
-                history["stragglers"].append((step, dt, ewma))
-                log.warning("straggler step %d: %.3fs vs ewma %.3fs", step, dt, ewma)
-            history["loss"].append(loss)
-
-            if (step + 1) % cfg.eval_every == 0 or step + 1 == cfg.n_steps:
-                vs = float(val_smape(params))
-                history["val_smape"].append((step + 1, vs))
-                if ckpt is not None:
-                    ckpt.save(step + 1, (params, opt_state), metric=vs)
-            elif ckpt is not None and (step + 1) % cfg.ckpt_every == 0:
-                ckpt.save(step + 1, (params, opt_state))
-
-            if hooks and "on_step" in hooks:
-                hooks["on_step"](step, loss, params)
-            if pre.requested:
-                log.warning("preemption requested at step %d; checkpointing", step + 1)
-                if ckpt is not None:
-                    ckpt.save(step + 1, (params, opt_state))
-                break
+        if cfg.scan_steps > 1:
+            # fused engine: K-step donated supersteps over the on-device
+            # schedule; host syncs (and eval/ckpt/hooks) only at boundaries
+            superstep_fn = make_superstep_fn(step_fn, donate=donate)
+            log.info("fused superstep engine: scan_steps=%d%s",
+                     cfg.scan_steps,
+                     ", sparse per-series adam" if cfg.sparse_adam else "")
+            for step, k in segment_steps(start_step, cfg.n_steps,
+                                         cfg.scan_steps, cfg.eval_every,
+                                         cfg.ckpt_every):
+                sched = jnp.asarray(
+                    batch_schedule(n, bs, step, k, seed=cfg.seed))
+                t0 = time.perf_counter()
+                params, opt_state, losses = superstep_fn(
+                    params, opt_state, sched)
+                losses = np.asarray(losses)   # the one host sync per segment
+                track_time(step, (time.perf_counter() - t0) / k, k)
+                if boundary_work(step + k, losses, fused=True):
+                    break
+        else:
+            perstep_fn = make_perstep_fn(step_fn, donate=donate)
+            for step in range(start_step, cfg.n_steps):
+                idx = jnp.asarray(batch_indices(n, bs, step, seed=cfg.seed))
+                t0 = time.perf_counter()
+                params, opt_state, loss = perstep_fn(params, opt_state, idx)
+                loss_np = np.asarray(loss).reshape(1)
+                track_time(step, time.perf_counter() - t0, 1)
+                if boundary_work(step + 1, loss_np, fused=False):
+                    break
     finally:
         pre.uninstall()
 

@@ -1,0 +1,50 @@
+"""Stateless batch schedule: the cached permutation + materialized array.
+
+Separate from test_pipeline.py on purpose: that module gates on
+``pytest.importorskip("hypothesis")``, and these contracts -- which the
+fused engine's resume correctness rides on -- must run even where
+hypothesis is not installed (CI does not install it).
+"""
+
+import numpy as np
+
+from repro.data.pipeline import batch_indices, batch_schedule, epoch_permutation
+
+
+def test_epoch_permutation_cached_and_bit_identical():
+    """The cache returns the exact draw the stateless contract promises."""
+    a = epoch_permutation(37, 4, 9)
+    b = epoch_permutation(37, 4, 9)
+    assert a is b                       # cache hit: same frozen array
+    assert not a.flags.writeable
+    rng = np.random.default_rng(np.random.SeedSequence([9, 4]))
+    np.testing.assert_array_equal(a, rng.permutation(37))
+    # batch_indices slices the cache but hands out private writable copies
+    epoch0 = epoch_permutation(37, 0, 9)   # step 0 -> epoch 0
+    out = batch_indices(37, 8, 0, seed=9)
+    np.testing.assert_array_equal(out, epoch0[:8])
+    out[0] = -1                        # must not poison the cache
+    np.testing.assert_array_equal(batch_indices(37, 8, 0, seed=9), epoch0[:8])
+
+
+def test_batch_indices_covers_epoch_and_wraps():
+    """An epoch's batches tile the permutation; the tail wraps to its head."""
+    n, bs = 13, 5                      # steps_per_epoch=3, last step wraps
+    perm = epoch_permutation(n, 0, 3)
+    batches = [batch_indices(n, bs, s, seed=3) for s in range(3)]
+    np.testing.assert_array_equal(np.concatenate(batches)[:n], perm)
+    np.testing.assert_array_equal(batches[-1][-2:], perm[:2])  # static shape
+
+
+def test_batch_schedule_matches_batch_indices():
+    """(steps, batch) array == the per-step calls, incl. wrap + resume."""
+    n, bs = 13, 5
+    full = batch_schedule(n, bs, 0, 9, seed=7)
+    assert full.shape == (9, bs)
+    for s in range(9):
+        np.testing.assert_array_equal(full[s],
+                                      batch_indices(n, bs, s, seed=7))
+    # stateless in start_step: a resumed slice is the same global schedule
+    resumed = batch_schedule(n, bs, 4, 5, seed=7)
+    np.testing.assert_array_equal(resumed, full[4:])
+    assert batch_schedule(n, bs, 3, 0, seed=7).shape == (0, bs)

@@ -20,6 +20,21 @@ def test_fit_with_overrides(tmp_path, capsys):
     assert "loss" in capsys.readouterr().out
 
 
+def test_fit_fused_superstep_engine(capsys):
+    """--set scan_steps=K routes through the fused lax.scan engine."""
+    rc = main(["fit", "--smoke", "--steps", "6", "--set", "scan_steps=4",
+               "--set", "hidden_size=4"])
+    assert rc == 0
+    assert "6 steps" in capsys.readouterr().out
+
+
+def test_fit_sparse_adam(capsys):
+    rc = main(["fit", "--smoke", "--steps", "4", "--set", "sparse_adam=true",
+               "--set", "scan_steps=2", "--set", "hidden_size=4"])
+    assert rc == 0
+    assert "4 steps" in capsys.readouterr().out
+
+
 def test_set_parses_booleans():
     from repro.launch.forecast import _parse_overrides
 

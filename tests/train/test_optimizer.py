@@ -1,11 +1,12 @@
-"""Adam-with-groups optimizer tests."""
+"""Adam-with-groups optimizer tests, incl. the sparse per-series path."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.train.optimizer import (
-    AdamConfig, adam_init, adam_update, esrnn_group_fn, global_norm,
+    AdamConfig, adam_init, adam_init_sparse, adam_update, adam_update_sparse,
+    esrnn_group_fn, global_norm, hw_table_rows,
 )
 
 
@@ -54,6 +55,154 @@ def test_schedules_monotone():
 def test_global_norm():
     t = {"a": jnp.asarray([3.0]), "b": jnp.asarray([4.0])}
     np.testing.assert_allclose(float(global_norm(t)), 5.0, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Sparse per-series Adam: segment updates + closed-form moment catch-up
+# ---------------------------------------------------------------------------
+
+_N, _B = 12, 4
+
+
+def _toy_params(key):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "hw": {"alpha": jax.random.normal(k1, (_N, 3)),
+               "seas": jax.random.normal(k2, (_N,))},
+        "rnn": {"w": jax.random.normal(k3, (5,))},
+    }
+
+
+def _toy_grads(key, idx=None):
+    """Per-row hw grads for ``idx`` (sparse layout) or full-table (dense)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    rows = _N if idx is None else len(idx)
+    return {
+        "hw": {"alpha": jax.random.normal(k1, (rows, 3)),
+               "seas": jax.random.normal(k2, (rows,))},
+        "rnn": {"w": jax.random.normal(k3, (5,))},
+    }
+
+
+def _scatter(grads_rows, idx):
+    """Sparse-layout grads -> the dense zero-padded table the old path used."""
+    def put(g):
+        return jnp.zeros((_N,) + g.shape[1:], g.dtype).at[idx].set(g)
+    return {"hw": jax.tree_util.tree_map(put, grads_rows["hw"]),
+            "rnn": grads_rows["rnn"]}
+
+
+_CFG = AdamConfig(lr=0.05, clip_norm=1.0,
+                  group_lr={"per_series": 10.0, "default": 1.0})
+
+
+def test_sparse_init_adds_row_clock():
+    params = _toy_params(jax.random.PRNGKey(0))
+    assert hw_table_rows(params) == _N
+    state = adam_init_sparse(params)
+    assert state["t_hw"].shape == (_N,)
+    assert state["t_hw"].dtype == jnp.int32
+    # mu/nu/step identical in structure to the dense state
+    dense = adam_init(params)
+    assert (jax.tree_util.tree_structure(state["mu"])
+            == jax.tree_util.tree_structure(dense["mu"]))
+
+
+def test_sparse_full_batch_identical_to_dense():
+    """With every row in every batch the sparse path IS dense Adam."""
+    params = _toy_params(jax.random.PRNGKey(1))
+    idx = jnp.arange(_N)
+    p_d, s_d = dict(params), adam_init(params)
+    p_s, s_s = dict(params), adam_init_sparse(params)
+    for t in range(5):
+        g = _toy_grads(jax.random.PRNGKey(10 + t))
+        p_d, s_d = adam_update(g, s_d, p_d, _CFG, group_fn=esrnn_group_fn)
+        p_s, s_s = adam_update_sparse(g, s_s, p_s, _CFG, idx=idx,
+                                      group_fn=esrnn_group_fn)
+        for (path, a), b in zip(
+            jax.tree_util.tree_flatten_with_path(p_d)[0],
+            jax.tree_util.tree_leaves(p_s),
+        ):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-7, err_msg=str(path))
+
+
+def test_sparse_matches_masked_dense_per_leaf():
+    """Random partial batches: sparse == dense math restricted to the batch.
+
+    Reference semantics (the sparse path's contract): Adam moments evolve
+    exactly as dense Adam's -- a skipped row's zero gradient decays them by
+    b1/b2 per step, which the sparse path replays as one b1^k/b2^k power at
+    the next touch -- while *parameter* updates apply only to the batch's
+    rows (dense Adam would keep drifting skipped rows along stale momentum).
+    The reference below runs the dense update on the zero-padded scattered
+    gradient and freezes the untouched rows' params; the final full-table
+    touch forces every row's lazy catch-up so moments are comparable
+    per-leaf across the whole table.
+    """
+    params = _toy_params(jax.random.PRNGKey(2))
+    rng = np.random.default_rng(0)
+    p_ref, s_ref = dict(params), adam_init(params)
+    p_s, s_s = dict(params), adam_init_sparse(params)
+
+    schedule = [jnp.asarray(np.sort(rng.choice(_N, _B, replace=False)))
+                for _ in range(9)] + [jnp.arange(_N)]  # final: touch all
+    for t, idx in enumerate(schedule):
+        g_rows = _toy_grads(jax.random.PRNGKey(100 + t), idx)
+        # reference: dense Adam on the scattered grads, untouched rows frozen
+        touched = np.zeros(_N, bool)
+        touched[np.asarray(idx)] = True
+        p_new, s_ref = adam_update(_scatter(g_rows, idx), s_ref, p_ref, _CFG,
+                                   group_fn=esrnn_group_fn)
+        mask = jnp.asarray(touched)
+        p_ref = {
+            "hw": jax.tree_util.tree_map(
+                lambda new, old: jnp.where(
+                    mask.reshape((_N,) + (1,) * (new.ndim - 1)), new, old),
+                p_new["hw"], p_ref["hw"]),
+            "rnn": p_new["rnn"],
+        }
+        p_s, s_s = adam_update_sparse(g_rows, s_s, p_s, _CFG, idx=idx,
+                                      group_fn=esrnn_group_fn)
+
+    for (path, a), b in zip(
+        jax.tree_util.tree_flatten_with_path(p_ref)[0],
+        jax.tree_util.tree_leaves(p_s),
+    ):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6,
+                                   err_msg=f"params {path}")
+    # after the final all-rows touch every lazy row has caught up: the
+    # closed-form b1^k/b2^k moments equal the dense path's k iterated decays
+    for key in ("mu", "nu"):
+        for (path, a), b in zip(
+            jax.tree_util.tree_flatten_with_path(s_ref[key])[0],
+            jax.tree_util.tree_leaves(s_s[key]),
+        ):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-6, err_msg=f"{key} {path}")
+    assert int(s_s["step"]) == int(s_ref["step"]) == len(schedule)
+
+
+def test_sparse_skipped_rows_hold_still():
+    """Rows outside the batch must not move (the whole point of the path)."""
+    params = _toy_params(jax.random.PRNGKey(3))
+    s = adam_init_sparse(params)
+    # seed nonzero momentum everywhere so dense Adam *would* drift them
+    idx_all = jnp.arange(_N)
+    g = _toy_grads(jax.random.PRNGKey(42))
+    params, s = adam_update_sparse(g, s, params, _CFG, idx=idx_all,
+                                   group_fn=esrnn_group_fn)
+    idx = jnp.asarray([0, 1, 2, 3])
+    g_rows = _toy_grads(jax.random.PRNGKey(43), idx)
+    p2, s2 = adam_update_sparse(g_rows, s, params, _CFG, idx=idx,
+                                group_fn=esrnn_group_fn)
+    for leaf_a, leaf_b in zip(jax.tree_util.tree_leaves(params["hw"]),
+                              jax.tree_util.tree_leaves(p2["hw"])):
+        np.testing.assert_array_equal(np.asarray(leaf_a)[4:],
+                                      np.asarray(leaf_b)[4:])
+        assert np.abs(np.asarray(leaf_a)[:4] - np.asarray(leaf_b)[:4]).max() > 0
+    np.testing.assert_array_equal(np.asarray(s2["t_hw"]),
+                                  np.asarray([2, 2, 2, 2] + [1] * (_N - 4)))
 
 
 def test_bitexact_determinism():
