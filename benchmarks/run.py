@@ -3,11 +3,12 @@
 ``python -m benchmarks.run [--fast]`` runs Table 4/5/6 analogs and the
 roofline report, printing ``name,us_per_call,derived`` CSV lines plus the
 human-readable tables, and saving JSON under experiments/bench/. It also
-writes the repo-root ``BENCH_PR4.json`` trajectory point (speedup through
+writes the repo-root ``BENCH_PR5.json`` trajectory point (speedup through
 the public estimator, the ``use_pallas`` train-step timing column, the
-fused-engine ``scan_steps`` steps/sec column, sMAPE, device sweep, git sha)
-that CI archives as an artifact -- the perf record the next regression gets
-compared against (``BENCH_PR2.json``/``BENCH_PR3.json`` are the prior
+fused-engine ``scan_steps`` steps/sec column, the sharded-vs-single
+``predict_path`` series/sec column, sMAPE, device sweep, git sha) that CI
+archives as an artifact -- the perf record the next regression gets
+compared against (``BENCH_PR2.json``..``BENCH_PR4.json`` are the prior
 points, kept for comparison).
 """
 
@@ -18,7 +19,7 @@ import subprocess
 import time
 
 BENCH_TRAJECTORY = os.path.join(
-    os.path.dirname(__file__), "..", "BENCH_PR4.json")
+    os.path.dirname(__file__), "..", "BENCH_PR5.json")
 
 
 def _git_sha() -> str:
@@ -32,11 +33,11 @@ def _git_sha() -> str:
 
 
 def write_trajectory(t5, t4) -> str:
-    """BENCH_PR4.json: the machine-readable perf point CI archives."""
+    """BENCH_PR5.json: the machine-readable perf point CI archives."""
     import jax
 
     payload = {
-        "bench": "PR4",
+        "bench": "PR5",
         "git_sha": _git_sha(),
         "devices": len(jax.devices()),
         "speedup_vectorized_vs_loop": t5["estimator_path"]["speedup"],
@@ -48,6 +49,10 @@ def write_trajectory(t5, t4) -> str:
         # fused-engine column: steps/sec for scan_steps in {1, 32} at batch
         # 64 on the same schedule (final losses must agree; CI asserts it)
         "scan_steps": t5["scan_steps"],
+        # sharded-inference column: predict-path series/sec, one device vs
+        # the series mesh over all devices (CI gates >= 1.5x at 8 host
+        # devices; on real multi-chip hosts this is the scaling claim)
+        "predict_path": t5["predict_path"],
         "smape_quarterly": t4["per_frequency"]["quarterly"]["esrnn"]["smape"],
         "owa_quarterly": t4["per_frequency"]["quarterly"]["esrnn"]["owa"],
         "device_sweep": t5["device_sweep"],
@@ -87,6 +92,17 @@ def main() -> None:
     print(f"  fused engine (batch {sc['batch']}): {cells}  "
           f"-> {sc['speedup_scan_vs_perstep']:.2f}x, "
           f"loss diff {sc['final_loss_absdiff']:.1e}")
+    pp = t5["predict_path"]
+    if "sharded" in pp:
+        print(f"  predict path (N={pp['n_series']}): "
+              f"single {pp['single_device']['series_per_sec']:.0f} series/s  "
+              f"sharded({pp['devices']}) "
+              f"{pp['sharded']['series_per_sec']:.0f} series/s  "
+              f"-> {pp['speedup_sharded_vs_single']:.2f}x")
+    else:
+        print(f"  predict path (N={pp['n_series']}): "
+              f"single {pp['single_device']['series_per_sec']:.0f} series/s "
+              f"(1 device)")
 
     t0 = time.perf_counter()
     t4 = table4_accuracy.run(fast=args.fast)

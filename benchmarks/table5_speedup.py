@@ -19,8 +19,8 @@ import numpy as np
 
 from benchmarks.common import save_result
 from repro.core.esrnn import (
-    esrnn_init, esrnn_loss, esrnn_loss_and_grad, esrnn_loss_fn,
-    gather_series, make_config,
+    esrnn_forecast, esrnn_init, esrnn_loss, esrnn_loss_and_grad,
+    esrnn_loss_fn, gather_series, make_config,
 )
 from repro.data.pipeline import prepare
 from repro.data.synthetic_m4 import generate
@@ -252,6 +252,65 @@ def scan_steps_timing(fast: bool = False, scan_steps=(1, 32)):
     return out
 
 
+def predict_path_timing(fast: bool = False):
+    """Predict-path series/sec: sharded vs single-device (the PR-5 column).
+
+    One full ``esrnn_forecast`` over N series on one device vs the same
+    batch series-sharded over every available device
+    (``esrnn_forecast_dp``): per-series HW rows device-local, no
+    collectives in the program at all, so this is the embarrassing
+    parallelism of the paper's per-series structure continued across
+    devices. On a CPU host with forced host devices the "devices" share
+    cores, so the measured speedup is a *lower bound* on real multi-chip
+    scaling; CI still gates it >= 1.5x at 8 host devices.
+
+    Measurement: the two paths alternate within one loop (a scheduler
+    contention spike then lands on both, not just one) and each path keeps
+    its best-of-``repeats`` time -- same noise shielding as the fused-engine
+    column.
+    """
+    from repro.sharding.series import esrnn_forecast_dp, make_series_mesh
+
+    # N=512 is the gated point in --fast too: smaller batches leave the
+    # per-call time near scheduler-noise scale on 2-core CI hosts and the
+    # measured ratio gets flaky around the 1.5x gate
+    n, t = 512, 72
+    repeats = 8
+    d = len(jax.devices())
+    n -= n % d  # the shard_map path needs the batch to divide the mesh
+    rng = np.random.default_rng(0)
+    y = jnp.asarray(np.abs(rng.lognormal(3, 0.5, (n, t))).astype(np.float32) + 1)
+    cats = jnp.asarray(np.eye(6, dtype=np.float32)[rng.integers(0, 6, n)])
+    cfg = make_config("quarterly")
+    params = esrnn_init(jax.random.PRNGKey(0), cfg, n)
+    out = {"backend": jax.default_backend(), "n_series": n, "t_len": t,
+           "devices": d, "repeats": repeats}
+
+    def single():
+        return esrnn_forecast(cfg, params, y, cats)
+
+    jax.block_until_ready(single())  # warm/compile
+    if d > 1:
+        mesh = make_series_mesh(d)
+        sharded = jax.jit(lambda p, yy, cc: esrnn_forecast_dp(
+            cfg, p, yy, cc, mesh=mesh))
+        jax.block_until_ready(sharded(params, y, cats))
+    best1 = bestd = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(single())
+        best1 = min(best1, time.perf_counter() - t0)
+        if d > 1:
+            t0 = time.perf_counter()
+            jax.block_until_ready(sharded(params, y, cats))
+            bestd = min(bestd, time.perf_counter() - t0)
+    out["single_device"] = {"predict_s": best1, "series_per_sec": n / best1}
+    if d > 1:
+        out["sharded"] = {"predict_s": bestd, "series_per_sec": n / bestd}
+        out["speedup_sharded_vs_single"] = best1 / bestd
+    return out
+
+
 def device_sweep(devices=DEVICE_SWEEP, *, fast: bool = False):
     """--devices sweep: the vectorized loss+grad step, series-sharded.
 
@@ -298,6 +357,10 @@ def device_sweep(devices=DEVICE_SWEEP, *, fast: bool = False):
 
 
 def run(fast: bool = False, devices=DEVICE_SWEEP):
+    # the predict-path column is timing-gated in CI (>= 1.5x): measure it
+    # first, on a clean process, before the heavier stages fragment memory
+    # and leave background threads behind
+    predict_path = predict_path_timing(fast)
     data = prepare(generate("quarterly", scale=0.35, seed=0))
     cfg = make_config("quarterly")
     sizes = BATCH_SIZES[:3] if fast else BATCH_SIZES
@@ -319,6 +382,7 @@ def run(fast: bool = False, devices=DEVICE_SWEEP):
            "estimator_path": _estimator_path(fast),
            "train_step": train_step_timing(fast),
            "scan_steps": scan_steps_timing(fast),
+           "predict_path": predict_path,
            "device_sweep": device_sweep(devices, fast=fast),
            "paper_speedups": {"quarterly": 322, "monthly": 113},
            "note": ("single-core host: both paths share one core, so the "
@@ -364,6 +428,17 @@ def main(argv=None):
           f"{sc['scan32_sparse_bigN']['n_series']} rows: "
           f"{sc['scan32_sparse_bigN']['steps_per_sec']:.1f} steps/s vs dense "
           f"{sc['scan32_dense_bigN']['steps_per_sec']:.1f}")
+    pp = out["predict_path"]
+    if "sharded" in pp:
+        print(f"predict path (N={pp['n_series']}): single "
+              f"{pp['single_device']['series_per_sec']:.0f} series/s vs "
+              f"{pp['devices']}-device sharded "
+              f"{pp['sharded']['series_per_sec']:.0f} series/s -> "
+              f"{pp['speedup_sharded_vs_single']:.2f}x")
+    else:
+        print(f"predict path (N={pp['n_series']}): single "
+              f"{pp['single_device']['series_per_sec']:.0f} series/s "
+              f"(1 device; sharded column needs forced host devices)")
     for r in out["device_sweep"]:
         print(f"series-sharded step on {r['devices']} device(s), "
               f"batch {r['batch']}: {r['step_s']:.4f}s")

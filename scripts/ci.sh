@@ -21,4 +21,7 @@ python -m repro.launch.forecast fit --spec esrnn-quarterly --smoke --steps 20 \
 echo "== forecast serve smoke =="
 python -m repro.launch.forecast serve --smoke --steps 3 --requests 16
 
+echo "== rolling-origin backtest smoke =="
+python -m repro.launch.forecast backtest --smoke --steps 3 --origins 60,72,80
+
 echo "CI OK"

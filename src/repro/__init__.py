@@ -11,5 +11,5 @@ from repro.core.holt_winters import (  # noqa: F401
     hw_smooth,
     hw_forecast,
 )
-from repro.core.esrnn import ESRNN, ESRNNConfig  # noqa: F401
+from repro.core.esrnn import ESRNNConfig  # noqa: F401
 from repro.core.losses import pinball_loss, smape, mase  # noqa: F401

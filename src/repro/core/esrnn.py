@@ -25,26 +25,27 @@ The module exposes an estimator-friendly functional API:
   ``esrnn_init(key, cfg, n_series)``      -> params pytree
   ``esrnn_loss(cfg, params, y, cats)``    -> scalar training loss
   ``esrnn_forecast(cfg, params, y, cats)``-> (N, H) de-normalized forecast
+  ``esrnn_forecast_at(cfg, params, y, cats, origins)`` -> (N, K, H)
   ``esrnn_loss_and_grad(cfg, params, y, cats)``
 
-``repro.forecast.ESRNNForecaster`` wraps these; the legacy :class:`ESRNN`
-class remains as a thin deprecation shim delegating to the pure functions,
-so old call sites keep working (and stay bit-for-bit identical).
+``repro.forecast.ESRNNForecaster`` wraps these. The smoothing / window /
+seasonal-extension math itself lives in :mod:`repro.core.forward` -- ONE
+state-space forward pass (:func:`~repro.core.forward.esrnn_states`) feeds
+both the loss and every forecast path, so the two can never drift apart.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from functools import partial
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import losses as L
-from repro.core.drnn import drnn_apply, drnn_init
-from repro.core.holt_winters import HWParams, hw_init_params, hw_smooth
+from repro.core import forward as F
+from repro.core.drnn import drnn_init
+from repro.core.holt_winters import hw_init_params
 
 
 @dataclasses.dataclass(frozen=True)
@@ -129,136 +130,25 @@ def esrnn_init(key, cfg: ESRNNConfig, n_series: int):
 
 
 # ---------------------------------------------------------------------------
-# Pure apply internals (shared by loss and forecast)
-# ---------------------------------------------------------------------------
-
-
-def _smooth(cfg: ESRNNConfig, params, y):
-    return hw_smooth(
-        y,
-        params["hw"],
-        seasonality=cfg.seasonality,
-        seasonality2=cfg.seasonality2,
-        use_pallas=cfg.use_pallas,
-    )
-
-
-def _window_positions(cfg: ESRNNConfig, t_len: int):
-    """Valid window positions t = W-1 .. T-1 (input window fully observed)."""
-    return jnp.arange(cfg.input_size - 1, t_len)
-
-
-def _future_seasonal_idx(out_idx, t_len: int, m: int):
-    """Seasonality indices for targets t+1..t+H, cyclically clamped.
-
-    ``seas`` from :func:`hw_smooth` has T+m valid entries; indices beyond
-    that wrap into the last smoothed season. This single helper is the
-    seasonal-extension rule for BOTH the loss targets and the forecast
-    de-normalization, so the two paths cannot drift apart.
-    """
-    return jnp.where(
-        out_idx < t_len + m,
-        out_idx,
-        t_len + jnp.mod(out_idx - t_len, m),
-    )
-
-
-def _input_windows(cfg: ESRNNConfig, y, levels, seas):
-    """Normalized + de-seasonalized + log input windows (Eq. 6).
-
-    Returns feats (N, P, W) and the position vector (P,). Every returned
-    position has a fully-observed input window (positions start at W-1), so
-    no input-side mask is needed; target-side validity is handled by
-    :func:`_target_windows`.
-    """
-    w = cfg.input_size
-    _, t_len = y.shape
-    pos = _window_positions(cfg, t_len)                        # (P,)
-    in_idx = pos[:, None] + jnp.arange(-w + 1, 1)[None, :]     # (P, W)
-    y_in = y[:, in_idx]                                        # (N, P, W)
-    s_in = seas[:, in_idx]
-    lvl = levels[:, pos]                                       # (N, P)
-    x_in = jnp.log(jnp.maximum(y_in / (lvl[:, :, None] * s_in), 1e-8))
-    return x_in, pos
-
-
-def _target_windows(cfg: ESRNNConfig, y, levels, seas, pos):
-    """Normalized output windows + the position-validity mask.
-
-    Output windows need y up to t+H, so the last H positions have no
-    (complete) target; ``out_mask`` (N, P, H) in {0,1} marks real targets.
-    Clamped (out-of-range) entries are masked out of the loss.
-    """
-    n, t_len = y.shape
-    h = cfg.output_size
-    out_idx = pos[:, None] + jnp.arange(1, h + 1)[None, :]     # (P, H)
-    out_valid = out_idx < t_len                                # (P, H)
-    out_idx_c = jnp.minimum(out_idx, t_len - 1)
-    lvl = levels[:, pos]                                       # (N, P)
-    y_out = y[:, out_idx_c]                                    # (N, P, H)
-    m = max(cfg.seasonality, 1)
-    s_out = seas[:, _future_seasonal_idx(out_idx, t_len, m)]
-    y_out_n = jnp.log(jnp.maximum(y_out / (lvl[:, :, None] * s_out), 1e-8))
-    out_mask = out_valid[None, :, :].astype(y.dtype) * jnp.ones((n, 1, 1), y.dtype)
-    return y_out_n, out_mask
-
-
-def _rnn_head(cfg: ESRNNConfig, params, feats):
-    hid, c_sq = drnn_apply(
-        params["rnn"], feats, dilations=cfg.dilations, use_pallas=cfg.use_pallas
-    )
-    if cfg.attention:
-        ap = params["attn"]
-        q = hid @ ap["wq"]
-        k = hid @ ap["wk"]
-        v = hid @ ap["wv"]
-        s = jnp.einsum("nph,nqh->npq", q, k) / jnp.sqrt(
-            jnp.asarray(cfg.hidden_size, jnp.float32)).astype(hid.dtype)
-        p_idx = jnp.arange(hid.shape[1])
-        mask = p_idx[:, None] >= p_idx[None, :]
-        s = jnp.where(mask[None], s.astype(jnp.float32), -jnp.inf)
-        hid = hid + jnp.einsum(
-            "npq,nqh->nph", jax.nn.softmax(s, axis=-1).astype(v.dtype), v)
-    head = params["head"]
-    z = jnp.tanh(hid @ head["dense_w"] + head["dense_b"])
-    return z @ head["out_w"] + head["out_b"], c_sq
-
-
-def _features(x_in, cats):
-    n, p, _ = x_in.shape
-    cat_feat = jnp.broadcast_to(cats[:, None, :], (n, p, cats.shape[-1]))
-    return jnp.concatenate([x_in, cat_feat.astype(x_in.dtype)], axis=-1)
-
-
-# ---------------------------------------------------------------------------
-# Pure public apply functions
+# Pure public apply functions (all consume the repro.core.forward core)
 # ---------------------------------------------------------------------------
 
 
 def esrnn_loss_terms_fn(cfg: ESRNNConfig, params, y, cats, mask=None):
     """Per-batch loss *terms*: ``(pinball_sum, valid_count, penalties)``.
 
-    The decomposed form exists for exact distributed reduction: the sharded
-    loss (``repro.sharding.series.esrnn_loss_dp``) psums the masked pin-ball
+    One :func:`repro.core.forward.esrnn_states` pass scored by
+    :func:`repro.core.forward.loss_terms`. The decomposed form exists for
+    exact distributed reduction: the sharded loss
+    (``repro.sharding.series.esrnn_loss_dp``) psums the masked pin-ball
     numerator and denominator across shards and divides once globally, which
     matches the single-device masked mean even when shards carry unequal
     valid-target counts (``variable_length`` data). ``penalties`` is the sum
     of the section-8.4 terms, whose reductions are over equal-shaped
     per-shard tensors (a pmean of them is already exact).
     """
-    levels, seas = _smooth(cfg, params, y)
-    x_in, pos = _input_windows(cfg, y, levels, seas)
-    y_out_n, out_mask = _target_windows(cfg, y, levels, seas, pos)
-    if mask is not None:
-        valid_in = mask[:, pos - cfg.input_size + 1]          # (N, P)
-        out_mask = out_mask * valid_in[:, :, None]
-    feats = _features(x_in, cats)
-    yhat_n, c_sq = _rnn_head(cfg, params, feats)
-    pin_sum, pin_cnt = L.pinball_terms(yhat_n, y_out_n, tau=cfg.tau,
-                                       mask=out_mask)
-    penalties = (L.level_variability_penalty(levels, cfg.level_penalty)
-                 + L.cstate_penalty(c_sq, cfg.cstate_penalty))
-    return pin_sum, pin_cnt, penalties
+    states = F.esrnn_states(cfg, params, y, cats)
+    return F.loss_terms(cfg, states, y, mask)
 
 
 def esrnn_loss_fn(cfg: ESRNNConfig, params, y, cats, mask=None):
@@ -288,26 +178,68 @@ def esrnn_loss(cfg: ESRNNConfig, params, y, cats, mask=None):
     return esrnn_loss_fn(cfg, params, y, cats, mask)
 
 
+def esrnn_forecast_fn(cfg: ESRNNConfig, params, y, cats):
+    """Unjitted forecast body -- the batch-shardable entry point.
+
+    Like :func:`esrnn_loss_fn`, every operation is elementwise or reduces
+    over the batch's own rows, so the function runs per-shard inside
+    ``shard_map`` (see ``repro.sharding.series.esrnn_forecast_dp``). Use
+    :func:`esrnn_forecast` (the jitted wrapper) everywhere else.
+    """
+    states = F.esrnn_states(cfg, params, y, cats)
+    return F.forecast_from_states(cfg, states, y.shape[1])
+
+
 @partial(jax.jit, static_argnames=("cfg",))
 def esrnn_forecast(cfg: ESRNNConfig, params, y, cats):
     """h-step forecast from the end of y: (N, H), de-normalized (3.4).
 
-    Shares the exact window/seasonal machinery of :func:`esrnn_loss`: the
-    features come from the same :func:`_input_windows` path (whose positions
-    are valid by construction -- the same invariant the loss mask encodes),
-    and the future seasonality uses the same :func:`_future_seasonal_idx`
-    cyclic rule applied at the final position T-1, i.e. indices T..T+H-1.
+    Shares the exact state-space machinery of :func:`esrnn_loss` -- both
+    read the single :func:`repro.core.forward.esrnn_states` pass; the future
+    seasonality uses the same cyclic :func:`repro.core.forward.
+    future_seasonal_idx` rule applied at the final position T-1 (indices
+    T..T+H-1).
     """
-    n, t_len = y.shape
-    levels, seas = _smooth(cfg, params, y)
-    x_in, _pos = _input_windows(cfg, y, levels, seas)
-    feats = _features(x_in, cats)
-    yhat_n, _ = _rnn_head(cfg, params, feats)
-    last = yhat_n[:, -1, :]                              # (N, H) log-space
-    m = max(cfg.seasonality, 1)
-    fut_idx = t_len + jnp.arange(cfg.output_size)        # targets of pos T-1
-    s_fut = seas[:, _future_seasonal_idx(fut_idx, t_len, m)]
-    return jnp.exp(last) * levels[:, -1:] * s_fut
+    return esrnn_forecast_fn(cfg, params, y, cats)
+
+
+def esrnn_forecast_at_fn(cfg: ESRNNConfig, params, y, cats,
+                         origins: Tuple[int, ...]):
+    """Unjitted rolling-origin forecast body: (N, K, H), batch-shardable.
+
+    ``origins[k]`` is an observation count ``o``: the k-th forecast equals
+    ``esrnn_forecast(cfg, params, y[:, :o], cats)`` but all K origins come
+    from ONE forward pass (the state-space core is causal, so the ES states
+    at each origin are already the re-primed truncated-history states).
+    """
+    states = F.esrnn_states(cfg, params, y, cats)
+    return F.forecast_at_origins(cfg, states, tuple(origins), y.shape[1])
+
+
+@partial(jax.jit, static_argnames=("cfg", "origins"))
+def esrnn_forecast_at(cfg: ESRNNConfig, params, y, cats,
+                      origins: Tuple[int, ...]):
+    """Jitted rolling-origin forecasts (the backtest workhorse): (N, K, H)."""
+    return esrnn_forecast_at_fn(cfg, params, y, cats, origins)
+
+
+def esrnn_predict_stats_fn(cfg: ESRNNConfig, params, y, cats):
+    """Point forecast + per-series quantile sigma off one forward pass.
+
+    Returns ``(fc (N, H), sigma (N, 1))``; the quantile-band spread comes
+    from the same :func:`repro.core.forward.esrnn_states` the forecast
+    reads (no second smoothing pass). Batch-shardable like
+    :func:`esrnn_forecast_fn`.
+    """
+    states = F.esrnn_states(cfg, params, y, cats)
+    return (F.forecast_from_states(cfg, states, y.shape[1]),
+            F.quantile_sigma(states, y))
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def esrnn_predict_stats(cfg: ESRNNConfig, params, y, cats):
+    """Jitted :func:`esrnn_predict_stats_fn` (the predict_quantiles path)."""
+    return esrnn_predict_stats_fn(cfg, params, y, cats)
 
 
 def esrnn_loss_and_grad(cfg: ESRNNConfig, params, y, cats, mask=None):
@@ -349,61 +281,16 @@ def combine_series(hw_rows, shared):
 
 
 # ---------------------------------------------------------------------------
-# Legacy class shim (deprecated)
-# ---------------------------------------------------------------------------
-
-
-class ESRNN:
-    """Deprecated thin wrapper over the pure functional API.
-
-    Prefer ``repro.forecast.ESRNNForecaster`` (estimator API) or the pure
-    functions in this module. Kept so existing call sites keep working; it
-    delegates to the exact same jitted functions, so results are bit-for-bit
-    identical to the functional path.
-    """
-
-    def __init__(self, config: ESRNNConfig, *, _warn: bool = True):
-        if _warn:
-            warnings.warn(
-                "ESRNN is deprecated; use repro.forecast.ESRNNForecaster or "
-                "the pure esrnn_init/esrnn_loss/esrnn_forecast functions",
-                DeprecationWarning,
-                stacklevel=2,
-            )
-        self.config = config
-
-    def init(self, key, n_series: int):
-        return esrnn_init(key, self.config, n_series)
-
-    def loss_fn(self, params, y, cats, mask=None):
-        return esrnn_loss(self.config, params, y, cats, mask)
-
-    def forecast(self, params, y, cats):
-        return esrnn_forecast(self.config, params, y, cats)
-
-    def loss_and_grad(self, params, y, cats):
-        return esrnn_loss_and_grad(self.config, params, y, cats)
-
-
-def _as_config(model_or_cfg) -> ESRNNConfig:
-    if isinstance(model_or_cfg, ESRNN):
-        return model_or_cfg.config
-    return model_or_cfg
-
-
-# ---------------------------------------------------------------------------
 # Per-series loop reference (the structure the paper vectorized away)
 # ---------------------------------------------------------------------------
 
 
-def esrnn_loss_loop_reference(model_or_cfg, params, y, cats) -> jax.Array:
+def esrnn_loss_loop_reference(cfg: ESRNNConfig, params, y, cats) -> jax.Array:
     """Compute the same loss one series at a time (batch of 1 each).
 
     Used by the equivalence test and the Table-5 speedup benchmark: identical
     math, but the series axis is a python loop as in Smyl's original C++.
-    Accepts either an :class:`ESRNNConfig` or the legacy :class:`ESRNN` shim.
     """
-    cfg = _as_config(model_or_cfg)
     n = y.shape[0]
     losses = []
     for i in range(n):

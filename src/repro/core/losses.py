@@ -58,12 +58,56 @@ def smape(pred, target, mask=None, axis=None):
     return 200.0 * jnp.mean(ratio, axis=axis)
 
 
+def smape_terms(pred, target, mask=None):
+    """sMAPE numerator and denominator: ``(ratio_sum, valid_count)``.
+
+    ``smape == 200 * ratio_sum / max(valid_count, 1)``. Like
+    :func:`pinball_terms`, this is the building block for *exact*
+    distributed metric means: each shard contributes its sum and count,
+    both are psum'd, and the division happens once globally
+    (``repro.sharding.series.esrnn_eval_dp``) -- exact even when shards
+    carry unequal valid-target counts (padded rows, ragged horizons).
+    """
+    num = jnp.abs(target - pred)
+    den = jnp.abs(target) + jnp.abs(pred)
+    ratio = jnp.where(den > 0, num / den, 0.0)
+    if mask is None:
+        return jnp.sum(ratio), jnp.asarray(ratio.size, ratio.dtype)
+    mask = jnp.broadcast_to(mask, ratio.shape)
+    return jnp.sum(ratio * mask), jnp.sum(mask)
+
+
+def mase_terms(pred, target, insample, seasonality: int, mask=None):
+    """MASE numerator and denominator: ``(scaled_err_sum, valid_count)``.
+
+    ``mase == scaled_err_sum / max(valid_count, 1)``; same distributed-
+    reduction contract as :func:`smape_terms` (the seasonal-naive scale is
+    per-series, so it shards trivially with the rows).
+    """
+    m = _mase_lag(insample, seasonality)
+    scale = jnp.mean(jnp.abs(insample[:, m:] - insample[:, :-m]), axis=1)
+    scaled = jnp.abs(target - pred) / jnp.maximum(scale[:, None], 1e-8)
+    if mask is None:
+        return jnp.sum(scaled), jnp.asarray(scaled.size, scaled.dtype)
+    mask = jnp.broadcast_to(mask, scaled.shape)
+    return jnp.sum(scaled * mask), jnp.sum(mask)
+
+
+def _mase_lag(insample, seasonality: int) -> int:
+    """Scale lag for MASE: the seasonal lag, or 1 when the insample is too
+    short for a single seasonal difference (e.g. a backtest origin right at
+    the input-window minimum on monthly/hourly data) -- the standard
+    short-series fallback; a lag-m mean over an empty axis would be NaN."""
+    m = max(seasonality, 1)
+    return m if insample.shape[1] > m else 1
+
+
 def mase(pred, target, insample, seasonality: int, mask=None):
     """Mean Absolute Scaled Error against the seasonal-naive in-sample MAE.
 
     pred/target: (N, H); insample: (N, T) history used for the scale.
     """
-    m = max(seasonality, 1)
+    m = _mase_lag(insample, seasonality)
     scale = jnp.mean(jnp.abs(insample[:, m:] - insample[:, :-m]), axis=1)  # (N,)
     err = jnp.abs(target - pred)  # (N, H)
     scaled = err / jnp.maximum(scale[:, None], 1e-8)
@@ -71,6 +115,28 @@ def mase(pred, target, insample, seasonality: int, mask=None):
         mask = jnp.broadcast_to(mask, scaled.shape)
         return jnp.sum(scaled * mask) / jnp.maximum(jnp.sum(mask), 1.0)
     return jnp.mean(scaled)
+
+
+def rolling_metric_terms(fc, target, tmask, y, origins, seasonality: int):
+    """Per-origin sMAPE/MASE terms for rolling-origin backtests.
+
+    fc/target/tmask: (N, K, H) forecasts, scoring windows, and validity
+    masks for K origins; y: (N, T) full history (the MASE scale at origin
+    ``o`` uses the in-sample prefix ``y[:, :o]``, exactly what a truncated
+    forecast would have seen). Returns ``(s_sum, s_cnt, m_sum, m_cnt)``,
+    each (K,) -- divide per origin (or over the flattened sums for the
+    overall metric); psum the four before dividing for the exact
+    distributed mean (``repro.sharding.series.esrnn_backtest_dp``).
+    """
+    s_sums, s_cnts, m_sums, m_cnts = [], [], [], []
+    for k, o in enumerate(origins):
+        ss, sc = smape_terms(fc[:, k], target[:, k], mask=tmask[:, k])
+        ms, mc = mase_terms(fc[:, k], target[:, k], y[:, :o], seasonality,
+                            mask=tmask[:, k])
+        s_sums.append(ss); s_cnts.append(sc)
+        m_sums.append(ms); m_cnts.append(mc)
+    return (jnp.stack(s_sums), jnp.stack(s_cnts),
+            jnp.stack(m_sums), jnp.stack(m_cnts))
 
 
 def owa(smape_model, mase_model, smape_naive2, mase_naive2):

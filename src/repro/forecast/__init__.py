@@ -3,9 +3,9 @@
     from repro.forecast import ESRNNForecaster, get_spec
 
     f = ESRNNForecaster("esrnn-quarterly").fit()
-    f.predict(); f.evaluate(); f.save("/tmp/fq")
+    f.predict(); f.evaluate(); f.backtest(); f.save("/tmp/fq")
 
-CLI: ``python -m repro.launch.forecast {fit|predict|eval|serve} ...``.
+CLI: ``python -m repro.launch.forecast {fit|predict|eval|backtest|serve}``.
 
 Submodules are imported lazily (PEP 562) so that ``repro.train.trainer`` can
 import :mod:`repro.forecast.spec` without a cycle through the estimator.

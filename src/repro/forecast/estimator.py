@@ -1,6 +1,6 @@
 """ESRNNForecaster: estimator-style entry point for the hybrid ES-RNN.
 
-One object, five verbs -- the whole paper workflow behind a stable surface:
+One object, six verbs -- the whole paper workflow behind a stable surface:
 
     f = ESRNNForecaster("esrnn-quarterly")          # or a ForecastSpec
     f.fit(data)                                     # joint two-group training
@@ -8,16 +8,24 @@ One object, five verbs -- the whole paper workflow behind a stable surface:
     bands = f.predict_quantiles(taus=(0.1, 0.5, 0.9))
     scores = f.evaluate(split="test")               # sMAPE/MASE/OWA vs
                                                     # Comb / Naive2
+    bt = f.backtest(origins=(72, 80))               # rolling-origin scores,
+                                                    # one forward pass
     f.save(path);  g = ESRNNForecaster.load(path)   # shared Checkpointer
 
-The estimator wraps the pure ``esrnn_init/esrnn_loss/esrnn_forecast``
-functions from ``repro.core.esrnn`` -- it holds state (spec, params, data),
-the math stays functional and jitted.
+Every inference verb accepts ``mesh=`` (or inherits ``spec.data_parallel``)
+to run series-sharded across devices with exact psum'd metrics; rows are
+padded to the device multiple and stripped, so any N works.
+
+The estimator wraps the pure ``esrnn_init/esrnn_loss/esrnn_forecast*``
+functions from ``repro.core.esrnn`` (all backed by the single
+``repro.core.forward`` state-space pass) -- it holds state (spec, params,
+data), the math stays functional and jitted.
 """
 
 from __future__ import annotations
 
 import json
+import logging
 import os
 from typing import Dict, Optional, Sequence, Tuple, Union
 
@@ -29,19 +37,28 @@ from repro.checkpoint.checkpointer import Checkpointer
 from repro.core import losses as L
 from repro.core.comb import comb_forecast, naive2_forecast
 from repro.core.esrnn import (
-    esrnn_forecast, esrnn_init, esrnn_loss, esrnn_loss_and_grad, gather_series,
+    esrnn_forecast, esrnn_forecast_at, esrnn_init, esrnn_loss,
+    esrnn_loss_and_grad, esrnn_predict_stats, gather_series,
 )
-from repro.core.holt_winters import hw_smooth
 from repro.data.pipeline import PreparedData, prepare
 from repro.data.synthetic_m4 import M4Dataset, generate
 from repro.forecast.spec import ForecastSpec, get_spec
 from repro.train.trainer import train_from_spec
+
+log = logging.getLogger("repro.forecast")
 
 _META_FILE = "forecaster.json"
 
 
 class NotFittedError(RuntimeError):
     pass
+
+
+def _pad_rows(a, pad: int):
+    """Repeat the last row ``pad`` times (sharded-inference row padding)."""
+    if pad == 0:
+        return a
+    return jnp.concatenate([a, jnp.repeat(a[-1:], pad, axis=0)], axis=0)
 
 
 class ESRNNForecaster:
@@ -165,20 +182,82 @@ class ESRNNForecaster:
                 f"has {n_hw}; pass series_idx to select rows")
         return params, y, cats
 
+    # -- sharded-inference plumbing ------------------------------------------
+
+    def _resolve_mesh(self, mesh):
+        """Explicit mesh, else one built from ``spec.data_parallel`` (> 1).
+
+        Mirrors ``fit``'s resolution rule so an estimator fitted with
+        ``data_parallel=8`` serves predict/evaluate/backtest sharded the
+        same way without re-plumbing a mesh through every call. A 1-device
+        mesh degenerates to the single-device path (identical math, no
+        shard_map hop).
+        """
+        if mesh is None and self.spec.data_parallel > 1:
+            from repro.sharding.series import make_series_mesh
+
+            try:
+                mesh = make_series_mesh(self.spec.data_parallel)
+            except ValueError:
+                # an estimator fitted data-parallel elsewhere must still
+                # predict on a smaller host: inference is semantically
+                # identical on any device count, so degrade to single-device
+                # (training keeps raising -- its mesh is an explicit ask)
+                log.warning(
+                    "spec.data_parallel=%d exceeds the %d available "
+                    "device(s); inference runs single-device",
+                    self.spec.data_parallel, len(jax.devices()))
+                mesh = None
+        if mesh is not None and mesh.devices.size == 1:
+            mesh = None
+        return mesh
+
+    def _shard_rows(self, params, arrays, mesh):
+        """Pad rows (params hw + batch arrays) up to the mesh multiple.
+
+        Inference batches are whatever the caller has -- unlike training
+        batches they need not divide the device count -- so the rows are
+        padded by repeating the last one (``pad`` returned for stripping /
+        masking the metrics).
+        """
+        n = arrays[0].shape[0]
+        pad = (-n) % mesh.devices.size
+        if pad:
+            params = {
+                k: (jax.tree_util.tree_map(lambda a: _pad_rows(a, pad), v)
+                    if k == "hw" else v)
+                for k, v in params.items()}
+            arrays = tuple(_pad_rows(jnp.asarray(a), pad) for a in arrays)
+        return params, arrays, pad
+
     def predict(self, y=None, cats=None, *,
-                series_idx: Optional[Sequence[int]] = None) -> np.ndarray:
+                series_idx: Optional[Sequence[int]] = None,
+                mesh=None) -> np.ndarray:
         """Point forecast (N, H) from the end of each series (Eq. 5).
 
         With no arguments, forecasts the fitted training series. ``y`` may be
         any history for the fitted series (e.g. train+val to forecast the test
         window); ``series_idx`` selects per-series HW rows when y is a subset.
+
+        ``mesh``: optional 1-D series mesh for sharded inference (defaults
+        to one over ``spec.data_parallel`` devices when that is > 1): each
+        device forecasts its own HW-table rows under ``shard_map``; rows
+        are padded to the device multiple and stripped, so any N works.
         """
         params, y, cats = self._resolve_inputs(y, cats, series_idx)
-        return np.asarray(esrnn_forecast(self.config, params, y, cats))
+        mesh = self._resolve_mesh(mesh)
+        if mesh is None:
+            return np.asarray(esrnn_forecast(self.config, params, y, cats))
+        from repro.sharding.series import esrnn_forecast_dp
+
+        n = y.shape[0]
+        params, (y, cats), _pad = self._shard_rows(params, (y, cats), mesh)
+        fc = esrnn_forecast_dp(self.config, params, y, cats, mesh=mesh)
+        return np.asarray(fc)[:n]
 
     def predict_quantiles(
         self, y=None, cats=None, *, taus: Tuple[float, ...] = (0.1, 0.5, 0.9),
-        series_idx: Optional[Sequence[int]] = None,
+        series_idx: Optional[Sequence[int]] = None, mesh=None,
     ) -> Dict[float, np.ndarray]:
         """Quantile bands around the point forecast.
 
@@ -188,19 +267,21 @@ class ESRNNForecaster:
         y_t = l_t * s_t * eps_t, so per-series log-residual spread sigma gives
         q_tau(h) = yhat * exp(z_tau * sigma * sqrt(h)) -- a random-walk
         widening in log-space (beyond-paper convenience; tau=0.5 returns the
-        point forecast exactly).
+        point forecast exactly). Point and sigma come off ONE forward-core
+        pass (``esrnn_predict_stats``); ``mesh`` shards it like ``predict``.
         """
         params, y, cats = self._resolve_inputs(y, cats, series_idx)
-        point = esrnn_forecast(self.config, params, y, cats)      # (N, H)
-        levels, seas = hw_smooth(
-            y, params["hw"], seasonality=self.config.seasonality,
-            seasonality2=self.config.seasonality2,
-            use_pallas=self.config.use_pallas)
-        t_len = y.shape[1]
-        fitted = levels * seas[:, :t_len]
-        log_resid = jnp.log(jnp.maximum(y, 1e-8)) - jnp.log(
-            jnp.maximum(fitted, 1e-8))
-        sigma = jnp.std(log_resid, axis=1, keepdims=True)          # (N, 1)
+        mesh = self._resolve_mesh(mesh)
+        n = y.shape[0]
+        if mesh is None:
+            point, sigma = esrnn_predict_stats(self.config, params, y, cats)
+        else:
+            from repro.sharding.series import esrnn_predict_stats_dp
+
+            params, (y, cats), _pad = self._shard_rows(params, (y, cats), mesh)
+            point, sigma = esrnn_predict_stats_dp(
+                self.config, params, y, cats, mesh=mesh)
+            point, sigma = point[:n], sigma[:n]
         steps = jnp.sqrt(jnp.arange(1, self.horizon + 1))[None, :]  # (1, H)
         out = {}
         for tau in taus:
@@ -224,12 +305,19 @@ class ESRNNForecaster:
     # -- evaluate ------------------------------------------------------------
 
     def evaluate(self, data: Optional[PreparedData] = None,
-                 split: str = "test") -> Dict[str, float]:
+                 split: str = "test", *, mesh=None) -> Dict[str, float]:
         """M4-style scores: sMAPE/MASE/OWA vs the Comb and Naive2 benchmarks.
 
         ``split="test"`` forecasts from train+val and scores on the test
         window (Eq. 7); ``split="val"`` forecasts from train and scores on
         the validation window.
+
+        ``mesh`` (or ``spec.data_parallel > 1``) shards the model's
+        forecast + scoring over the series axis: each device scores its own
+        rows and the metric sums/counts are psum'd once -- the exact global
+        masked mean, so padded rows (N not a device multiple) contribute
+        nothing and the scores match single-device to float summation
+        order. The Comb/Naive2 baselines are cheap numpy and stay on host.
         """
         self._check_fitted()
         data = data if data is not None else self.data_
@@ -245,7 +333,35 @@ class ESRNNForecaster:
         target_j = jnp.asarray(target[:, :h])
         insample_j = jnp.asarray(insample)
 
-        fc = self.predict(insample, data.cats)[:, :h]
+        mesh = self._resolve_mesh(mesh)
+        if mesh is None:
+            fc = self.predict(insample, data.cats)[:, :h]
+            s_es = float(L.smape(jnp.asarray(fc), target_j))
+            m_es = float(L.mase(jnp.asarray(fc), target_j, insample_j, m))
+        else:
+            from repro.sharding.series import esrnn_eval_dp
+
+            n = insample.shape[0]
+            params = self.params_
+            if params["hw"].alpha_logit.shape[0] != n:
+                raise ValueError(
+                    f"evaluate data has {n} series but the fitted table has "
+                    f"{params['hw'].alpha_logit.shape[0]}")
+            params, arrays, pad = self._shard_rows(
+                params,
+                (jnp.asarray(insample, self.config.jdtype),
+                 jnp.asarray(data.cats, self.config.jdtype),
+                 target_j, insample_j),
+                mesh)
+            y_p, cats_p, target_p, ins_p = arrays
+            # padded rows score 0 into both numerator and denominator
+            rmask_p = jnp.asarray(
+                np.concatenate([np.ones(n), np.zeros(pad)]).astype(np.float32))
+            scores = esrnn_eval_dp(
+                self.config, params, y_p, cats_p, target_p, ins_p,
+                seasonality=m, mesh=mesh, row_mask=rmask_p)
+            s_es, m_es = float(scores["smape"]), float(scores["mase"])
+
         fc_comb = np.asarray(comb_forecast(insample, h, m), np.float32)
         fc_n2 = np.asarray(naive2_forecast(insample, h, m), np.float32)
 
@@ -254,7 +370,6 @@ class ESRNNForecaster:
             return (float(L.smape(f, target_j)),
                     float(L.mase(f, target_j, insample_j, m)))
 
-        s_es, m_es = score(fc)
         s_cb, m_cb = score(fc_comb)
         s_n2, m_n2 = score(fc_n2)
         return {
@@ -264,6 +379,102 @@ class ESRNNForecaster:
             "smape_comb": s_cb, "mase_comb": m_cb,
             "owa_comb": float(L.owa(s_cb, m_cb, s_n2, m_n2)),
             "smape_naive2": s_n2, "mase_naive2": m_n2,
+        }
+
+    # -- rolling-origin backtest ---------------------------------------------
+
+    def backtest(self, data: Optional[PreparedData] = None, *,
+                 origins: Optional[Sequence[int]] = None,
+                 y=None, cats=None, mesh=None) -> Dict:
+        """Rolling-origin backtest: forecast at several origins, no refit.
+
+        For each origin ``o`` (an observation count), the model forecasts as
+        if only ``y[:, :o]`` had been observed and is scored on the next
+        ``H`` actuals. All origins are read off ONE forward pass of the
+        unified state-space core (``esrnn_forecast_at``): the causal HW
+        recurrence means the states at position ``o-1`` ARE the re-primed
+        truncated-history states, so K origins cost one dispatch, not K
+        re-runs (Hewamalage et al.'s rolling-origin protocol made cheap).
+
+        Defaults: the full fitted history (train+val+test) with origins at
+        the end of train and the end of val -- i.e. the validation and test
+        windows of ``evaluate``, produced by one call. ``origins`` may be
+        any increasing observation counts in ``[input_size, T]``; horizons
+        that run past the series end are masked out of the metrics (an
+        origin with no scorable targets at all reports NaN).
+
+        ``mesh`` (or ``spec.data_parallel > 1``) shards rows like
+        ``predict``; metric sums/counts are psum'd for the exact global
+        masked mean. Returns per-origin and overall sMAPE/MASE plus the
+        (N, K, H) forecasts.
+        """
+        self._check_fitted()
+        if y is None:
+            data = data if data is not None else self.data_
+            if data is None:
+                raise NotFittedError(
+                    "backtest() needs PreparedData (fit or pass data=)")
+            y = np.concatenate([data.val_input, data.test_target], axis=1)
+            cats = data.cats if cats is None else cats
+            if origins is None:
+                train_len = data.train.shape[1]
+                origins = (train_len, train_len + data.horizon)
+        elif origins is None:
+            raise ValueError("backtest(y=...) needs explicit origins")
+        params, y, cats = self._resolve_inputs(y, cats, None)
+        m = max(self.config.seasonality, 1)
+        h = self.horizon
+        n, t_len = y.shape
+        origins = tuple(int(o) for o in origins)
+
+        # per-origin scoring windows + validity masks (numpy, host-side)
+        y_np = np.asarray(y)
+        target = np.zeros((n, len(origins), h), np.float32)
+        tmask = np.zeros((n, len(origins), h), np.float32)
+        for k, o in enumerate(origins):
+            avail = max(0, min(h, t_len - o))
+            target[:, k, :avail] = y_np[:, o:o + avail]
+            tmask[:, k, :avail] = 1.0
+
+        mesh = self._resolve_mesh(mesh)
+        if mesh is None:
+            fc = esrnn_forecast_at(self.config, params, y, cats, origins)
+            terms = L.rolling_metric_terms(
+                fc, jnp.asarray(target), jnp.asarray(tmask), y, origins, m)
+            fc = np.asarray(fc)
+        else:
+            from repro.sharding.series import esrnn_backtest_dp
+
+            params_p, arrays, pad = self._shard_rows(
+                params, (y, cats, jnp.asarray(target)), mesh)
+            y_p, cats_p, target_p = arrays
+            # padded rows are fully masked out of the metric sums/counts
+            tmask_p = jnp.asarray(np.concatenate(
+                [tmask, np.zeros((pad,) + tmask.shape[1:], np.float32)]))
+            fc_p, terms = esrnn_backtest_dp(
+                self.config, params_p, y_p, cats_p, origins, target_p,
+                tmask_p, seasonality=m, mesh=mesh)
+            fc = np.asarray(fc_p)[:n]
+
+        s_sum, s_cnt, m_sum, m_cnt = (np.asarray(t, np.float64) for t in terms)
+
+        def ratio(num, cnt):
+            # an origin with no scorable targets (e.g. origin == T) is
+            # unscored: NaN, not a perfect-looking 0.0
+            return float(num / cnt) if cnt > 0 else float("nan")
+
+        per_origin = [
+            {"origin": o,
+             "smape": ratio(200.0 * s_sum[k], s_cnt[k]),
+             "mase": ratio(m_sum[k], m_cnt[k])}
+            for k, o in enumerate(origins)]
+        return {
+            "origins": list(origins),
+            "horizon": h,
+            "per_origin": per_origin,
+            "smape": ratio(200.0 * s_sum.sum(), s_cnt.sum()),
+            "mase": ratio(m_sum.sum(), m_cnt.sum()),
+            "forecasts": fc,
         }
 
     # -- persistence (shared Checkpointer) -----------------------------------

@@ -22,6 +22,17 @@ Per-series HW parameters are looked up by ``series_id`` for series seen at
 fit time; unknown series fall back to a primer row (alpha = gamma = 0.5,
 flat seasonality -- the paper's section-3.3 initialization), which is the
 cold-start behaviour of a real forecast service.
+
+Sharding interaction: the fitted table may arrive sharded across a series
+mesh (a ``data_parallel`` fit). Request rows are arbitrary (any mix of
+known ids and cold-start primers), so resolving them directly against the
+*device* table would gather the whole sharded table through the mesh on
+every request. Instead the server snapshots the extended table (fitted rows
++ primer row) to **host memory once** at construction; per-request
+resolution is then a numpy row gather, and only the gathered ``(B, ...)``
+rows ever move to devices -- row-sharded over the serving ``mesh`` when one
+is passed, which runs the forecast itself under ``shard_map``
+(``esrnn_forecast_dp``) with the batch padded to the device multiple.
 """
 
 from __future__ import annotations
@@ -79,27 +90,50 @@ class BatchedForecastServer:
         length_buckets: Tuple[int, ...] = (32, 64, 128, 256),
         batch_buckets: Tuple[int, ...] = (1, 4, 16, 64),
         max_batch: Optional[int] = None,
+        mesh=None,
     ):
         self.config = config
         self.params = params
+        self.mesh = mesh if mesh is not None and mesh.devices.size > 1 else None
         min_len = config.input_size + max(config.seasonality, 1)
         self.length_buckets = tuple(sorted(max(b, min_len) for b in length_buckets))
+        if self.mesh is not None:
+            # sharded serving: snap the buckets up to the device multiple at
+            # construction so every padded chunk still lands ON a bucket --
+            # max_batch and the jit-cache bound keep their documented
+            # meaning (a post-hoc pad in the hot path would exceed both)
+            d = self.mesh.devices.size
+            batch_buckets = {b + (-b) % d for b in batch_buckets}
         self.batch_buckets = tuple(sorted(batch_buckets))
         # a chunk must always fit the largest batch bucket
         self.max_batch = min(max_batch or self.batch_buckets[-1],
                              self.batch_buckets[-1])
         self.n_known = params["hw"].alpha_logit.shape[0]
         # per-series table extended by one primer row for cold-start series
-        # (section 3.3 initialization); row n_known == "unknown series"
+        # (section 3.3 initialization); row n_known == "unknown series".
+        # Snapshotted to HOST numpy once: the fitted table may be sharded
+        # across a series mesh, and per-request row resolution (arbitrary
+        # known/primer mixes) against the device table would re-gather the
+        # whole sharded table per request. The numpy gather keeps the hot
+        # path device-free; only the gathered (B, ...) rows go to devices.
         primer = esrnn_init(jax.random.PRNGKey(0), config, 1)
         self._hw_table = jax.tree_util.tree_map(
-            lambda a, b: jnp.concatenate([a, b], axis=0),
+            lambda a, b: np.concatenate(
+                [np.asarray(a), np.asarray(b)], axis=0),
             params["hw"], primer["hw"])
         self.stats = ServeStats()
         self._seen_shapes = set()
-        # esrnn_forecast is already jitted (cfg static); XLA caches per
-        # (B, L) shape -- the bucket discipline keeps that cache small.
-        self._forecast = partial(esrnn_forecast, self.config)
+        if self.mesh is None:
+            # esrnn_forecast is already jitted (cfg static); XLA caches per
+            # (B, L) shape -- the bucket discipline keeps that cache small.
+            self._forecast = partial(esrnn_forecast, self.config)
+        else:
+            from repro.sharding.series import esrnn_forecast_dp
+
+            # sharded serving: per-series rows device-local under shard_map
+            # (jit of the shard_map caches per shape exactly the same way)
+            self._forecast = jax.jit(partial(
+                esrnn_forecast_dp, self.config, mesh=self.mesh))
 
     # -- shaping -------------------------------------------------------------
 
@@ -121,6 +155,8 @@ class BatchedForecastServer:
             if r.series_id is not None and 0 <= r.series_id < self.n_known
             else self.n_known
             for r in requests])
+        # numpy gather from the host snapshot: no device op, and in
+        # particular no cross-device gather of a mesh-sharded fitted table
         return jax.tree_util.tree_map(lambda a: a[idx], self._hw_table)
 
     # -- serving -------------------------------------------------------------
@@ -128,6 +164,8 @@ class BatchedForecastServer:
     def _run_bucket(self, requests: List[ForecastRequest], bucket: int):
         """Forecast one length-bucket group, padded to a batch bucket."""
         n = len(requests)
+        # with a mesh, the buckets were snapped to the device multiple at
+        # construction, so bb always divides the mesh evenly
         bb = _pick_bucket(n, self.batch_buckets)
         padded = requests + [requests[-1]] * (bb - n)
         self.stats.padded_series += bb - n

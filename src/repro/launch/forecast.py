@@ -1,19 +1,33 @@
 """Forecast launcher: the one CLI over the unified ESRNNForecaster API.
 
-    PYTHONPATH=src python -m repro.launch.forecast fit     --spec esrnn-quarterly --smoke
-    PYTHONPATH=src python -m repro.launch.forecast predict --dir /tmp/fq
-    PYTHONPATH=src python -m repro.launch.forecast eval    --spec esrnn-quarterly --smoke
-    PYTHONPATH=src python -m repro.launch.forecast serve   --smoke --requests 64
+    PYTHONPATH=src python -m repro.launch.forecast fit      --spec esrnn-quarterly --smoke
+    PYTHONPATH=src python -m repro.launch.forecast predict  --dir /tmp/fq
+    PYTHONPATH=src python -m repro.launch.forecast eval     --spec esrnn-quarterly --smoke
+    PYTHONPATH=src python -m repro.launch.forecast backtest --dir /tmp/fq --origins 72,80
+    PYTHONPATH=src python -m repro.launch.forecast serve    --smoke --requests 64
 
-``fit`` trains (spec-driven synthetic M4 by default) and optionally saves the
-estimator; ``predict``/``eval`` run on a saved estimator (``--dir``) or fit a
-fresh one; ``serve`` runs the batched pad-to-bucket forecast server over a
-synthetic ragged request stream and reports throughput + jit-cache reuse,
-mirroring the prefill/decode serving loop of ``repro.launch.serve``.
+``fit`` trains (spec-driven synthetic M4 by default) and optionally saves
+the estimator; ``predict``/``eval``/``backtest`` run on a saved estimator
+(``--dir``) or fit a fresh one; ``serve`` runs the batched pad-to-bucket
+forecast server over a synthetic ragged request stream and reports
+throughput + jit-cache reuse, mirroring the prefill/decode serving loop of
+``repro.launch.serve``.
 
-``--set use_pallas=true`` routes fit *and* predict through the Pallas
-kernels (trainable via their custom_vjp backward kernels; interpret mode
-off-TPU); it composes with ``--devices N`` series data parallelism.
+``backtest`` is the rolling-origin protocol: forecast at each ``--origins``
+observation count as if the rest of the series were unseen, scored
+sMAPE/MASE per origin -- all origins are read off ONE forward pass of the
+state-space core (the causal ES states are already the re-primed
+truncated-history states), no refit.
+
+``--devices N`` applies to every subcommand: ``fit`` trains series-data-
+parallel, and ``predict``/``eval``/``backtest``/``serve`` run sharded
+inference over a series mesh (per-series HW rows device-local under
+``shard_map``; eval/backtest metrics reduced as exact psum'd global means).
+On CPU export ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` first.
+
+``--set use_pallas=true`` routes fit *and* every inference path through the
+Pallas kernels (trainable via their custom_vjp backward kernels; interpret
+mode off-TPU); it composes with ``--devices N``.
 
 ``--set scan_steps=K`` fuses K training steps into one donated ``lax.scan``
 superstep (the dispatch-bound per-step loop is the K=1 default); eval,
@@ -79,6 +93,16 @@ def _fitted(args) -> ESRNNForecaster:
     return f.fit()
 
 
+def _inference_mesh(args):
+    """Series mesh for sharded predict/eval/backtest/serve (--devices N)."""
+    d = getattr(args, "devices", None)
+    if d and d > 1:
+        from repro.sharding.series import make_series_mesh
+
+        return make_series_mesh(d)
+    return None
+
+
 def cmd_fit(args):
     f = _build(args)
     f.fit(ckpt_dir=args.ckpt_dir)
@@ -99,20 +123,21 @@ def cmd_fit(args):
 
 def cmd_predict(args):
     f = _fitted(args)
+    mesh = _inference_mesh(args)
     if args.quantiles:
         taus = tuple(float(t) for t in args.quantiles.split(","))
-        bands = f.predict_quantiles(taus=taus)
+        bands = f.predict_quantiles(taus=taus, mesh=mesh)
         for tau in taus:
             print(f"tau={tau}: first series", np.round(bands[tau][0], 2))
     else:
-        fc = f.predict()
+        fc = f.predict(mesh=mesh)
         print(f"forecast {fc.shape}; first series", np.round(fc[0], 2))
     return 0
 
 
 def cmd_eval(args):
     f = _fitted(args)
-    scores = f.evaluate(split=args.split)
+    scores = f.evaluate(split=args.split, mesh=_inference_mesh(args))
     print(f"{f.spec.name} [{args.split}]")
     for suffix, label in (("", "esrnn"), ("_comb", "comb"), ("_naive2", "naive2")):
         smape = scores[f"smape{suffix}"]
@@ -123,6 +148,21 @@ def cmd_eval(args):
     return 0
 
 
+def cmd_backtest(args):
+    f = _fitted(args)
+    origins = (tuple(int(o) for o in args.origins.split(","))
+               if args.origins else None)
+    out = f.backtest(origins=origins, mesh=_inference_mesh(args))
+    print(f"{f.spec.name} rolling-origin backtest "
+          f"(horizon {out['horizon']}, one forward pass)")
+    for row in out["per_origin"]:
+        print(f"  origin {row['origin']:5d}  smape {row['smape']:7.3f}  "
+              f"mase {row['mase']:7.3f}")
+    print(f"  {'overall':>12s}  smape {out['smape']:7.3f}  "
+          f"mase {out['mase']:7.3f}")
+    return 0
+
+
 def cmd_serve(args):
     f = _fitted(args)
     srv = BatchedForecastServer(
@@ -130,6 +170,7 @@ def cmd_serve(args):
         length_buckets=tuple(int(b) for b in args.length_buckets.split(",")),
         batch_buckets=tuple(int(b) for b in args.batch_buckets.split(",")),
         max_batch=args.max_batch,
+        mesh=_inference_mesh(args),
     )
     rng_seeds = range(args.waves)
     for w in rng_seeds:
@@ -158,8 +199,10 @@ def main(argv=None):
                        help="tiny model + tiny data, seconds on CPU")
         p.add_argument("--steps", type=int, help="override spec n_steps")
         p.add_argument("--devices", type=int, metavar="N",
-                       help="series-data-parallel training over N devices "
-                            "(CPU: export XLA_FLAGS="
+                       help="shard the series axis over N devices: fit "
+                            "trains data-parallel, predict/eval/backtest/"
+                            "serve run sharded inference (CPU: export "
+                            "XLA_FLAGS="
                             "--xla_force_host_platform_device_count=N)")
         p.add_argument("--set", action="append", metavar="KEY=VAL",
                        help="spec/model override, e.g. --set hidden_size=16, "
@@ -184,6 +227,18 @@ def main(argv=None):
     p_eval.add_argument("--dir", help="load a saved estimator")
     p_eval.add_argument("--split", default="test", choices=["val", "test"])
     p_eval.set_defaults(fn=cmd_eval)
+
+    p_bt = sub.add_parser(
+        "backtest",
+        help="rolling-origin sMAPE/MASE at several forecast origins, all "
+             "from one forward pass (no refitting)")
+    common(p_bt)
+    p_bt.add_argument("--dir", help="load a saved estimator")
+    p_bt.add_argument("--origins", metavar="O1,O2,...",
+                      help="comma list of observation counts to forecast "
+                           "from (each in [input_size, T]); default: end of "
+                           "train and end of validation")
+    p_bt.set_defaults(fn=cmd_backtest)
 
     p_srv = sub.add_parser("serve", help="batched pad-to-bucket forecast serving")
     common(p_srv)

@@ -46,7 +46,11 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 import jax.numpy as jnp
 
-from repro.core.esrnn import ESRNNConfig, esrnn_loss_terms_fn
+from repro.core import losses as L
+from repro.core.esrnn import (
+    ESRNNConfig, esrnn_forecast_at_fn, esrnn_forecast_fn, esrnn_loss_terms_fn,
+    esrnn_predict_stats_fn,
+)
 
 SERIES_AXIS = "series"
 
@@ -155,3 +159,125 @@ def esrnn_loss_dp(
         in_specs=(pspecs,) + (P(axis_name),) * len(rows), out_specs=P(),
         check_rep=not cfg.use_pallas,
     )(params, *rows)
+
+
+# ---------------------------------------------------------------------------
+# Sharded inference: forecast / quantile stats / eval / backtest
+# ---------------------------------------------------------------------------
+
+
+def _shard_rows(cfg, local_fn, params, rows, *, mesh, axis_name, out_specs):
+    """shard_map a per-shard row function over the series axis.
+
+    ``params`` shard like training (hw rows device-local, shared weights
+    replicated); every array in ``rows`` leads with the series axis. The
+    static replication check is skipped only on the kernel path, exactly as
+    in :func:`esrnn_loss_dp` (pallas_call has no replication rule).
+    """
+    check_series_divisible(rows[0].shape[0], mesh)
+    pspecs = esrnn_param_specs(params, axis_name=axis_name)
+    return shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(pspecs,) + (P(axis_name),) * len(rows),
+        out_specs=out_specs,
+        check_rep=not cfg.use_pallas,
+    )(params, *rows)
+
+
+def esrnn_forecast_dp(
+    cfg: ESRNNConfig, params, y, cats, *,
+    mesh: Mesh, axis_name: str = SERIES_AXIS,
+):
+    """Data-parallel h-step forecast: shard_map over the series axis.
+
+    Each device forecasts its own rows from its device-local HW table slice
+    and the replicated RNN/head weights -- the per-series structure the
+    paper vectorized shards embarrassingly, so there are no collectives at
+    all in the forward program. Returns (N, H), sharded on the series axis.
+    """
+    def local_fc(p, yy, cc):
+        return esrnn_forecast_fn(cfg, p, yy, cc)
+
+    return _shard_rows(cfg, local_fc, params, (y, cats), mesh=mesh,
+                       axis_name=axis_name, out_specs=P(axis_name))
+
+
+def esrnn_predict_stats_dp(
+    cfg: ESRNNConfig, params, y, cats, *,
+    mesh: Mesh, axis_name: str = SERIES_AXIS,
+):
+    """Sharded ``(forecast, quantile sigma)`` -- the predict_quantiles path.
+
+    Both outputs are per-series rows off the same device-local forward
+    states, so they shard with the batch like :func:`esrnn_forecast_dp`.
+    """
+    def local_stats(p, yy, cc):
+        return esrnn_predict_stats_fn(cfg, p, yy, cc)
+
+    return _shard_rows(cfg, local_stats, params, (y, cats), mesh=mesh,
+                       axis_name=axis_name,
+                       out_specs=(P(axis_name), P(axis_name)))
+
+
+def esrnn_eval_dp(
+    cfg: ESRNNConfig, params, y, cats, target, insample, *,
+    seasonality: int, mesh: Mesh, row_mask=None,
+    axis_name: str = SERIES_AXIS,
+):
+    """Sharded sMAPE/MASE of the model forecast as *exact* global means.
+
+    Each shard forecasts its rows from ``y`` and contributes its masked
+    metric sums and valid counts (``losses.smape_terms``/``mase_terms``);
+    both are psum'd and divided once -- the PR-3 ``psum(sum)/psum(count)``
+    pattern, so rows padded up to the mesh multiple (``row_mask`` 0) and
+    ragged horizons cannot skew the mean. Returns replicated scalars
+    ``{"smape": ..., "mase": ...}`` identical to the single-device metrics
+    up to float summation order.
+
+    ``target`` (N, h) is the scoring window, ``insample`` (N, T_in) the
+    history for the MASE seasonal-naive scale; ``row_mask`` (N,) is 1 for
+    real rows, 0 for padding rows.
+    """
+    h = target.shape[1]
+    rows = ((y, cats, target, insample) if row_mask is None
+            else (y, cats, target, insample, row_mask))
+
+    def local_eval(p, yy, cc, tt, ins, *rm):
+        fc = esrnn_forecast_fn(cfg, p, yy, cc)[:, :h]
+        mask = None if not rm else rm[0][:, None]
+        s_sum, s_cnt = L.smape_terms(fc, tt, mask=mask)
+        m_sum, m_cnt = L.mase_terms(fc, tt, ins, seasonality, mask=mask)
+        s_sum, s_cnt, m_sum, m_cnt = (
+            jax.lax.psum(v, axis_name) for v in (s_sum, s_cnt, m_sum, m_cnt))
+        return {"smape": 200.0 * s_sum / jnp.maximum(s_cnt, 1.0),
+                "mase": m_sum / jnp.maximum(m_cnt, 1.0)}
+
+    return _shard_rows(cfg, local_eval, params, rows, mesh=mesh,
+                       axis_name=axis_name,
+                       out_specs={"smape": P(), "mase": P()})
+
+
+def esrnn_backtest_dp(
+    cfg: ESRNNConfig, params, y, cats, origins, target, tmask, *,
+    seasonality: int, mesh: Mesh, axis_name: str = SERIES_AXIS,
+):
+    """Sharded rolling-origin forecasts + metric *terms* in one dispatch.
+
+    ``target``/``tmask`` are (N, K, H): per-origin scoring windows and
+    their validity masks (0 where the window runs past the series end or
+    the row is padding). Returns ``(fc, (s_sum, s_cnt, m_sum, m_cnt))``:
+    the (N, K, H) forecasts sharded on the series axis, and the replicated
+    (K,) metric terms already psum'd across shards -- the caller divides
+    once per origin (and once overall), so sharded backtest metrics match
+    single-device to float summation order. One forward pass serves both.
+    """
+    origins = tuple(int(o) for o in origins)
+
+    def local_bt(p, yy, cc, tt, tm):
+        fc = esrnn_forecast_at_fn(cfg, p, yy, cc, origins)
+        terms = L.rolling_metric_terms(fc, tt, tm, yy, origins, seasonality)
+        return fc, tuple(jax.lax.psum(t, axis_name) for t in terms)
+
+    return _shard_rows(cfg, local_bt, params, (y, cats, target, tmask),
+                       mesh=mesh, axis_name=axis_name,
+                       out_specs=(P(axis_name), (P(), P(), P(), P())))

@@ -32,7 +32,7 @@ import numpy as np
 
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.core import losses as L
-from repro.core.esrnn import _as_config, esrnn_forecast, esrnn_init
+from repro.core.esrnn import ESRNNConfig, esrnn_forecast, esrnn_init
 from repro.data.pipeline import PreparedData, batch_indices, batch_schedule
 from repro.train.engine import (
     make_perstep_fn, make_step_fn, make_superstep_fn, segment_steps,
@@ -108,7 +108,7 @@ class PreemptionHandler:
 
 
 def train_esrnn(
-    model,
+    model: ESRNNConfig,
     data: PreparedData,
     cfg: TrainConfig,
     *,
@@ -118,9 +118,8 @@ def train_esrnn(
 ) -> Dict:
     """Train; returns dict(params, history, resumed_from).
 
-    ``model`` may be an :class:`~repro.core.esrnn.ESRNNConfig` (preferred) or
-    the legacy ``ESRNN`` shim; training runs through the pure functional API
-    either way.
+    ``model`` is an :class:`~repro.core.esrnn.ESRNNConfig`; training runs
+    through the pure functional API.
 
     ``mesh``: optional 1-D series mesh (``repro.sharding.series``). With more
     than one device the loss runs series-sharded under ``shard_map``: each
@@ -147,7 +146,7 @@ def train_esrnn(
     closed form. Off by default -- untouched rows no longer drift along
     stale momentum, which changes trajectories slightly vs dense Adam.
     """
-    mcfg = _as_config(model)
+    mcfg = model
     if mesh is None and cfg.data_parallel and cfg.data_parallel > 1:
         from repro.sharding.series import make_series_mesh
 

@@ -5,7 +5,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.esrnn import ESRNN, esrnn_loss_loop_reference, make_config
+from repro.core.esrnn import (
+    esrnn_forecast, esrnn_init, esrnn_loss, esrnn_loss_and_grad,
+    esrnn_loss_loop_reference, make_config,
+)
 from repro.data.pipeline import prepare
 from repro.data.synthetic_m4 import generate
 
@@ -14,36 +17,35 @@ from repro.data.synthetic_m4 import generate
 def quarterly():
     data = prepare(generate("quarterly", scale=0.002, seed=7))
     cfg = make_config("quarterly")
-    model = ESRNN(cfg)
-    params = model.init(jax.random.PRNGKey(0), data.n_series)
-    return cfg, model, params, data
+    params = esrnn_init(jax.random.PRNGKey(0), cfg, data.n_series)
+    return cfg, params, data
 
 
 def test_batched_equals_per_series_loop(quarterly):
-    cfg, model, params, data = quarterly
+    cfg, params, data = quarterly
     n = min(6, data.n_series)
     pb = {"hw": jax.tree_util.tree_map(lambda a: a[:n], params["hw"]),
           "rnn": params["rnn"], "head": params["head"]}
     y = jnp.asarray(data.train[:n])
     c = jnp.asarray(data.cats[:n])
-    batched = model.loss_fn(pb, y, c)
-    looped = esrnn_loss_loop_reference(model, pb, y, c)
+    batched = esrnn_loss(cfg, pb, y, c)
+    looped = esrnn_loss_loop_reference(cfg, pb, y, c)
     np.testing.assert_allclose(batched, looped, rtol=1e-5)
 
 
 def test_forecast_shape_and_positive(quarterly):
-    cfg, model, params, data = quarterly
-    fc = model.forecast(params, jnp.asarray(data.train), jnp.asarray(data.cats))
+    cfg, params, data = quarterly
+    fc = esrnn_forecast(cfg, params, jnp.asarray(data.train), jnp.asarray(data.cats))
     assert fc.shape == (data.n_series, cfg.output_size)
     assert bool(jnp.isfinite(fc).all())
     assert bool((fc > 0).all())  # multiplicative model on positive data
 
 
 def test_grads_cover_all_param_groups(quarterly):
-    cfg, model, params, data = quarterly
+    cfg, params, data = quarterly
     y = jnp.asarray(data.train)
     c = jnp.asarray(data.cats)
-    _, grads = model.loss_and_grad(params, y, c)
+    _, grads = esrnn_loss_and_grad(cfg, params, y, c)
     flat = jax.tree_util.tree_leaves_with_path(grads)
     for path, g in flat:
         assert bool(jnp.isfinite(g).all()), f"non-finite grad at {path}"
@@ -52,37 +54,35 @@ def test_grads_cover_all_param_groups(quarterly):
 
 
 def test_penalties_increase_loss(quarterly):
-    cfg, model, params, data = quarterly
+    cfg, params, data = quarterly
     y = jnp.asarray(data.train[:8])
     c = jnp.asarray(data.cats[:8])
     pb = {"hw": jax.tree_util.tree_map(lambda a: a[:8], params["hw"]),
           "rnn": params["rnn"], "head": params["head"]}
-    base = float(model.loss_fn(pb, y, c))
+    base = float(esrnn_loss(cfg, pb, y, c))
     cfg_pen = make_config("quarterly", level_penalty=10.0, cstate_penalty=1.0)
-    model_pen = ESRNN(cfg_pen)
-    with_pen = float(model_pen.loss_fn(pb, y, c))
+    with_pen = float(esrnn_loss(cfg_pen, pb, y, c))
     assert with_pen >= base
 
 
 def test_hourly_dual_seasonality_config():
     cfg = make_config("hourly")
     assert cfg.seasonality == 24 and cfg.seasonality2 == 168
-    model = ESRNN(cfg)
     n, t = 3, 24 * 16
     rng = np.random.default_rng(0)
-    params = model.init(jax.random.PRNGKey(0), n)
+    params = esrnn_init(jax.random.PRNGKey(0), cfg, n)
     hours = np.arange(t)
     y = (50 + 10 * np.sin(hours * 2 * np.pi / 24)
          + 5 * np.sin(hours * 2 * np.pi / 168)
          + rng.normal(0, 1, (n, t))).astype(np.float32)
     y = np.abs(y) + 1
-    loss = model.loss_fn(params, jnp.asarray(y), jnp.zeros((n, 6), jnp.float32))
+    loss = esrnn_loss(cfg, params, jnp.asarray(y), jnp.zeros((n, 6), jnp.float32))
     assert bool(jnp.isfinite(loss))
 
 
 def test_observation_mask_excludes_padded_windows(quarterly):
     """Section 8.1: left-padded positions must not contribute to the loss."""
-    cfg, model, params, data = quarterly
+    cfg, params, data = quarterly
     n = 4
     pb = {"hw": jax.tree_util.tree_map(lambda a: a[:n], params["hw"]),
           "rnn": params["rnn"], "head": params["head"]}
@@ -94,12 +94,12 @@ def test_observation_mask_excludes_padded_windows(quarterly):
     mask[:, :pad] = 0.0
     c = jnp.asarray(data.cats[:n])
     yj = jnp.asarray(y)
-    masked = model.loss_fn(pb, yj, c, jnp.asarray(mask))
-    unmasked = model.loss_fn(pb, yj, c)
+    masked = esrnn_loss(cfg, pb, yj, c, jnp.asarray(mask))
+    unmasked = esrnn_loss(cfg, pb, yj, c)
     assert bool(jnp.isfinite(masked))
     assert float(masked) != float(unmasked)  # padding excluded vs trained-on
     # all-ones mask is bit-identical to no mask (the equalized default)
-    ones = model.loss_fn(pb, yj, c, jnp.ones_like(yj))
+    ones = esrnn_loss(cfg, pb, yj, c, jnp.ones_like(yj))
     assert float(ones) == float(unmasked)
 
 
@@ -110,15 +110,14 @@ def test_attentive_variant_trains():
     import numpy as np
 
     cfg = make_config("yearly", attention=True)
-    model = ESRNN(cfg)
     rng = np.random.default_rng(0)
     n, t = 6, 30
     y = jnp.asarray(np.abs(rng.lognormal(3, 0.4, (n, t))) + 1, jnp.float32)
     c = jnp.zeros((n, 6), jnp.float32)
-    params = model.init(jax.random.PRNGKey(0), n)
+    params = esrnn_init(jax.random.PRNGKey(0), cfg, n)
     assert "attn" in params
-    loss, grads = model.loss_and_grad(params, y, c)
+    loss, grads = esrnn_loss_and_grad(cfg, params, y, c)
     assert bool(jnp.isfinite(loss))
     assert bool(jnp.any(grads["attn"]["wq"] != 0))
-    fc = model.forecast(params, y, c)
+    fc = esrnn_forecast(cfg, params, y, c)
     assert bool(jnp.isfinite(fc).all())

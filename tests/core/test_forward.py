@@ -1,0 +1,237 @@
+"""The unified state-space forward core (repro.core.forward).
+
+Two families of guarantees:
+
+1. **Golden bit-for-bit vs the pre-refactor core.** Before PR 5 the loss
+   and the forecast each re-derived the smoothing/window/seasonal-index
+   pipeline inline; the reference implementations below are verbatim copies
+   of that pre-refactor code. The refactored path (one ``esrnn_states``
+   pass consumed by both) must reproduce them with NO tolerance -- the
+   refactor moved code, it must not move numbers.
+
+2. **Rolling-origin causality.** ``forecast_at_origins`` reads the forecast
+   of origin ``o`` off the full-series pass; because every state is causal,
+   it must equal ``esrnn_forecast`` on the truncated history ``y[:, :o]``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import losses as L
+from repro.core.drnn import drnn_apply
+from repro.core.esrnn import (
+    esrnn_forecast, esrnn_forecast_at, esrnn_init, esrnn_loss, make_config,
+)
+from repro.core.holt_winters import hw_smooth
+
+
+# ---------------------------------------------------------------------------
+# Pre-refactor reference (frozen copy of the old core/esrnn.py internals)
+# ---------------------------------------------------------------------------
+
+
+def _ref_smooth(cfg, params, y):
+    return hw_smooth(
+        y, params["hw"], seasonality=cfg.seasonality,
+        seasonality2=cfg.seasonality2, use_pallas=cfg.use_pallas)
+
+
+def _ref_future_seasonal_idx(out_idx, t_len, m):
+    return jnp.where(out_idx < t_len + m, out_idx,
+                     t_len + jnp.mod(out_idx - t_len, m))
+
+
+def _ref_input_windows(cfg, y, levels, seas):
+    w = cfg.input_size
+    _, t_len = y.shape
+    pos = jnp.arange(cfg.input_size - 1, t_len)
+    in_idx = pos[:, None] + jnp.arange(-w + 1, 1)[None, :]
+    y_in = y[:, in_idx]
+    s_in = seas[:, in_idx]
+    lvl = levels[:, pos]
+    x_in = jnp.log(jnp.maximum(y_in / (lvl[:, :, None] * s_in), 1e-8))
+    return x_in, pos
+
+
+def _ref_target_windows(cfg, y, levels, seas, pos):
+    n, t_len = y.shape
+    h = cfg.output_size
+    out_idx = pos[:, None] + jnp.arange(1, h + 1)[None, :]
+    out_valid = out_idx < t_len
+    out_idx_c = jnp.minimum(out_idx, t_len - 1)
+    lvl = levels[:, pos]
+    y_out = y[:, out_idx_c]
+    m = max(cfg.seasonality, 1)
+    s_out = seas[:, _ref_future_seasonal_idx(out_idx, t_len, m)]
+    y_out_n = jnp.log(jnp.maximum(y_out / (lvl[:, :, None] * s_out), 1e-8))
+    out_mask = out_valid[None, :, :].astype(y.dtype) * jnp.ones(
+        (n, 1, 1), y.dtype)
+    return y_out_n, out_mask
+
+
+def _ref_rnn_head(cfg, params, feats):
+    hid, c_sq = drnn_apply(
+        params["rnn"], feats, dilations=cfg.dilations,
+        use_pallas=cfg.use_pallas)
+    if cfg.attention:
+        ap = params["attn"]
+        q = hid @ ap["wq"]
+        k = hid @ ap["wk"]
+        v = hid @ ap["wv"]
+        s = jnp.einsum("nph,nqh->npq", q, k) / jnp.sqrt(
+            jnp.asarray(cfg.hidden_size, jnp.float32)).astype(hid.dtype)
+        p_idx = jnp.arange(hid.shape[1])
+        mask = p_idx[:, None] >= p_idx[None, :]
+        s = jnp.where(mask[None], s.astype(jnp.float32), -jnp.inf)
+        hid = hid + jnp.einsum(
+            "npq,nqh->nph", jax.nn.softmax(s, axis=-1).astype(v.dtype), v)
+    head = params["head"]
+    z = jnp.tanh(hid @ head["dense_w"] + head["dense_b"])
+    return z @ head["out_w"] + head["out_b"], c_sq
+
+
+def _ref_features(x_in, cats):
+    n, p, _ = x_in.shape
+    cat_feat = jnp.broadcast_to(cats[:, None, :], (n, p, cats.shape[-1]))
+    return jnp.concatenate([x_in, cat_feat.astype(x_in.dtype)], axis=-1)
+
+
+def reference_loss(cfg, params, y, cats, mask=None):
+    """Verbatim pre-refactor esrnn_loss_fn (inline window pipeline)."""
+    levels, seas = _ref_smooth(cfg, params, y)
+    x_in, pos = _ref_input_windows(cfg, y, levels, seas)
+    y_out_n, out_mask = _ref_target_windows(cfg, y, levels, seas, pos)
+    if mask is not None:
+        valid_in = mask[:, pos - cfg.input_size + 1]
+        out_mask = out_mask * valid_in[:, :, None]
+    feats = _ref_features(x_in, cats)
+    yhat_n, c_sq = _ref_rnn_head(cfg, params, feats)
+    pin_sum, pin_cnt = L.pinball_terms(yhat_n, y_out_n, tau=cfg.tau,
+                                       mask=out_mask)
+    penalties = (L.level_variability_penalty(levels, cfg.level_penalty)
+                 + L.cstate_penalty(c_sq, cfg.cstate_penalty))
+    return pin_sum / jnp.maximum(pin_cnt, 1.0) + penalties
+
+
+def reference_forecast(cfg, params, y, cats):
+    """Verbatim pre-refactor esrnn_forecast (second inline pipeline)."""
+    n, t_len = y.shape
+    levels, seas = _ref_smooth(cfg, params, y)
+    x_in, _pos = _ref_input_windows(cfg, y, levels, seas)
+    feats = _ref_features(x_in, cats)
+    yhat_n, _ = _ref_rnn_head(cfg, params, feats)
+    last = yhat_n[:, -1, :]
+    m = max(cfg.seasonality, 1)
+    fut_idx = t_len + jnp.arange(cfg.output_size)
+    s_fut = seas[:, _ref_future_seasonal_idx(fut_idx, t_len, m)]
+    return jnp.exp(last) * levels[:, -1:] * s_fut
+
+
+# ---------------------------------------------------------------------------
+# Fixtures
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def batch():
+    rng = np.random.default_rng(11)
+    n, t = 7, 64
+    y = jnp.asarray(np.abs(rng.lognormal(3, 0.4, (n, t))) + 1, jnp.float32)
+    cats = jnp.asarray(np.eye(6, dtype=np.float32)[rng.integers(0, 6, n)])
+    mask = np.ones((n, t), np.float32)
+    for i in range(n):
+        mask[i, : rng.integers(0, t // 3)] = 0.0
+    return y, cats, jnp.asarray(mask)
+
+
+# ---------------------------------------------------------------------------
+# Golden bit-for-bit
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("variant", ["plain", "masked", "penalties",
+                                     "attention"])
+def test_loss_bit_for_bit_vs_pre_refactor(batch, variant):
+    y, cats, mask = batch
+    kw = {}
+    if variant == "penalties":
+        kw = dict(level_penalty=5.0, cstate_penalty=0.5)
+    if variant == "attention":
+        kw = dict(attention=True)
+    cfg = make_config("quarterly", hidden_size=8, **kw)
+    params = esrnn_init(jax.random.PRNGKey(2), cfg, y.shape[0])
+    m = mask if variant == "masked" else None
+    new = esrnn_loss(cfg, params, y, cats, m)
+    old = reference_loss(cfg, params, y, cats, m)
+    assert float(new) == float(old)  # NO tolerance: the refactor moved code
+
+
+def test_loss_bit_for_bit_dual_seasonality():
+    cfg = make_config("hourly", hidden_size=8)
+    rng = np.random.default_rng(0)
+    n, t = 3, 24 * 16
+    y = jnp.asarray(np.abs(rng.lognormal(3, 0.2, (n, t))) + 1, jnp.float32)
+    cats = jnp.zeros((n, 6), jnp.float32)
+    params = esrnn_init(jax.random.PRNGKey(0), cfg, n)
+    assert float(esrnn_loss(cfg, params, y, cats)) == float(
+        reference_loss(cfg, params, y, cats))
+
+
+def test_forecast_bit_for_bit_vs_pre_refactor(batch):
+    y, cats, _ = batch
+    cfg = make_config("quarterly", hidden_size=8)
+    params = esrnn_init(jax.random.PRNGKey(2), cfg, y.shape[0])
+    np.testing.assert_array_equal(
+        np.asarray(esrnn_forecast(cfg, params, y, cats)),
+        np.asarray(reference_forecast(cfg, params, y, cats)))
+
+
+# ---------------------------------------------------------------------------
+# Rolling origins: causality of the unified pass
+# ---------------------------------------------------------------------------
+
+
+def test_forecast_at_final_origin_is_the_forecast(batch):
+    y, cats, _ = batch
+    cfg = make_config("quarterly", hidden_size=8)
+    params = esrnn_init(jax.random.PRNGKey(0), cfg, y.shape[0])
+    fa = esrnn_forecast_at(cfg, params, y, cats, (y.shape[1],))
+    np.testing.assert_array_equal(
+        np.asarray(fa[:, 0]),
+        np.asarray(esrnn_forecast(cfg, params, y, cats)))
+
+
+@pytest.mark.parametrize("origin", [8, 23, 40, 63])
+def test_forecast_at_origin_equals_truncated_predict(batch, origin):
+    """The headline property: one pass == per-origin truncated re-runs."""
+    y, cats, _ = batch
+    cfg = make_config("quarterly", hidden_size=8)
+    params = esrnn_init(jax.random.PRNGKey(0), cfg, y.shape[0])
+    fa = esrnn_forecast_at(cfg, params, y, cats, (origin, y.shape[1]))
+    trunc = esrnn_forecast(cfg, params, y[:, :origin], cats)
+    np.testing.assert_allclose(np.asarray(fa[:, 0]), np.asarray(trunc),
+                               rtol=1e-6)
+
+
+def test_forecast_at_origin_causal_under_attention(batch):
+    """The attentive head is causally masked, so origins stay sound."""
+    y, cats, _ = batch
+    cfg = make_config("quarterly", hidden_size=8, attention=True)
+    params = esrnn_init(jax.random.PRNGKey(1), cfg, y.shape[0])
+    o = 40
+    fa = esrnn_forecast_at(cfg, params, y, cats, (o,))
+    trunc = esrnn_forecast(cfg, params, y[:, :o], cats)
+    np.testing.assert_allclose(np.asarray(fa[:, 0]), np.asarray(trunc),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_forecast_at_rejects_bad_origins(batch):
+    y, cats, _ = batch
+    cfg = make_config("quarterly", hidden_size=8)
+    params = esrnn_init(jax.random.PRNGKey(0), cfg, y.shape[0])
+    with pytest.raises(ValueError, match="origin"):
+        esrnn_forecast_at(cfg, params, y, cats, (cfg.input_size - 1,))
+    with pytest.raises(ValueError, match="origin"):
+        esrnn_forecast_at(cfg, params, y, cats, (y.shape[1] + 1,))

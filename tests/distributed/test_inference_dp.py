@@ -1,0 +1,198 @@
+"""Sharded end-to-end inference: predict / quantiles / evaluate / backtest.
+
+Mirror of ``test_series_dp.py`` for the inference layer: the 8-device
+checks run in a subprocess with forced host devices (XLA locks the device
+count at first jax init); the in-process tests cover the spec/padding/
+degenerate-mesh behaviour on the default backend.
+
+Tolerances: forecasts are per-row device-local math (no collectives), so
+sharded == single-device bit-for-bit in practice; asserted at rtol 1e-6.
+Metrics go through ``psum(sum)/psum(count)`` -- exact global masked means,
+equal to the single-device metric up to float32 summation order (<= 1e-6
+relative; asserted absolutely at 1e-5 on sMAPE values ~ a few units, with
+observed diffs ~1e-7).
+"""
+
+import json
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.forecast import ESRNNForecaster, get_smoke_spec
+from repro.sharding import series
+
+
+@pytest.fixture(scope="module")
+def fitted():
+    f = ESRNNForecaster(get_smoke_spec("esrnn-quarterly", data_seed=3))
+    f.fit(n_steps=4)
+    return f
+
+
+def test_mesh_on_available_devices_matches_plain(fitted):
+    """Whatever the default backend offers (1 device in the plain tier-1
+    run, 8 under the CI sharded-smoke job), the mesh path must agree."""
+    f = fitted
+    mesh = series.make_series_mesh(len(jax.devices()))
+    np.testing.assert_allclose(f.predict(mesh=mesh), f.predict(), rtol=1e-6)
+    e1, e8 = f.evaluate(), f.evaluate(mesh=mesh)
+    assert abs(e1["smape"] - e8["smape"]) <= 1e-5
+    assert abs(e1["mase"] - e8["mase"]) <= 1e-5
+    b1, b8 = f.backtest(), f.backtest(mesh=mesh)
+    assert abs(b1["smape"] - b8["smape"]) <= 1e-5
+    np.testing.assert_allclose(b8["forecasts"], b1["forecasts"], rtol=1e-6)
+
+
+def test_row_padding_strips_exactly(fitted):
+    """N=19 on any mesh: rows pad to the device multiple and strip back."""
+    f = fitted
+    mesh = series.make_series_mesh(len(jax.devices()))
+    p = f.predict(mesh=mesh)
+    assert p.shape == (f.n_series_, f.horizon)
+    q = f.predict_quantiles(mesh=mesh)
+    assert all(v.shape == (f.n_series_, f.horizon) for v in q.values())
+
+
+def test_backtest_requires_origins_with_custom_y(fitted):
+    with pytest.raises(ValueError, match="origins"):
+        fitted.backtest(y=fitted.data_.train)
+
+
+def test_backtest_masks_horizon_past_series_end(fitted):
+    """An origin H-1 steps from the end scores only the observed points."""
+    f = fitted
+    t_full = f.data_.val_input.shape[1] + f.data_.test_target.shape[1]
+    bt = f.backtest(origins=(t_full - 1,))
+    assert np.isfinite(bt["smape"])
+    # only 1 of H target steps exists; the metrics still average something
+    assert bt["per_origin"][0]["origin"] == t_full - 1
+
+
+def test_backtest_default_origins_are_val_and_test(fitted):
+    f = fitted
+    bt = f.backtest()
+    train_len = f.data_.train.shape[1]
+    assert bt["origins"] == [train_len, train_len + f.data_.horizon]
+    # the second origin scores the same window evaluate(split="test") does
+    ev = f.evaluate(split="test")
+    assert abs(bt["per_origin"][1]["smape"] - ev["smape"]) <= 1e-4
+    # and the first origin's forecast IS predict-from-train
+    np.testing.assert_allclose(
+        bt["forecasts"][:, 0], f.predict(f.data_.train, f.data_.cats),
+        rtol=1e-6)
+
+
+_SUBPROC = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax
+import numpy as np
+
+from repro.forecast import (
+    BatchedForecastServer, ESRNNForecaster, get_smoke_spec,
+    synthetic_request_stream,
+)
+from repro.sharding.series import make_series_mesh
+
+out = {"devices": len(jax.devices())}
+mesh = make_series_mesh(8)
+
+
+def run_variant(tag, spec):
+    f = ESRNNForecaster(spec).fit()
+    out[tag + "_n"] = int(f.n_series_)  # 19: exercises the pad/strip path
+
+    p1, p8 = f.predict(), f.predict(mesh=mesh)
+    out[tag + "_predict_reldiff"] = float(
+        np.max(np.abs(p1 - p8) / np.abs(p1)))
+
+    q1 = f.predict_quantiles(taus=(0.1, 0.9))
+    q8 = f.predict_quantiles(taus=(0.1, 0.9), mesh=mesh)
+    out[tag + "_quantile_reldiff"] = float(max(
+        np.max(np.abs(q1[t] - q8[t]) / np.abs(q1[t])) for t in q1))
+
+    e1, e8 = f.evaluate(), f.evaluate(mesh=mesh)
+    out[tag + "_eval_absdiff"] = float(max(
+        abs(e1[k] - e8[k]) for k in ("smape", "mase", "owa")))
+
+    b1, b8 = f.backtest(), f.backtest(mesh=mesh)
+    out[tag + "_backtest_absdiff"] = float(max(
+        abs(b1["smape"] - b8["smape"]), abs(b1["mase"] - b8["mase"])))
+    out[tag + "_backtest_fc_reldiff"] = float(
+        np.max(np.abs(b1["forecasts"] - b8["forecasts"])
+               / np.abs(b1["forecasts"])))
+    return f
+
+
+f = run_variant("plain", get_smoke_spec("esrnn-quarterly", data_seed=3,
+                                        n_steps=6))
+run_variant("pallas", get_smoke_spec("esrnn-quarterly", data_seed=3,
+                                     n_steps=6, use_pallas=True))
+# ragged variant: variable_length left-padding -> unequal per-shard valid
+# counts in training AND ragged histories at inference time
+run_variant("ragged", get_smoke_spec("esrnn-quarterly", data_seed=7,
+                                     n_steps=6, variable_length=True,
+                                     min_length=60))
+
+# spec.data_parallel alone (no explicit mesh) routes inference sharded
+fdp = ESRNNForecaster(get_smoke_spec("esrnn-quarterly", data_seed=3,
+                                     n_steps=6, data_parallel=8)).fit()
+p_dp = fdp.predict()            # resolves its own 8-device mesh
+f_ref = ESRNNForecaster(get_smoke_spec("esrnn-quarterly", data_seed=3,
+                                       n_steps=6)).fit()
+out["dp_spec_predict_reldiff"] = float(
+    np.max(np.abs(p_dp - f_ref.predict()) / np.abs(p_dp)))
+
+# sharded serving off a DP-fitted (device-sharded) table: host snapshot,
+# numpy per-request gather, shard_map forecast
+srv1 = BatchedForecastServer(fdp.config, fdp.params_,
+                             length_buckets=(32, 64),
+                             batch_buckets=(1, 4, 16))
+srv8 = BatchedForecastServer(fdp.config, fdp.params_,
+                             length_buckets=(32, 64),
+                             batch_buckets=(1, 4, 16), mesh=mesh)
+out["serve_table_is_host_numpy"] = all(
+    isinstance(a, np.ndarray)
+    for a in jax.tree_util.tree_leaves(srv8._hw_table))
+reqs = synthetic_request_stream(fdp.config, 23, n_known=fdp.n_series_,
+                                seed=0)
+o1 = srv1.forecast_batch(reqs)
+o8 = srv8.forecast_batch(reqs)
+out["serve_reldiff"] = float(max(
+    np.max(np.abs(a - b) / np.abs(a)) for a, b in zip(o1, o8)))
+compiles_w1 = srv8.stats.compiles
+srv8.forecast_batch(reqs)       # wave 2: every bucket shape already built
+out["serve_wave2_new_compiles"] = int(srv8.stats.compiles - compiles_w1)
+out["serve_cache_hits"] = int(srv8.stats.cache_hits)
+print(json.dumps(out))
+"""
+
+
+@pytest.mark.slow
+def test_sharded_inference_matches_single_device_on_8_devices():
+    r = subprocess.run(
+        [sys.executable, "-c", _SUBPROC], capture_output=True, text=True,
+        timeout=560)
+    assert r.returncode == 0, r.stderr[-3000:]
+    out = json.loads(r.stdout.strip().splitlines()[-1])
+    assert out["devices"] == 8
+    # the plain/pallas variants have N=19: pad/strip path exercised
+    assert out["plain_n"] % 8 != 0, "want the pad/strip path exercised"
+    for tag in ("plain", "pallas", "ragged"):
+        assert out[f"{tag}_predict_reldiff"] <= 1e-6, (tag, out)
+        assert out[f"{tag}_quantile_reldiff"] <= 1e-6, (tag, out)
+        assert out[f"{tag}_eval_absdiff"] <= 1e-6, (tag, out)
+        assert out[f"{tag}_backtest_absdiff"] <= 1e-6, (tag, out)
+        assert out[f"{tag}_backtest_fc_reldiff"] <= 1e-6, (tag, out)
+    # spec.data_parallel routes inference sharded without an explicit mesh
+    assert out["dp_spec_predict_reldiff"] <= 1e-6, out
+    # serving: host-resident table (regression: per-request primer/known-row
+    # resolution must never gather the sharded device table) + equivalence
+    assert out["serve_table_is_host_numpy"], out
+    assert out["serve_reldiff"] <= 1e-6, out
+    assert out["serve_wave2_new_compiles"] == 0, out
+    assert out["serve_cache_hits"] > 0, out

@@ -69,6 +69,19 @@ def test_eval_from_saved(saved_dir, capsys):
     assert "esrnn" in out and "comb" in out and "naive2" in out
 
 
+def test_backtest_from_saved(saved_dir, capsys):
+    assert main(["backtest", "--dir", saved_dir]) == 0
+    out = capsys.readouterr().out
+    assert "rolling-origin backtest" in out and "overall" in out
+    assert out.count("  origin ") == 2  # default: end-of-train + end-of-val
+
+
+def test_backtest_explicit_origins(saved_dir, capsys):
+    assert main(["backtest", "--dir", saved_dir, "--origins", "60,72,80"]) == 0
+    out = capsys.readouterr().out
+    assert out.count("  origin ") == 3
+
+
 def test_serve_smoke(saved_dir, capsys):
     assert main(["serve", "--dir", saved_dir, "--requests", "8",
                  "--waves", "2", "--length-buckets", "32,64",

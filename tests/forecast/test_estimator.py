@@ -5,7 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.esrnn import ESRNN
+from repro.core.esrnn import esrnn_forecast, esrnn_init, esrnn_loss
 from repro.forecast import ESRNNForecaster, get_smoke_spec
 from repro.forecast.estimator import NotFittedError
 
@@ -17,29 +17,33 @@ def fitted():
     return f
 
 
-def test_golden_matches_legacy_loss_bit_for_bit(fitted):
-    """The estimator's loss IS the legacy ESRNN.loss_fn on a fixed seed."""
+def test_golden_matches_pure_loss_bit_for_bit(fitted):
+    """The estimator's loss IS the pure esrnn_loss on a fixed seed.
+
+    (The bit-for-bit goldens against the *pre-refactor* inline loss /
+    forecast math live in tests/core/test_forward.py.)
+    """
     f = fitted
     y = jnp.asarray(f.data_.train)
     c = jnp.asarray(f.data_.cats)
-    legacy = ESRNN(f.config, _warn=False)
     new = f.loss(y, c)
-    old = legacy.loss_fn(f.params_, y, c)
+    old = esrnn_loss(f.config, f.params_, y, c)
     assert float(new) == float(old)  # bit-for-bit, no tolerance
     # and from a freshly-initialized fixed seed, independently of fit()
     g = ESRNNForecaster(f.spec)
     g.init_params(f.n_series_, seed=123)
-    old_init = legacy.init(jax.random.PRNGKey(123), f.n_series_)
-    assert float(g.loss(y, c)) == float(legacy.loss_fn(old_init, y, c))
+    old_init = esrnn_init(jax.random.PRNGKey(123), f.config, f.n_series_)
+    assert float(g.loss(y, c)) == float(
+        esrnn_loss(f.config, old_init, y, c))
 
 
-def test_golden_matches_legacy_forecast_bit_for_bit(fitted):
+def test_golden_matches_pure_forecast_bit_for_bit(fitted):
     f = fitted
-    legacy = ESRNN(f.config, _warn=False)
     np.testing.assert_array_equal(
         f.predict(),
-        np.asarray(legacy.forecast(
-            f.params_, jnp.asarray(f.data_.train), jnp.asarray(f.data_.cats))))
+        np.asarray(esrnn_forecast(
+            f.config, f.params_,
+            jnp.asarray(f.data_.train), jnp.asarray(f.data_.cats))))
 
 
 def test_fit_save_load_predict_equivalence(fitted, tmp_path):

@@ -83,6 +83,48 @@ def test_bad_category_degrades_to_cold_start_not_crash(server):
     np.testing.assert_array_equal(out[1], out[2])
 
 
+def test_hw_table_is_host_resident(server):
+    """Cold-start + sharding regression: per-request primer/known-row
+    resolution happens against a HOST numpy snapshot of the (possibly
+    mesh-sharded) fitted table -- a device-table gather per request would
+    re-gather the whole sharded table through the mesh on the hot path."""
+    import jax
+
+    f, srv = server
+    leaves = jax.tree_util.tree_leaves(srv._hw_table)
+    assert leaves and all(isinstance(a, np.ndarray) for a in leaves)
+    rows = srv._hw_rows([ForecastRequest(y=np.ones(40, np.float32),
+                                         series_id=0),
+                         ForecastRequest(y=np.ones(40, np.float32),
+                                         series_id=None)])
+    # gathered rows stay numpy too: nothing touches a device until the
+    # batched forecast itself runs
+    assert all(isinstance(a, np.ndarray)
+               for a in jax.tree_util.tree_leaves(rows))
+    # row 1 is the primer (cold start), distinct from the fitted row 0
+    assert not np.array_equal(np.asarray(rows.alpha_logit[0]),
+                              np.asarray(rows.alpha_logit[1])) or \
+        not np.array_equal(np.asarray(rows.init_seas_logit[0]),
+                           np.asarray(rows.init_seas_logit[1]))
+
+
+def test_one_device_mesh_degenerates_to_single_device(server):
+    """mesh with 1 device == no mesh (identical path, identical numbers)."""
+    from repro.sharding.series import make_series_mesh
+
+    f, _ = server
+    srv_plain = BatchedForecastServer(
+        f.config, f.params_, length_buckets=(32, 64), batch_buckets=(1, 4))
+    srv_mesh = BatchedForecastServer(
+        f.config, f.params_, length_buckets=(32, 64), batch_buckets=(1, 4),
+        mesh=make_series_mesh(1))
+    assert srv_mesh.mesh is None
+    reqs = synthetic_request_stream(f.config, 6, n_known=f.n_series_, seed=2)
+    for a, b in zip(srv_plain.forecast_batch(reqs),
+                    srv_mesh.forecast_batch(reqs)):
+        np.testing.assert_array_equal(a, b)
+
+
 def test_max_batch_clamped_to_largest_bucket():
     """max_batch beyond the bucket grid must not produce oversized chunks."""
     f = ESRNNForecaster(get_smoke_spec("esrnn-quarterly"))

@@ -17,8 +17,8 @@ import pytest
 
 from repro.core import losses as L
 from repro.core.esrnn import (
-    ESRNN, esrnn_init, esrnn_loss_fn, esrnn_loss_loop_reference, gather_series,
-    make_config,
+    esrnn_forecast, esrnn_init, esrnn_loss, esrnn_loss_fn,
+    esrnn_loss_loop_reference, gather_series, make_config,
 )
 from repro.data.pipeline import prepare
 from repro.data.synthetic_m4 import generate
@@ -28,10 +28,10 @@ from repro.train.trainer import TrainConfig, train_esrnn
 @pytest.fixture(scope="module")
 def trained():
     data = prepare(generate("quarterly", scale=0.004, seed=42))
-    model = ESRNN(make_config("quarterly"))
-    out = train_esrnn(model, data, TrainConfig(
+    cfg = make_config("quarterly")
+    out = train_esrnn(cfg, data, TrainConfig(
         batch_size=32, n_steps=60, lr=4e-3, eval_every=30, ckpt_dir=None))
-    return model, data, out
+    return cfg, data, out
 
 
 def test_loss_decreases(trained):
@@ -41,9 +41,9 @@ def test_loss_decreases(trained):
 
 
 def test_beats_seasonal_naive_on_validation(trained):
-    model, data, out = trained
+    cfg, data, out = trained
     m, o = data.seasonality, data.horizon
-    fc = model.forecast(out["params"], jnp.asarray(data.train),
+    fc = esrnn_forecast(cfg, out["params"], jnp.asarray(data.train),
                         jnp.asarray(data.cats))
     model_smape = float(L.smape(fc, jnp.asarray(data.val_target)))
     reps = -(-o // m)
@@ -87,21 +87,21 @@ def test_vectorized_program_is_batch_invariant():
                            "single-core hosts; opt in with ESRNN_TIMING=1")
 def test_vectorized_faster_than_loop(trained):
     """Table 5's mechanism at test scale: batched >= 3x faster than looped."""
-    model, data, out = trained
+    cfg, data, out = trained
     n = min(24, data.n_series)
     params = gather_series(out["params"], slice(0, n))
     y = jnp.asarray(data.train[:n])
     c = jnp.asarray(data.cats[:n])
 
-    model.loss_fn(params, y, c).block_until_ready()  # warm
+    esrnn_loss(cfg, params, y, c).block_until_ready()  # warm
     t0 = time.perf_counter()
     for _ in range(3):
-        model.loss_fn(params, y, c).block_until_ready()
+        esrnn_loss(cfg, params, y, c).block_until_ready()
     t_vec = (time.perf_counter() - t0) / 3
 
-    esrnn_loss_loop_reference(model, params, y, c)  # warm the per-series jit
+    esrnn_loss_loop_reference(cfg, params, y, c)  # warm the per-series jit
     t0 = time.perf_counter()
-    esrnn_loss_loop_reference(model, params, y, c)
+    esrnn_loss_loop_reference(cfg, params, y, c)
     t_loop = time.perf_counter() - t0
 
     assert t_loop / t_vec > 3.0, (t_loop, t_vec)

@@ -8,7 +8,7 @@ import numpy as np
 import pytest
 
 from repro.checkpoint.checkpointer import Checkpointer
-from repro.core.esrnn import ESRNN, make_config
+from repro.core.esrnn import make_config
 from repro.data.pipeline import prepare
 from repro.data.synthetic_m4 import generate
 from repro.train.trainer import TrainConfig, train_esrnn
@@ -58,7 +58,7 @@ def test_structure_mismatch_rejected(tmp_path):
 def test_training_resume_bit_exact(tmp_path):
     """Train 20 steps straight vs 10 + restart + 10: identical params."""
     data = prepare(generate("quarterly", scale=0.002, seed=3))
-    model = ESRNN(make_config("quarterly"))
+    model = make_config("quarterly")
 
     base = dict(batch_size=8, lr=1e-3, eval_every=1000, ckpt_every=10, seed=5)
     out_a = train_esrnn(model, data,
