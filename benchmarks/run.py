@@ -1,15 +1,18 @@
 """Benchmark harness entry point -- one function per paper table.
 
-``python -m benchmarks.run [--fast]`` runs Table 4/5/6 analogs and the
-roofline report, printing ``name,us_per_call,derived`` CSV lines plus the
-human-readable tables, and saving JSON under experiments/bench/. It also
-writes the repo-root ``BENCH_PR5.json`` trajectory point (speedup through
-the public estimator, the ``use_pallas`` train-step timing column, the
-fused-engine ``scan_steps`` steps/sec column, the sharded-vs-single
-``predict_path`` series/sec column, sMAPE, device sweep, git sha) that CI
-archives as an artifact -- the perf record the next regression gets
-compared against (``BENCH_PR2.json``..``BENCH_PR4.json`` are the prior
-points, kept for comparison).
+``python -m benchmarks.run [--fast]`` runs Table 4/5/6 analogs, the
+sustained-load serving benchmark and the roofline report, printing
+``name,us_per_call,derived`` CSV lines plus the human-readable tables, and
+saving JSON under experiments/bench/. It also writes the repo-root
+``BENCH_PR6.json`` trajectory point (speedup through the public estimator,
+the ``use_pallas`` train-step timing column, the fused-engine
+``scan_steps`` steps/sec column, the sharded-vs-single ``predict_path``
+series/sec column, the continuous-batching ``serve_load`` sustained-load
+column -- p50/p99 latency + series/sec for >= 2 queue configurations vs
+the batch-1 baseline -- sMAPE, device sweep, git sha) that CI archives as
+an artifact -- the perf record the next regression gets compared against
+(``BENCH_PR2.json``..``BENCH_PR5.json`` are the prior points, kept for
+comparison).
 """
 
 import argparse
@@ -19,7 +22,7 @@ import subprocess
 import time
 
 BENCH_TRAJECTORY = os.path.join(
-    os.path.dirname(__file__), "..", "BENCH_PR5.json")
+    os.path.dirname(__file__), "..", "BENCH_PR6.json")
 
 
 def _git_sha() -> str:
@@ -32,12 +35,12 @@ def _git_sha() -> str:
         return "unknown"
 
 
-def write_trajectory(t5, t4) -> str:
-    """BENCH_PR5.json: the machine-readable perf point CI archives."""
+def write_trajectory(t5, t4, serve) -> str:
+    """BENCH_PR6.json: the machine-readable perf point CI archives."""
     import jax
 
     payload = {
-        "bench": "PR5",
+        "bench": "PR6",
         "git_sha": _git_sha(),
         "devices": len(jax.devices()),
         "speedup_vectorized_vs_loop": t5["estimator_path"]["speedup"],
@@ -53,6 +56,11 @@ def write_trajectory(t5, t4) -> str:
         # the series mesh over all devices (CI gates >= 1.5x at 8 host
         # devices; on real multi-chip hosts this is the scaling claim)
         "predict_path": t5["predict_path"],
+        # sustained-load serving column: open-loop Poisson arrivals replayed
+        # against batch-1 dispatch-on-arrival vs the continuous-batching
+        # server at >= 2 queue configs (CI gates: run completes, p99 finite,
+        # series/sec recorded, continuous >= 1.5x at equal-or-better p99)
+        "serve_load": serve,
         "smape_quarterly": t4["per_frequency"]["quarterly"]["esrnn"]["smape"],
         "owa_quarterly": t4["per_frequency"]["quarterly"]["esrnn"]["owa"],
         "device_sweep": t5["device_sweep"],
@@ -68,7 +76,10 @@ def main() -> None:
     ap.add_argument("--fast", action="store_true", help="reduced sizes")
     args, _ = ap.parse_known_args()
 
-    from benchmarks import roofline_report, table4_accuracy, table5_speedup, table6_categories
+    from benchmarks import (
+        roofline_report, serve_load, table4_accuracy, table5_speedup,
+        table6_categories,
+    )
 
     csv = []
 
@@ -118,6 +129,25 @@ def main() -> None:
           f"{t4['improvement_vs_comb_pct']:.1f}% (paper: 9.2-11.2%)")
 
     t0 = time.perf_counter()
+    sv = serve_load.run(fast=args.fast)
+    dt = time.perf_counter() - t0
+    csv.append(("serve_load", dt * 1e6,
+                f"continuous_speedup={sv['speedup_best_vs_baseline']:.2f}x"))
+    print("\n== Sustained-load serving (open-loop Poisson arrivals) ==")
+    base = sv["baseline_batch1"]
+    print(f"  offered {sv['offered_rate_per_s']:.0f} req/s over "
+          f"{sv['n_requests']} requests")
+    print(f"  batch-1 baseline: {base['series_per_sec']:7.0f} series/s  "
+          f"p50 {base['p50_ms']:7.1f} ms  p99 {base['p99_ms']:7.1f} ms")
+    for c in sv["continuous"]:
+        print(f"  continuous w={c['max_wait_ms']:4.1f}ms: "
+              f"{c['series_per_sec']:7.0f} series/s  "
+              f"p50 {c['p50_ms']:7.1f} ms  p99 {c['p99_ms']:7.1f} ms  "
+              f"({c['batches']} batches, queue peak {c['queue_peak']})")
+    print(f"  best continuous vs baseline: "
+          f"{sv['speedup_best_vs_baseline']:.2f}x series/s")
+
+    t0 = time.perf_counter()
     t6 = table6_categories.run(fast=True)
     dt = time.perf_counter() - t0
     csv.append(("table6_categories", dt * 1e6, "per-category sMAPE"))
@@ -133,7 +163,7 @@ def main() -> None:
     for name, us, derived in csv:
         print(f"{name},{us:.0f},{derived}")
 
-    print("\nwrote", write_trajectory(t5, t4))
+    print("\nwrote", write_trajectory(t5, t4, sv))
 
 
 if __name__ == "__main__":

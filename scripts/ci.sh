@@ -18,8 +18,17 @@ echo "== fused-superstep fit smoke (scan_steps=8, sparse per-series adam) =="
 python -m repro.launch.forecast fit --spec esrnn-quarterly --smoke --steps 20 \
     --set scan_steps=8 --set sparse_adam=true
 
-echo "== forecast serve smoke =="
+echo "== forecast serve smoke (continuous batching) =="
 python -m repro.launch.forecast serve --smoke --steps 3 --requests 16
+
+echo "== observe/forecast round-trip smoke (online state ingestion) =="
+python - <<'EOF' | python -m repro.launch.forecast observe --smoke --steps 3 --seed-histories
+import json
+for t in range(12):
+    print(json.dumps({"op": "observe", "series_id": 0, "y": 100.0 + t}))
+print(json.dumps({"op": "forecast", "series_id": 0}))
+print(json.dumps({"op": "stats"}))
+EOF
 
 echo "== rolling-origin backtest smoke =="
 python -m repro.launch.forecast backtest --smoke --steps 3 --origins 60,72,80

@@ -39,7 +39,21 @@ import jax.numpy as jnp
 
 from repro.core import losses as L
 from repro.core.drnn import drnn_apply
-from repro.core.holt_winters import hw_smooth
+from repro.core.holt_winters import hw_smooth, hw_step
+
+__all__ = [
+    "ESRNNStates", "esrnn_states", "smooth", "hw_step", "window_positions",
+    "future_seasonal_idx", "input_windows", "target_windows", "features",
+    "rnn_head", "loss_terms", "forecast_from_states", "quantile_sigma",
+    "forecast_at_origins",
+]
+
+# ``hw_step`` is re-exported here as part of the forward core's public
+# surface: it is the exact body of the :func:`smooth` scan (extracted, not
+# duplicated), and the forecast server's online ``observe`` path applies it
+# on host to roll a series' (level, seasonal-ring) state forward per new
+# observation -- one step of the same recurrence :func:`esrnn_states` runs
+# over the whole history, so the rolled state matches a from-scratch pass.
 
 
 @jax.tree_util.register_dataclass

@@ -103,6 +103,49 @@ def hw_init_params(
 
 
 # ---------------------------------------------------------------------------
+# The one-step recurrence (shared by the scan and the online serving path)
+# ---------------------------------------------------------------------------
+
+
+def hw_step(
+    y_t,
+    level,
+    s_t,
+    s2_t,
+    alpha,
+    gamma,
+    gamma2=None,
+    *,
+    seasonal: bool = True,
+    dual: bool = False,
+):
+    """One Holt-Winters update: ``(l_t, s_new, s2_new)`` from observation y_t.
+
+        l_t     = alpha * y_t / (s_t * s2_t) + (1 - alpha) * l_{t-1}
+        s_{t+m} = gamma * y_t / (l_t * s2_t) + (1 - gamma) * s_t
+        s2_{t+m2} = gamma2 * y_t / (l_t * s_t) + (1 - gamma2) * s2_t
+
+    This IS the body of the :func:`hw_smooth` scan (extracted, not
+    duplicated -- the scan calls it), written in pure arithmetic so it runs
+    on jax arrays inside ``lax.scan`` AND on host numpy arrays for the
+    forecast server's online ``observe`` path, which rolls each series'
+    (level, seasonal-ring) state forward in place as new observations
+    arrive -- no refit, no re-pass over history. ``seasonal=False`` holds
+    the seasonal factor fixed (m == 1 series); ``dual`` enables the second
+    ring (section 8.2). Inputs are scalars or arrays with a common batch
+    shape; ring rotation is the caller's job (the new factors returned here
+    are s_{t+m} / s2_{t+m2}, to be pushed onto the back of the rings).
+    """
+    s_all = s_t * s2_t
+    l_t = alpha * y_t / s_all + (1.0 - alpha) * level
+    s_new = (gamma * y_t / (l_t * s2_t) + (1.0 - gamma) * s_t
+             if seasonal else s_t)
+    s2_new = (gamma2 * y_t / (l_t * s_t) + (1.0 - gamma2) * s2_t
+              if dual else s2_t)
+    return l_t, s_new, s2_new
+
+
+# ---------------------------------------------------------------------------
 # Vectorized scan implementation (the paper's contribution)
 # ---------------------------------------------------------------------------
 
@@ -171,19 +214,12 @@ def _hw_smooth_scan(y, params, seasonality, seasonality2):
         l_prev, s_ring, s2_ring = carry
         s_t = s_ring[:, 0]
         s2_t = s2_ring[:, 0]
-        s_all = s_t * s2_t
-        l_t = alpha * y_t / s_all + (1.0 - alpha) * l_prev
-        if seasonal:
-            s_new = gamma * y_t / (l_t * s2_t) + (1.0 - gamma) * s_t
-        else:
-            s_new = s_t
-        if dual:
-            s2_new = gamma2 * y_t / (l_t * s_t) + (1.0 - gamma2) * s2_t
-        else:
-            s2_new = s2_t
+        l_t, s_new, s2_new = hw_step(
+            y_t, l_prev, s_t, s2_t, alpha, gamma, gamma2,
+            seasonal=seasonal, dual=dual)
         s_ring = jnp.concatenate([s_ring[:, 1:], s_new[:, None]], axis=1)
         s2_ring = jnp.concatenate([s2_ring[:, 1:], s2_new[:, None]], axis=1)
-        return (l_t, s_ring, s2_ring), (l_t, s_all)
+        return (l_t, s_ring, s2_ring), (l_t, s_t * s2_t)
 
     (_, s_ring, s2_ring), (levels, seas_used) = jax.lax.scan(
         step, (l0, seas0, seas20), y.T

@@ -1,4 +1,4 @@
-"""Unified forecasting API: spec registry, estimator, batched serving.
+"""Unified forecasting API: spec registry, estimator, batched + online serving.
 
     from repro.forecast import ESRNNForecaster, get_spec
 
@@ -20,6 +20,7 @@ __all__ = [
     "ESRNNForecaster", "NotFittedError",
     "BatchedForecastServer", "ForecastRequest", "ServeStats",
     "synthetic_request_stream",
+    "ForecastServer", "ServerConfig", "ObserveWrite",
 ]
 
 _LAZY = {
@@ -29,6 +30,9 @@ _LAZY = {
     "ForecastRequest": "repro.forecast.serving",
     "ServeStats": "repro.forecast.serving",
     "synthetic_request_stream": "repro.forecast.serving",
+    "ForecastServer": "repro.forecast.server",
+    "ServerConfig": "repro.forecast.server",
+    "ObserveWrite": "repro.forecast.server",
 }
 
 

@@ -11,6 +11,8 @@ One object, six verbs -- the whole paper workflow behind a stable surface:
     bt = f.backtest(origins=(72, 80))               # rolling-origin scores,
                                                     # one forward pass
     f.save(path);  g = ESRNNForecaster.load(path)   # shared Checkpointer
+    srv = f.serve()                                 # continuous-batching
+                                                    # online server
 
 Every inference verb accepts ``mesh=`` (or inherits ``spec.data_parallel``)
 to run series-sharded across devices with exact psum'd metrics; rows are
@@ -476,6 +478,44 @@ class ESRNNForecaster:
             "mase": ratio(m_sum.sum(), m_cnt.sum()),
             "forecasts": fc,
         }
+
+    # -- serving -------------------------------------------------------------
+
+    def serve(self, *, server_config=None,
+              length_buckets: Tuple[int, ...] = (32, 64, 128, 256),
+              batch_buckets: Tuple[int, ...] = (1, 4, 16, 64),
+              mesh=None, seed_histories: bool = False):
+        """Continuous-batching online server over the fitted params.
+
+        Returns an (unstarted) :class:`repro.forecast.server.ForecastServer`
+        -- ``start()`` it for threaded serving or drive ``step()``/``drain()``
+        synchronously. ``seed_histories=True`` pre-registers every fitted
+        series' training history in the online store (masked left-padding
+        stripped), so ``observe``/history-less forecasts work for known ids
+        from the first request instead of only after their first write.
+        Inherits ``spec.data_parallel`` sharding like the other verbs.
+        """
+        self._check_fitted()
+        from repro.forecast.server import ForecastServer
+
+        srv = ForecastServer(
+            self.config, self.params_, server_config=server_config,
+            length_buckets=length_buckets, batch_buckets=batch_buckets,
+            mesh=self._resolve_mesh(mesh))
+        if seed_histories:
+            if self.data_ is None:
+                raise NotFittedError(
+                    "serve(seed_histories=True) needs fitted data; call "
+                    "fit(data) first")
+            y = np.asarray(self.data_.train, np.float32)
+            mask = np.asarray(self.data_.mask, np.float32)
+            for sid in range(y.shape[0]):
+                real = y[sid][mask[sid] > 0]
+                srv.store.seed(
+                    sid, real, row=srv.dispatcher.resolve_row(sid),
+                    category=int(np.argmax(self.cats_[sid]))
+                    if self.cats_ is not None else None)
+        return srv
 
     # -- persistence (shared Checkpointer) -----------------------------------
 

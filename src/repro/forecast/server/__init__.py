@@ -1,0 +1,31 @@
+"""Continuous-batching forecast server with online HW state ingestion.
+
+The production serving front end for fitted ES-RNN models:
+
+* :class:`~repro.forecast.server.engine.ForecastServer` -- bounded request
+  queue, deadline-driven dynamic bucket fill, batched dispatch through the
+  shared jit-cached bucket kernels, ``observe`` write ingestion, and the
+  idle fine-tune hook.
+* :class:`~repro.forecast.server.state.OnlineStateStore` -- host-side
+  rolled Holt-Winters state per tracked series (the ``hw_step`` recurrence
+  applied observation-by-observation).
+* :class:`~repro.forecast.server.finetune.IdleFineTuner` -- sparse-Adam
+  bursts on recently observed series during queue idle gaps.
+
+The synchronous batch-at-a-time wrapper remains
+:class:`repro.forecast.serving.BatchedForecastServer`.
+"""
+
+from repro.forecast.server.engine import (
+    ForecastFuture, ForecastServer, QueueFull, ServerConfig,
+)
+from repro.forecast.server.state import ObserveWrite, OnlineStateStore
+
+__all__ = [
+    "ForecastFuture",
+    "ForecastServer",
+    "ObserveWrite",
+    "OnlineStateStore",
+    "QueueFull",
+    "ServerConfig",
+]

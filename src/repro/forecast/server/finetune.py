@@ -1,0 +1,138 @@
+"""Idle-triggered incremental fine-tune: a few sparse-Adam steps on live series.
+
+The serving loop has natural gaps -- the request queue drains, the deadline
+timer has nothing to flush -- and the online store knows exactly which
+series have received new observations since the fit. This module spends
+those gaps productively: it assembles a small batch from the most recently
+observed *known* series (cold-start primer series have no fitted row to
+tune), runs a handful of training steps through the same loss and sparse
+per-series Adam the offline trainer uses
+(:func:`repro.train.engine.make_online_step_fn` +
+``adam_update_sparse``), and hands the updated params back to the
+dispatcher. Only the touched HW rows and the shared RNN move; the rest of
+the per-series table is untouched by construction of the sparse update.
+
+Discipline notes:
+
+* The fine-tune batch is padded to a fixed ``window`` (left-pad history +
+  mask, the section-8.1 convention); the jitted step compiles once per
+  distinct batch fill (at most ``batch`` shapes, and in steady state the
+  fill saturates at ``batch`` so bursts are cache hits).
+* The Adam state (``adam_init_sparse``) persists across bursts -- moments
+  warm up over the serving session instead of restarting cold each idle
+  gap, and the ``t_hw`` row clocks give per-row moment catch-up exactly
+  as in offline sparse training.
+* After a burst the caller must propagate the new table:
+  ``dispatcher.set_params`` (host snapshot rebuild) and
+  ``store.refresh(rows)`` (re-roll the affected series' online state under
+  the new smoothing parameters). :meth:`IdleFineTuner.run` returns the
+  touched rows so the server can do exactly that.
+"""
+
+from __future__ import annotations
+
+import logging
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.esrnn import ESRNNConfig
+from repro.train.engine import make_online_step_fn
+from repro.train.optimizer import AdamConfig, adam_init_sparse
+
+log = logging.getLogger("repro.forecast.server")
+
+
+class IdleFineTuner:
+    """Sparse-Adam burst trainer over the online store's freshest series.
+
+    ``steps`` training steps per :meth:`run` call, batching up to ``batch``
+    recently-observed known series on a fixed ``window`` (the largest
+    serving length bucket by default). ``lr`` drives the shared RNN;
+    ``hw_lr_ratio`` scales the per-series group relative to it (the
+    ``group_lr['per_series']`` multiplier), mirroring the offline trainer's
+    two-group schedule.
+    """
+
+    def __init__(
+        self,
+        config: ESRNNConfig,
+        params,
+        *,
+        steps: int = 2,
+        batch: int = 32,
+        window: int = 64,
+        lr: float = 1e-4,
+        hw_lr_ratio: float = 10.0,
+        min_history: Optional[int] = None,
+    ):
+        self.config = config
+        self.steps = int(steps)
+        self.batch = int(batch)
+        self.window = int(window)
+        # a training window must cover at least one full input+output span
+        floor = config.input_size + config.output_size
+        self.min_history = int(min_history if min_history is not None
+                               else min(floor, self.window))
+        self.cfg_adam = AdamConfig(
+            lr=lr, group_lr={"per_series": hw_lr_ratio},
+            schedule="constant")
+        self.opt_state = adam_init_sparse(params)
+        self._step = jax.jit(make_online_step_fn(config, self.cfg_adam))
+        self.last_loss: Optional[float] = None
+
+    # -- batch assembly ------------------------------------------------------
+
+    def build_batch(
+        self, store, n_known: int,
+    ) -> Optional[Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]]:
+        """(y, cats, mask, rows) over the freshest eligible series, or None.
+
+        Histories are clipped to the most recent ``window`` observations and
+        left-padded (first value, mask 0) to the fixed window, so the jitted
+        step sees one shape forever.
+        """
+        states = store.recently_observed(
+            rows_below=n_known, min_history=self.min_history)[:self.batch]
+        if not states:
+            return None
+        b = len(states)
+        y = np.empty((b, self.window), np.float32)
+        mask = np.zeros((b, self.window), np.float32)
+        cats = np.zeros((b, self.config.n_categories), np.float32)
+        rows = np.empty((b,), np.int32)
+        for i, st in enumerate(states):
+            h = st.history_array()[-self.window:]
+            y[i, :self.window - len(h)] = h[0]
+            y[i, self.window - len(h):] = h
+            mask[i, self.window - len(h):] = 1.0
+            if 0 <= st.category < self.config.n_categories:
+                cats[i, st.category] = 1.0
+            rows[i] = st.row
+        return y, cats, mask, rows
+
+    # -- the burst -----------------------------------------------------------
+
+    def run(self, store, params, n_known: int):
+        """One idle burst: returns ``(params, touched_rows)``.
+
+        ``touched_rows`` is empty when no eligible series exist (params are
+        returned unchanged); otherwise the caller owns propagating the new
+        params to the dispatcher snapshot and refreshing the store rows.
+        """
+        built = self.build_batch(store, n_known)
+        if built is None:
+            return params, []
+        y, cats, mask, rows = built
+        yj, cj, mj, rj = (jnp.asarray(y), jnp.asarray(cats),
+                          jnp.asarray(mask), jnp.asarray(rows))
+        loss = None
+        for _ in range(self.steps):
+            params, self.opt_state, loss = self._step(
+                params, self.opt_state, yj, cj, mj, rj)
+        self.last_loss = float(loss)
+        log.debug("idle fine-tune: %d series x %d steps, loss %.5f",
+                  len(rows), self.steps, self.last_loss)
+        return params, [int(r) for r in rows]

@@ -1,4 +1,4 @@
-"""Batched forecast serving: pad-to-bucket request batching + jit-cache reuse.
+"""Bucketed forecast dispatch: pad-to-bucket batching + jit-cache reuse.
 
 Mirrors the prefill/decode structure of ``repro.launch.serve``, adapted to
 forecasting: the "prefill" is the HW-smooth + dilated-LSTM pass over the
@@ -10,13 +10,30 @@ distinct (batch, length) -- fatal under heavy traffic. Instead:
 * **length buckets**: each request's history is snapped to the smallest
   bucket >= its length (left-padded with its first value, exactly the
   section-8.1 variable-length convention of ``data.pipeline``); longer
-  histories keep their most recent ``max(bucket)`` observations,
+  histories keep their most recent ``max(bucket)`` observations, counted
+  in ``ServeStats.truncated_series`` (the forecast then conditions on the
+  truncated tail -- a real, visible serving decision, not a silent clamp),
 * **batch buckets**: each group is padded up to the smallest batch bucket by
   repeating the last row (extra rows dropped on return),
 
 so the jit cache holds at most ``len(length_buckets) * len(batch_buckets)``
 entries and every subsequent request is a cache hit. ``ServeStats`` reports
-the hit/compile split to prove the reuse.
+the hit/compile split to prove the reuse, plus per-request latency
+percentiles and queue gauges for the continuous-batching front end.
+
+The module splits serving into two layers:
+
+* :class:`BucketDispatcher` -- the shared kernel-dispatch core: history
+  shaping, per-request HW-row resolution against a host-side table
+  snapshot, bucket-padded batched dispatch through
+  ``esrnn_forecast``/``esrnn_forecast_dp``. Both servers drive it.
+* :class:`BatchedForecastServer` -- the synchronous batch-at-a-time
+  compatibility surface (``forecast_batch``): group, chunk, dispatch,
+  return in order. The production front end is
+  :class:`repro.forecast.server.ForecastServer`, the continuous-batching
+  request loop with online ``observe`` state ingestion; this class remains
+  as the thin wrapper for scripted/batch workloads and the benchmark
+  baseline.
 
 Per-series HW parameters are looked up by ``series_id`` for series seen at
 fit time; unknown series fall back to a primer row (alpha = gamma = 0.5,
@@ -27,8 +44,8 @@ Sharding interaction: the fitted table may arrive sharded across a series
 mesh (a ``data_parallel`` fit). Request rows are arbitrary (any mix of
 known ids and cold-start primers), so resolving them directly against the
 *device* table would gather the whole sharded table through the mesh on
-every request. Instead the server snapshots the extended table (fitted rows
-+ primer row) to **host memory once** at construction; per-request
+every request. Instead the dispatcher snapshots the extended table (fitted
+rows + primer row) to **host memory once** at construction; per-request
 resolution is then a numpy row gather, and only the gathered ``(B, ...)``
 rows ever move to devices -- row-sharded over the serving ``mesh`` when one
 is passed, which runs the forecast itself under ``shard_map``
@@ -37,10 +54,12 @@ is passed, which runs the forecast itself under ``shard_map``
 
 from __future__ import annotations
 
+import collections
 import dataclasses
+import logging
 import time
 from functools import partial
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -48,39 +67,119 @@ import numpy as np
 
 from repro.core.esrnn import ESRNNConfig, esrnn_forecast, esrnn_init
 
+log = logging.getLogger("repro.forecast.serving")
+
+# latency samples kept for the percentile estimate (FIFO window; sustained
+# runs see the *recent* distribution, not a forever-average)
+_LATENCY_WINDOW = 65536
+
 
 @dataclasses.dataclass
 class ForecastRequest:
-    """One series to forecast: raw history + category + optional identity."""
+    """One series to forecast: raw history + category + optional identity.
 
-    y: np.ndarray                    # (T,) strictly positive history
+    ``y=None`` is allowed when ``series_id`` is set and the serving layer
+    tracks that series' history online (the continuous server's ``observe``
+    verb); the dispatcher itself requires a resolved history.
+    """
+
+    y: Optional[np.ndarray] = None   # (T,) strictly positive history
     category: int = 0
     series_id: Optional[int] = None  # row in the fitted per-series table
 
 
 @dataclasses.dataclass
 class ServeStats:
+    """Serving counters + latency/queue telemetry.
+
+    Counter fields are plain ints (single-writer: the dispatching thread);
+    ``latencies_s`` is a bounded FIFO window over per-request latencies
+    (submit -> result for the continuous server, batch wall-time per
+    request for the synchronous wrapper).
+    """
+
     requests: int = 0
     batches: int = 0
     compiles: int = 0
     cache_hits: int = 0
     padded_series: int = 0           # batch-padding rows added (wasted lanes)
+    truncated_series: int = 0        # histories longer than the largest
+                                     # length bucket (served on the tail)
+    observes: int = 0                # online observations absorbed
+    write_batches: int = 0           # batched write-absorption passes
+    finetunes: int = 0               # idle incremental fine-tune runs
+    queue_depth: int = 0             # gauge: pending requests at last pass
+    queue_peak: int = 0              # high-water mark of the request queue
     total_s: float = 0.0
+    latencies_s: Deque[float] = dataclasses.field(
+        default_factory=lambda: collections.deque(maxlen=_LATENCY_WINDOW),
+        repr=False)
 
     @property
     def requests_per_s(self) -> float:
-        return self.requests / self.total_s if self.total_s else 0.0
+        # guard: a zero-elapsed window (no timed work yet, or a clock with
+        # coarse resolution on a trivial batch) reports 0, not a ZeroDivision
+        return self.requests / self.total_s if self.total_s > 0 else 0.0
+
+    def record_latency(self, seconds: float) -> None:
+        self.latencies_s.append(seconds)
+
+    def note_queue_depth(self, depth: int) -> None:
+        self.queue_depth = depth
+        self.queue_peak = max(self.queue_peak, depth)
+
+    def reset(self) -> None:
+        """Zero every counter and drop the latency window.
+
+        Benchmarks call this after the jit-cache warm-up pass so that
+        compile-time latencies never pollute the measured distribution (the
+        jit cache itself survives -- only the telemetry resets).
+        """
+        self.requests = self.batches = self.compiles = self.cache_hits = 0
+        self.padded_series = self.truncated_series = 0
+        self.observes = self.write_batches = self.finetunes = 0
+        self.queue_depth = self.queue_peak = 0
+        self.total_s = 0.0
+        self.latencies_s.clear()
+
+    def latency_percentiles(self) -> Dict[str, float]:
+        """p50/p95/p99 of the recorded request latencies, in milliseconds.
+
+        NaN (not 0.0) when nothing has been recorded -- an empty window must
+        not read as a perfect latency.
+        """
+        if not self.latencies_s:
+            nan = float("nan")
+            return {"p50_ms": nan, "p95_ms": nan, "p99_ms": nan}
+        lat_ms = np.asarray(self.latencies_s, np.float64) * 1e3
+        p50, p95, p99 = np.percentile(lat_ms, [50.0, 95.0, 99.0])
+        return {"p50_ms": float(p50), "p95_ms": float(p95),
+                "p99_ms": float(p99)}
 
 
 def _pick_bucket(value: int, buckets: Sequence[int]) -> int:
+    """Smallest bucket >= value; the largest bucket when value exceeds all.
+
+    The overflow case means *truncation* for length bucketing (only the most
+    recent ``buckets[-1]`` observations are served) -- callers that route
+    histories through this must count it (``ServeStats.truncated_series``)
+    so the clamp is visible in telemetry rather than silent.
+    """
     for b in buckets:
         if value <= b:
             return b
     return buckets[-1]
 
 
-class BatchedForecastServer:
-    """Serve h-step forecasts for ragged request streams on a fixed jit cache."""
+class BucketDispatcher:
+    """The shared serving core: shape, resolve, and dispatch one bucket.
+
+    Owns the jit-cache discipline (length x batch bucket grid), the
+    host-side HW-table snapshot, and the sharded/single-device forecast
+    callable. Both the synchronous :class:`BatchedForecastServer` and the
+    continuous-batching ``repro.forecast.server.ForecastServer`` drive it;
+    neither re-implements any batching math.
+    """
 
     def __init__(
         self,
@@ -91,9 +190,9 @@ class BatchedForecastServer:
         batch_buckets: Tuple[int, ...] = (1, 4, 16, 64),
         max_batch: Optional[int] = None,
         mesh=None,
+        stats: Optional[ServeStats] = None,
     ):
         self.config = config
-        self.params = params
         self.mesh = mesh if mesh is not None and mesh.devices.size > 1 else None
         min_len = config.input_size + max(config.seasonality, 1)
         self.length_buckets = tuple(sorted(max(b, min_len) for b in length_buckets))
@@ -108,21 +207,10 @@ class BatchedForecastServer:
         # a chunk must always fit the largest batch bucket
         self.max_batch = min(max_batch or self.batch_buckets[-1],
                              self.batch_buckets[-1])
-        self.n_known = params["hw"].alpha_logit.shape[0]
-        # per-series table extended by one primer row for cold-start series
-        # (section 3.3 initialization); row n_known == "unknown series".
-        # Snapshotted to HOST numpy once: the fitted table may be sharded
-        # across a series mesh, and per-request row resolution (arbitrary
-        # known/primer mixes) against the device table would re-gather the
-        # whole sharded table per request. The numpy gather keeps the hot
-        # path device-free; only the gathered (B, ...) rows go to devices.
-        primer = esrnn_init(jax.random.PRNGKey(0), config, 1)
-        self._hw_table = jax.tree_util.tree_map(
-            lambda a, b: np.concatenate(
-                [np.asarray(a), np.asarray(b)], axis=0),
-            params["hw"], primer["hw"])
-        self.stats = ServeStats()
+        self.stats = stats if stats is not None else ServeStats()
         self._seen_shapes = set()
+        self._warned_truncation = False
+        self.set_params(params)
         if self.mesh is None:
             # esrnn_forecast is already jitted (cfg static); XLA caches per
             # (B, L) shape -- the bucket discipline keeps that cache small.
@@ -135,34 +223,78 @@ class BatchedForecastServer:
             self._forecast = jax.jit(partial(
                 esrnn_forecast_dp, self.config, mesh=self.mesh))
 
+    # -- params / host table -------------------------------------------------
+
+    def set_params(self, params) -> None:
+        """(Re)install params and rebuild the host-side HW-table snapshot.
+
+        Called at construction and again whenever the serving params change
+        in place (the idle fine-tune hook) -- the snapshot must never go
+        stale relative to the table the batched forecast closes over.
+        """
+        self.params = params
+        self.n_known = params["hw"].alpha_logit.shape[0]
+        # per-series table extended by one primer row for cold-start series
+        # (section 3.3 initialization); row n_known == "unknown series".
+        # Snapshotted to HOST numpy once: the fitted table may be sharded
+        # across a series mesh, and per-request row resolution (arbitrary
+        # known/primer mixes) against the device table would re-gather the
+        # whole sharded table per request. The numpy gather keeps the hot
+        # path device-free; only the gathered (B, ...) rows go to devices.
+        primer = esrnn_init(jax.random.PRNGKey(0), self.config, 1)
+        self._hw_table = jax.tree_util.tree_map(
+            lambda a, b: np.concatenate(
+                [np.asarray(a), np.asarray(b)], axis=0),
+            params["hw"], primer["hw"])
+
     # -- shaping -------------------------------------------------------------
 
-    def _shape_history(self, y: np.ndarray, bucket: int) -> np.ndarray:
+    def pick_length_bucket(self, n_obs: int) -> int:
+        """Length bucket for a history of ``n_obs``, counting truncation."""
+        b = _pick_bucket(n_obs, self.length_buckets)
+        if n_obs > self.length_buckets[-1]:
+            self.stats.truncated_series += 1
+            if not self._warned_truncation:
+                self._warned_truncation = True
+                log.warning(
+                    "history of %d observations exceeds the largest length "
+                    "bucket (%d); serving on the most recent %d (counted in "
+                    "ServeStats.truncated_series; further truncations are "
+                    "counted silently)", n_obs, b, b)
+        return b
+
+    def shape_history(self, y: np.ndarray, bucket: int) -> np.ndarray:
         y = np.asarray(y, np.float32)
         if len(y) >= bucket:
             return y[-bucket:]
         pad = np.full(bucket - len(y), y[0], np.float32)
         return np.concatenate([pad, y])
 
-    def _hw_rows(self, requests: Sequence[ForecastRequest]):
+    def resolve_row(self, series_id: Optional[int]) -> int:
+        """Extended-table row for a request: fitted row or the primer row."""
+        if series_id is not None and 0 <= series_id < self.n_known:
+            return int(series_id)
+        return self.n_known
+
+    def hw_rows(self, requests: Sequence[ForecastRequest]):
         """Per-request HW rows: fitted rows for known ids, primer otherwise.
 
         One vectorized gather from the extended table (fitted rows + primer
         row) -- no per-request device ops on the serving hot path.
         """
-        idx = np.asarray([
-            r.series_id
-            if r.series_id is not None and 0 <= r.series_id < self.n_known
-            else self.n_known
-            for r in requests])
+        idx = np.asarray([self.resolve_row(r.series_id) for r in requests])
         # numpy gather from the host snapshot: no device op, and in
         # particular no cross-device gather of a mesh-sharded fitted table
         return jax.tree_util.tree_map(lambda a: a[idx], self._hw_table)
 
-    # -- serving -------------------------------------------------------------
+    # -- dispatch ------------------------------------------------------------
 
-    def _run_bucket(self, requests: List[ForecastRequest], bucket: int):
-        """Forecast one length-bucket group, padded to a batch bucket."""
+    def run_bucket(self, requests: List[ForecastRequest], bucket: int):
+        """Forecast one length-bucket group, padded to a batch bucket.
+
+        Every request must carry a resolved history (``y`` not None) -- the
+        online-store resolution happens upstream in the continuous server.
+        """
         n = len(requests)
         # with a mesh, the buckets were snapped to the device multiple at
         # construction, so bb always divides the mesh evenly
@@ -170,7 +302,7 @@ class BatchedForecastServer:
         padded = requests + [requests[-1]] * (bb - n)
         self.stats.padded_series += bb - n
 
-        y = np.stack([self._shape_history(r.y, bucket) for r in padded])
+        y = np.stack([self.shape_history(r.y, bucket) for r in padded])
         cats = np.zeros((bb, self.config.n_categories), np.float32)
         for row, r in enumerate(padded):
             # out-of-range category -> all-zero one-hot (cold start, like an
@@ -178,7 +310,7 @@ class BatchedForecastServer:
             if 0 <= r.category < self.config.n_categories:
                 cats[row, r.category] = 1.0
 
-        hw = self._hw_rows(padded)
+        hw = self.hw_rows(padded)
         params = dict(self.params, hw=hw)
 
         shape = (bb, bucket)
@@ -189,27 +321,112 @@ class BatchedForecastServer:
             self.stats.compiles += 1
         fc = self._forecast(params, jnp.asarray(y), jnp.asarray(cats))
         self.stats.batches += 1
-        return np.asarray(fc[:n])
+        # strip the batch padding on the HOST copy: fc[:n] on the device
+        # array is a jitted slice op that XLA compiles once per distinct
+        # partial fill n -- an unbounded compile family (~tens of ms each)
+        # on the latency path. Transferring the padded rows is a few KB.
+        return np.asarray(fc)[:n]
+
+
+class BatchedForecastServer:
+    """Synchronous batch-at-a-time serving over the shared dispatcher.
+
+    The thin compatibility wrapper: callers hand a whole request batch and
+    block until every forecast is back. The continuous-batching production
+    front end (bounded queue, deadline-driven bucket fill, online
+    ``observe`` ingestion) is :class:`repro.forecast.server.ForecastServer`,
+    which drives the exact same :class:`BucketDispatcher`.
+    """
+
+    def __init__(
+        self,
+        config: ESRNNConfig,
+        params,
+        *,
+        length_buckets: Tuple[int, ...] = (32, 64, 128, 256),
+        batch_buckets: Tuple[int, ...] = (1, 4, 16, 64),
+        max_batch: Optional[int] = None,
+        mesh=None,
+    ):
+        self._dispatch = BucketDispatcher(
+            config, params, length_buckets=length_buckets,
+            batch_buckets=batch_buckets, max_batch=max_batch, mesh=mesh)
+
+    # the dispatcher owns the state; expose the historical surface
+    @property
+    def config(self):
+        return self._dispatch.config
+
+    @property
+    def params(self):
+        return self._dispatch.params
+
+    @property
+    def mesh(self):
+        return self._dispatch.mesh
+
+    @property
+    def stats(self) -> ServeStats:
+        return self._dispatch.stats
+
+    @property
+    def length_buckets(self):
+        return self._dispatch.length_buckets
+
+    @property
+    def batch_buckets(self):
+        return self._dispatch.batch_buckets
+
+    @property
+    def max_batch(self):
+        return self._dispatch.max_batch
+
+    @property
+    def n_known(self):
+        return self._dispatch.n_known
+
+    @property
+    def _hw_table(self):
+        return self._dispatch._hw_table
+
+    def _hw_rows(self, requests):
+        return self._dispatch.hw_rows(requests)
+
+    def _shape_history(self, y, bucket):
+        return self._dispatch.shape_history(y, bucket)
 
     def forecast_batch(
         self, requests: Sequence[ForecastRequest]
     ) -> List[np.ndarray]:
         """Serve a batch of ragged requests; returns (H,) per request, in order."""
+        d = self._dispatch
         t0 = time.perf_counter()
         groups: Dict[int, List[int]] = {}
         for i, r in enumerate(requests):
+            if r.y is None:
+                raise ValueError(
+                    "ForecastRequest.y is required for batch serving; "
+                    "history-less series_id requests need the online "
+                    "ForecastServer (repro.forecast.server)")
             groups.setdefault(
-                _pick_bucket(len(r.y), self.length_buckets), []).append(i)
+                d.pick_length_bucket(len(r.y)), []).append(i)
 
         out: List[Optional[np.ndarray]] = [None] * len(requests)
         for bucket, idxs in sorted(groups.items()):
-            for lo in range(0, len(idxs), self.max_batch):
-                chunk = idxs[lo:lo + self.max_batch]
-                fc = self._run_bucket([requests[i] for i in chunk], bucket)
+            for lo in range(0, len(idxs), d.max_batch):
+                chunk = idxs[lo:lo + d.max_batch]
+                fc = d.run_bucket([requests[i] for i in chunk], bucket)
                 for j, i in enumerate(chunk):
                     out[i] = fc[j]
-        self.stats.requests += len(requests)
-        self.stats.total_s += time.perf_counter() - t0
+        dt = time.perf_counter() - t0
+        d.stats.requests += len(requests)
+        d.stats.total_s += dt
+        if requests:
+            # batch wall-time attributed to each request: the wrapper has no
+            # per-request arrival times (the continuous server does)
+            per_req = dt / len(requests)
+            for _ in requests:
+                d.stats.record_latency(per_req)
         return out  # type: ignore[return-value]
 
 
@@ -217,7 +434,13 @@ def synthetic_request_stream(
     config: ESRNNConfig, n_requests: int, *, n_known: int = 0, seed: int = 0,
     len_range: Tuple[int, int] = (20, 200),
 ) -> List[ForecastRequest]:
-    """Ragged request stream for smoke/benchmark runs (lognormal level walks)."""
+    """Ragged request stream for smoke/benchmark runs (lognormal level walks).
+
+    Deterministic in ``seed``: the same (config, n_requests, n_known, seed,
+    len_range) produces bit-identical histories, categories and series-id
+    assignments -- benchmark baselines and continuous-batching runs replay
+    the exact same offered load.
+    """
     rng = np.random.default_rng(seed)
     m = max(config.seasonality, 1)
     reqs = []

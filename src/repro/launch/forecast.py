@@ -5,13 +5,19 @@
     PYTHONPATH=src python -m repro.launch.forecast eval     --spec esrnn-quarterly --smoke
     PYTHONPATH=src python -m repro.launch.forecast backtest --dir /tmp/fq --origins 72,80
     PYTHONPATH=src python -m repro.launch.forecast serve    --smoke --requests 64
+    echo '{"op":"observe","series_id":0,"y":105.2}' | \\
+        PYTHONPATH=src python -m repro.launch.forecast observe --smoke
 
 ``fit`` trains (spec-driven synthetic M4 by default) and optionally saves
 the estimator; ``predict``/``eval``/``backtest`` run on a saved estimator
-(``--dir``) or fit a fresh one; ``serve`` runs the batched pad-to-bucket
-forecast server over a synthetic ragged request stream and reports
-throughput + jit-cache reuse, mirroring the prefill/decode serving loop of
-``repro.launch.serve``.
+(``--dir``) or fit a fresh one; ``serve`` runs the continuous-batching
+forecast server (bounded queue -> deadline-driven bucket fill -> jit-cached
+batched dispatch; ``--engine batch`` selects the synchronous batch-at-a-
+time wrapper) over a synthetic ragged request stream and reports latency
+percentiles, throughput and jit-cache reuse, mirroring the prefill/decode
+serving loop of ``repro.launch.serve``; ``observe`` drives the same server
+as a scripted JSONL op loop over stdin (online ``observe`` ingestion +
+read-your-writes forecasts + stats).
 
 ``backtest`` is the rolling-origin protocol: forecast at each ``--origins``
 observation count as if the rest of the series were unseen, scored
@@ -164,25 +170,116 @@ def cmd_backtest(args):
 
 
 def cmd_serve(args):
+    import time
+
     f = _fitted(args)
-    srv = BatchedForecastServer(
-        f.config, f.params_,
+    buckets = dict(
         length_buckets=tuple(int(b) for b in args.length_buckets.split(",")),
         batch_buckets=tuple(int(b) for b in args.batch_buckets.split(",")),
-        max_batch=args.max_batch,
-        mesh=_inference_mesh(args),
     )
-    rng_seeds = range(args.waves)
-    for w in rng_seeds:
-        reqs = synthetic_request_stream(
-            f.config, args.requests, n_known=f.n_series_ or 0, seed=w)
-        out = srv.forecast_batch(reqs)
-        assert all(np.isfinite(o).all() for o in out)
+    mesh = _inference_mesh(args)
+    if args.engine == "batch":
+        srv = BatchedForecastServer(
+            f.config, f.params_, max_batch=args.max_batch, mesh=mesh,
+            **buckets)
+        t0 = time.perf_counter()
+        for w in range(args.waves):
+            reqs = synthetic_request_stream(
+                f.config, args.requests, n_known=f.n_series_ or 0, seed=w)
+            out = srv.forecast_batch(reqs)
+            assert all(np.isfinite(o).all() for o in out)
+        wall = time.perf_counter() - t0
+    else:
+        from repro.forecast.server import ServerConfig
+
+        srv = f.serve(
+            server_config=ServerConfig(
+                max_queue=args.queue_size, max_wait_ms=args.max_wait_ms,
+                max_batch=args.max_batch),
+            mesh=mesh, **buckets)
+        t0 = time.perf_counter()
+        with srv:
+            for w in range(args.waves):
+                reqs = synthetic_request_stream(
+                    f.config, args.requests, n_known=f.n_series_ or 0, seed=w)
+                futs = [srv.submit(r) for r in reqs]
+                for fut in futs:
+                    assert np.isfinite(fut.result(timeout=120)).all()
+        wall = time.perf_counter() - t0
     s = srv.stats
-    print(f"served {s.requests} requests in {s.batches} batches over "
-          f"{args.waves} waves: {s.requests_per_s:.0f} req/s")
+    pct = s.latency_percentiles()
+    print(f"[{args.engine}] served {s.requests} requests in {s.batches} "
+          f"batches over {args.waves} waves: {s.requests / wall:.0f} "
+          f"series/s wall ({s.requests_per_s:.0f} req/s dispatch)")
+    print(f"latency p50 {pct['p50_ms']:.1f} ms  p95 {pct['p95_ms']:.1f} ms  "
+          f"p99 {pct['p99_ms']:.1f} ms; queue peak {s.queue_peak}")
     print(f"jit cache: {s.compiles} compiles, {s.cache_hits} bucket hits "
-          f"({s.padded_series} padded lanes)")
+          f"({s.padded_series} padded lanes, {s.truncated_series} truncated)")
+    return 0
+
+
+def cmd_observe(args):
+    """JSONL op loop over a continuous server (scripted round-trips).
+
+    stdin lines:  {"op": "observe", "series_id": 3, "y": 105.2}
+                  {"op": "forecast", "series_id": 3}          (online history)
+                  {"op": "forecast", "y": [..], "series_id": 3}  (explicit)
+                  {"op": "stats"}
+    One JSON result line per op; forecasts drain synchronously, so every
+    forecast reads all earlier observes (read-your-writes, no thread).
+    """
+    import json
+    import sys
+
+    from repro.forecast import ForecastRequest
+    from repro.forecast.server import ServerConfig
+
+    f = _fitted(args)
+    srv = f.serve(
+        server_config=ServerConfig(
+            max_queue=args.queue_size, max_wait_ms=args.max_wait_ms,
+            finetune_steps=args.finetune_steps),
+        mesh=_inference_mesh(args), seed_histories=args.seed_histories)
+    for line in sys.stdin:
+        line = line.strip()
+        if not line:
+            continue
+        try:
+            op = json.loads(line)
+            kind = op["op"]
+            if kind == "observe":
+                srv.observe(int(op["series_id"]), float(op["y"]),
+                            op.get("category"))
+                out = {"op": "observe", "series_id": op["series_id"],
+                       "ok": True}
+            elif kind == "forecast":
+                y = (np.asarray(op["y"], np.float32)
+                     if op.get("y") is not None else None)
+                fut = srv.submit(ForecastRequest(
+                    y=y, category=int(op.get("category", 0)),
+                    series_id=(int(op["series_id"])
+                               if op.get("series_id") is not None else None)))
+                srv.drain()
+                out = {"op": "forecast",
+                       "series_id": op.get("series_id"),
+                       "forecast": [float(v) for v in fut.result(timeout=120)]}
+            elif kind == "stats":
+                s = srv.stats
+                out = {"op": "stats", "requests": s.requests,
+                       "observes": s.observes, "batches": s.batches,
+                       "write_batches": s.write_batches,
+                       "finetunes": s.finetunes, "compiles": s.compiles,
+                       "cache_hits": s.cache_hits,
+                       "truncated_series": s.truncated_series,
+                       "queue_peak": s.queue_peak,
+                       "tracked_series": len(srv.store),
+                       **s.latency_percentiles()}
+            else:
+                out = {"ok": False, "error": f"unknown op {kind!r}"}
+        except Exception as err:   # one bad line must not kill the loop
+            out = {"ok": False, "error": f"{type(err).__name__}: {err}"}
+        print(json.dumps(out), flush=True)
+    srv.drain()
     return 0
 
 
@@ -240,7 +337,7 @@ def main(argv=None):
                            "train and end of validation")
     p_bt.set_defaults(fn=cmd_backtest)
 
-    p_srv = sub.add_parser("serve", help="batched pad-to-bucket forecast serving")
+    p_srv = sub.add_parser("serve", help="continuous-batching forecast serving")
     common(p_srv)
     p_srv.add_argument("--dir", help="load a saved estimator")
     p_srv.add_argument("--requests", type=int, default=64, help="per wave")
@@ -249,7 +346,31 @@ def main(argv=None):
     p_srv.add_argument("--length-buckets", default="32,64,128,256")
     p_srv.add_argument("--batch-buckets", default="1,4,16,64")
     p_srv.add_argument("--max-batch", type=int, default=64)
+    p_srv.add_argument("--engine", choices=["continuous", "batch"],
+                       default="continuous",
+                       help="continuous: bounded queue + deadline-driven "
+                            "bucket fill (the serving engine); batch: the "
+                            "synchronous batch-at-a-time wrapper")
+    p_srv.add_argument("--queue-size", type=int, default=1024,
+                       help="bounded request queue (submit backpressure)")
+    p_srv.add_argument("--max-wait-ms", type=float, default=5.0,
+                       help="max hold before a partial bucket dispatches")
     p_srv.set_defaults(fn=cmd_serve)
+
+    p_obs = sub.add_parser(
+        "observe",
+        help="JSONL op loop: online observe/forecast/stats over stdin")
+    common(p_obs)
+    p_obs.add_argument("--dir", help="load a saved estimator")
+    p_obs.add_argument("--queue-size", type=int, default=1024)
+    p_obs.add_argument("--max-wait-ms", type=float, default=5.0)
+    p_obs.add_argument("--finetune-steps", type=int, default=0,
+                       help="idle fine-tune steps per drained busy period "
+                            "(0 = off)")
+    p_obs.add_argument("--seed-histories", action="store_true",
+                       help="pre-register every fitted series' training "
+                            "history in the online store")
+    p_obs.set_defaults(fn=cmd_observe)
 
     args = ap.parse_args(argv)
     logging.basicConfig(level=logging.INFO)

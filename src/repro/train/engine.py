@@ -112,6 +112,54 @@ def make_step_fn(
     return step
 
 
+def make_online_step_fn(
+    mcfg: ESRNNConfig,
+    cfg_adam: AdamConfig,
+    *,
+    sparse: bool = True,
+) -> StepFn:
+    """Training step over an *ad-hoc* batch: the serving fine-tune hook.
+
+    Unlike :func:`make_step_fn`, which closes over the full training tensors
+    and receives only row indices, here the batch arrives as arguments --
+    the forecast server builds ``(y, cats, mask)`` from its online store's
+    recently-observed history tails at call time, and ``rows`` names the
+    per-series HW-table rows those batch rows correspond to. With
+    ``sparse=True`` (the intended serving shape) gradients are taken w.r.t.
+    the gathered rows and :func:`~repro.train.optimizer.adam_update_sparse`
+    touches exactly those rows with closed-form moment catch-up -- a few
+    incremental steps on live series never pay for the full table. The
+    returned step is pure; the caller jits it (shapes vary with the
+    fine-tune batch, so the cache discipline is the caller's).
+    """
+
+    def step(params, opt_state, y, cats, mask, rows):
+        if sparse:
+            hw_rows, shared = partition_series(params, rows)
+
+            def batch_loss(hw_b, sh):
+                return esrnn_loss_fn(
+                    mcfg, combine_series(hw_b, sh), y, cats, mask)
+
+            loss, (g_hw, g_sh) = jax.value_and_grad(
+                batch_loss, argnums=(0, 1))(hw_rows, shared)
+            grads = combine_series(g_hw, g_sh)
+            params, opt_state = adam_update_sparse(
+                grads, opt_state, params, cfg_adam, idx=rows,
+                group_fn=esrnn_group_fn)
+        else:
+            def batch_loss(p):
+                return esrnn_loss_fn(
+                    mcfg, gather_series(p, rows), y, cats, mask)
+
+            loss, grads = jax.value_and_grad(batch_loss)(params)
+            params, opt_state = adam_update(
+                grads, opt_state, params, cfg_adam, group_fn=esrnn_group_fn)
+        return params, opt_state, loss
+
+    return step
+
+
 def make_perstep_fn(step_fn: StepFn, *, donate: bool = True):
     """The fallback per-step engine: one donated jit per call.
 

@@ -24,7 +24,8 @@ from repro.core.drnn import drnn_apply
 from repro.core.esrnn import (
     esrnn_forecast, esrnn_forecast_at, esrnn_init, esrnn_loss, make_config,
 )
-from repro.core.holt_winters import hw_smooth
+from repro.core.forward import hw_step
+from repro.core.holt_winters import hw_init_params, hw_smooth
 
 
 # ---------------------------------------------------------------------------
@@ -235,3 +236,34 @@ def test_forecast_at_rejects_bad_origins(batch):
         esrnn_forecast_at(cfg, params, y, cats, (cfg.input_size - 1,))
     with pytest.raises(ValueError, match="origin"):
         esrnn_forecast_at(cfg, params, y, cats, (y.shape[1] + 1,))
+
+
+def test_hw_step_composes_to_the_scan():
+    """T host-side hw_step applications == one hw_smooth pass, bit-exact.
+
+    This is the forecast server's online-observe rule: rolling state one
+    observation at a time in numpy f32 must agree with the device scan,
+    because both call the SAME hw_step body in the same expression order.
+    """
+    rng = np.random.default_rng(4)
+    n, t, m = 3, 40, 4
+    y = np.abs(rng.lognormal(2, 0.3, (n, t))).astype(np.float32) + 1
+    p = hw_init_params(n, m)
+    import dataclasses as _dc
+    p = _dc.replace(
+        p,
+        alpha_logit=jnp.asarray(rng.normal(0, 1.5, n), jnp.float32),
+        gamma_logit=jnp.asarray(rng.normal(0, 1.5, n), jnp.float32),
+        init_seas_logit=jnp.asarray(rng.normal(0, 0.2, (n, m)), jnp.float32))
+    levels, seas = hw_smooth(jnp.asarray(y), p, seasonality=m)
+
+    c = {k: np.asarray(v, np.float32) for k, v in p.constrained().items()}
+    level = y[:, 0] / c["init_seas"][:, 0]
+    ring = c["init_seas"].copy()
+    for step_t in range(t):
+        level, s_new, _ = hw_step(
+            y[:, step_t], level, ring[:, 0], np.float32(1.0),
+            c["alpha"], c["gamma"], seasonal=True, dual=False)
+        ring = np.concatenate([ring[:, 1:], s_new[:, None]], axis=1)
+    np.testing.assert_allclose(level, np.asarray(levels)[:, -1], rtol=1e-6)
+    np.testing.assert_allclose(ring, np.asarray(seas)[:, t:], rtol=1e-6)

@@ -1,0 +1,297 @@
+"""Continuous-batching server tests: online HW state, queue, fine-tune.
+
+The load-bearing claim is the online-state exactness: after ``observe``
+rolls a series one step via ``hw_step``, the stored (level, rings) must
+match a from-scratch ``hw_smooth`` pass over the extended history -- per
+frequency, including the hourly dual-seasonality ring -- and a forecast
+conditioned on the online history must equal a fresh forecast given the
+extended series explicitly.
+"""
+
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.esrnn import esrnn_forecast, esrnn_init, make_config
+from repro.core.holt_winters import hw_smooth
+from repro.forecast import (
+    BatchedForecastServer, ESRNNForecaster, ForecastRequest, get_smoke_spec,
+    synthetic_request_stream,
+)
+from repro.forecast.server import (
+    ForecastServer, ObserveWrite, OnlineStateStore, QueueFull, ServerConfig,
+)
+
+
+def _series(t, seed=0, m=4):
+    rng = np.random.default_rng(seed)
+    seas = np.tile(np.exp(rng.normal(0, 0.1, m)), t // m + 1)[:t]
+    y = 100.0 * np.exp(rng.normal(0, 0.01, t).cumsum()) * seas
+    return np.maximum(y, 1e-3).astype(np.float32)
+
+
+def _store_for(cfg, params, n_known, cap=4096):
+    return OnlineStateStore(
+        cfg, lambda: params["hw"], n_known, history_cap=cap)
+
+
+# ---------------------------------------------------------------------------
+# online HW state exactness (the tentpole invariant)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("freq,t_len", [
+    ("yearly", 41), ("quarterly", 61), ("monthly", 77), ("hourly", 401),
+])
+def test_rolled_state_matches_from_scratch_scan(freq, t_len):
+    """observe-by-observe rolling == one hw_smooth pass over full history."""
+    cfg = make_config(freq, hidden_size=8, dilations=((1,),))
+    params = esrnn_init(jax.random.PRNGKey(0), cfg, 3)
+    store = _store_for(cfg, params, 3)
+    y = _series(t_len, seed=3, m=max(cfg.seasonality, 1))
+
+    st = store.seed(1, y, row=1, category=0)
+
+    row = jax.tree_util.tree_map(lambda a: a[1:2], params["hw"])
+    levels, seas = hw_smooth(
+        jnp.asarray(y)[None], row,
+        seasonality=cfg.seasonality, seasonality2=cfg.seasonality2)
+    np.testing.assert_allclose(
+        np.float32(st.level), np.asarray(levels)[0, -1], rtol=1e-6)
+    m = max(cfg.seasonality, 1)
+    np.testing.assert_allclose(
+        st.future_seasonal(m), np.asarray(seas)[0, t_len:], rtol=1e-6)
+    assert st.t == t_len
+
+
+def test_rolled_state_exact_beyond_history_cap():
+    """Truncating the stored tail never degrades the rolled state."""
+    cfg = make_config("quarterly", hidden_size=8, dilations=((1,),))
+    params = esrnn_init(jax.random.PRNGKey(1), cfg, 2)
+    store = _store_for(cfg, params, 2, cap=16)
+    y = _series(90, seed=7)
+    st = store.seed(0, y, row=0)
+    assert st.truncated and len(st.history) == 16
+
+    levels, seas = hw_smooth(
+        jnp.asarray(y)[None],
+        jax.tree_util.tree_map(lambda a: a[:1], params["hw"]),
+        seasonality=cfg.seasonality, seasonality2=cfg.seasonality2)
+    np.testing.assert_allclose(
+        np.float32(st.level), np.asarray(levels)[0, -1], rtol=1e-6)
+    np.testing.assert_allclose(
+        st.future_seasonal(cfg.seasonality), np.asarray(seas)[0, 90:],
+        rtol=1e-6)
+
+
+def test_vectorized_absorb_equals_scalar_rolls():
+    """The batched single-write fast path is the same f32 arithmetic."""
+    cfg = make_config("quarterly", hidden_size=8, dilations=((1,),))
+    params = esrnn_init(jax.random.PRNGKey(2), cfg, 8)
+    a = _store_for(cfg, params, 8)
+    b = _store_for(cfg, params, 8)
+    for sid in range(6):
+        h = _series(30, seed=sid)
+        a.seed(sid, h, row=sid)
+        b.seed(sid, h, row=sid)
+
+    # one new value per series: store a absorbs them as one vectorized
+    # batch, store b rolls them one at a time
+    writes = [ObserveWrite(sid, 100.0 + sid) for sid in range(6)]
+    a.absorb(writes, resolve_row=lambda sid: int(sid))
+    for w in writes:
+        b.absorb([w], resolve_row=lambda sid: int(sid))
+
+    for sid in range(6):
+        sa, sb = a.get(sid), b.get(sid)
+        assert np.float32(sa.level) == np.float32(sb.level)
+        np.testing.assert_array_equal(sa.s_ring, sb.s_ring)
+        np.testing.assert_array_equal(sa.s2_ring, sb.s2_ring)
+        assert sa.history == sb.history
+
+
+# ---------------------------------------------------------------------------
+# server-level behaviour (fitted smoke estimator)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def fitted():
+    f = ESRNNForecaster(get_smoke_spec("esrnn-quarterly", data_seed=11))
+    f.fit(n_steps=3)
+    return f
+
+
+def test_post_observe_forecast_equals_fresh_predict(fitted):
+    """A y=None forecast after observe() == the same request with the
+    extended history passed explicitly -- and, when the extended history
+    lands exactly on a length bucket, == the raw jitted forecast."""
+    f = fitted
+    srv = f.serve(seed_histories=True)
+    sid = 0
+    hist = srv.store.history(sid)
+    new_val = float(hist[-1] * 1.02)
+    srv.observe(sid, new_val)
+
+    fut_online = srv.submit(ForecastRequest(series_id=sid))
+    srv.drain()
+    fc_online = fut_online.result(timeout=30)
+
+    ext = np.concatenate([hist, [new_val]]).astype(np.float32)
+    fut_explicit = srv.submit(ForecastRequest(y=ext, series_id=sid))
+    srv.drain()
+    np.testing.assert_array_equal(fc_online, fut_explicit.result(timeout=30))
+
+    # exact-bucket-length history: the serving answer IS the raw forecast
+    bucket = srv.dispatcher.length_buckets[0]
+    srv2 = f.serve()
+    srv2.store.seed(sid, ext[-bucket:], row=sid, category=0)
+    fut = srv2.submit(ForecastRequest(series_id=sid))
+    srv2.drain()
+    row = jax.tree_util.tree_map(lambda a: a[sid:sid + 1], f.params_["hw"])
+    cats = jnp.zeros((1, f.config.n_categories), jnp.float32)
+    cats = cats.at[0, 0].set(1.0)
+    raw = esrnn_forecast(
+        f.config, dict(f.params_, hw=row),
+        jnp.asarray(ext[-bucket:])[None], cats)
+    np.testing.assert_array_equal(fut.result(timeout=30), np.asarray(raw)[0])
+
+
+def test_cold_start_unknown_series_after_observe(fitted):
+    """An observed unknown id resolves to the primer row, not a fitted one,
+    and serves history-less forecasts once it has observations."""
+    f = fitted
+    srv = f.serve()
+    unknown = f.n_series_ + 500
+
+    # before any observe: no history -> the future carries the error
+    fut = srv.submit(ForecastRequest(series_id=unknown))
+    srv.drain()
+    with pytest.raises(ValueError, match="no history"):
+        fut.result(timeout=30)
+
+    for k in range(20):
+        srv.observe(unknown, 50.0 + k)
+    fut = srv.submit(ForecastRequest(series_id=unknown))
+    srv.drain()
+    fc = fut.result(timeout=30)
+    assert np.isfinite(fc).all() and fc.shape == (f.config.output_size,)
+
+    st = srv.store.get(unknown)
+    assert st.row == srv.dispatcher.n_known        # primer, no collision
+    assert srv.store.get(unknown).t == 20
+    assert srv.stats.observes == 20
+
+    # a known id resolves to its own fitted row
+    srv.observe(0, 60.0)
+    srv.drain()
+    assert srv.store.get(0).row == 0
+
+
+def test_queue_bound_backpressure(fitted):
+    f = fitted
+    srv = f.serve(server_config=ServerConfig(max_queue=2))
+    y = _series(40)
+    srv.submit(ForecastRequest(y=y))
+    srv.submit(ForecastRequest(y=y))
+    with pytest.raises(QueueFull):
+        srv.submit(ForecastRequest(y=y), timeout=0.01)
+    srv.drain()
+    fut = srv.submit(ForecastRequest(y=y))   # space again after the drain
+    srv.drain()
+    assert np.isfinite(fut.result(timeout=30)).all()
+    assert srv.stats.queue_peak == 2
+
+
+def test_threaded_deadline_dispatch_and_latency_stats(fitted):
+    """A partial bucket dispatches once max_wait_ms expires (no force)."""
+    f = fitted
+    srv = f.serve(server_config=ServerConfig(max_wait_ms=5.0))
+    with srv:
+        futs = [srv.submit(ForecastRequest(y=_series(40, seed=s)))
+                for s in range(3)]
+        outs = [fut.result(timeout=60) for fut in futs]
+    assert all(np.isfinite(o).all() for o in outs)
+    s = srv.stats
+    assert s.requests == 3 and s.batches >= 1
+    assert len(s.latencies_s) == 3
+    pct = s.latency_percentiles()
+    assert np.isfinite(pct["p50_ms"]) and pct["p99_ms"] >= pct["p50_ms"] > 0
+
+
+def test_idle_finetune_runs_and_updates_params(fitted):
+    f = fitted
+    srv = f.serve(
+        server_config=ServerConfig(finetune_steps=1, finetune_batch=4),
+        seed_histories=True)
+    alpha_before = srv.dispatcher._hw_table.alpha_logit.copy()
+    for sid in range(4):
+        srv.observe(sid, float(srv.store.history(sid)[-1]))
+    srv.drain()   # absorb -> queue empty -> idle hook fires
+    assert srv.stats.finetunes == 1
+    assert not np.array_equal(
+        srv.dispatcher._hw_table.alpha_logit, alpha_before)
+    # tuned rows got refreshed: state still equals a pass over the stored
+    # tail under the NEW parameters
+    st = srv.store.get(0)
+    hist = st.history_array()
+    row = jax.tree_util.tree_map(
+        lambda a: np.asarray(a)[0:1], srv.dispatcher._hw_table)
+    levels, _ = hw_smooth(
+        jnp.asarray(hist)[None], row,
+        seasonality=f.config.seasonality,
+        seasonality2=f.config.seasonality2)
+    # rtol 5e-6, not 1e-6: the seeded histories are full-length smoke
+    # series, and XLA's FMA contraction in the device scan drifts a few
+    # ulps from the host f32 roll over ~100 steps
+    np.testing.assert_allclose(
+        np.float32(st.level), np.asarray(levels)[0, -1], rtol=5e-6)
+    # serving still healthy after the swap
+    fut = srv.submit(ForecastRequest(series_id=0))
+    srv.drain()
+    assert np.isfinite(fut.result(timeout=30)).all()
+
+
+def test_finetune_skips_when_nothing_observed(fitted):
+    f = fitted
+    srv = f.serve(server_config=ServerConfig(finetune_steps=1))
+    fut = srv.submit(ForecastRequest(y=_series(40)))
+    srv.drain()
+    fut.result(timeout=30)
+    # requests ran but no series has online history -> no eligible batch
+    assert srv.stats.finetunes == 0
+
+
+# ---------------------------------------------------------------------------
+# satellites: stream determinism, truncation counter
+# ---------------------------------------------------------------------------
+
+
+def test_synthetic_request_stream_deterministic():
+    cfg = get_smoke_spec("esrnn-quarterly").model
+    a = synthetic_request_stream(cfg, 32, n_known=10, seed=9)
+    b = synthetic_request_stream(cfg, 32, n_known=10, seed=9)
+    c = synthetic_request_stream(cfg, 32, n_known=10, seed=10)
+    for ra, rb in zip(a, b):
+        np.testing.assert_array_equal(ra.y, rb.y)
+        assert ra.category == rb.category and ra.series_id == rb.series_id
+    assert any(not np.array_equal(ra.y, rc.y) for ra, rc in zip(a, c))
+
+
+def test_overlong_history_truncated_and_counted(fitted):
+    f = fitted
+    srv = BatchedForecastServer(
+        f.config, f.params_, length_buckets=(32, 64), batch_buckets=(1, 4))
+    long_y = _series(100, seed=1)
+    out = srv.forecast_batch([ForecastRequest(y=long_y)])
+    assert np.isfinite(out[0]).all()
+    assert srv.stats.truncated_series == 1
+    # the served forecast is the truncated-tail forecast, visibly
+    tail = srv.forecast_batch([ForecastRequest(y=long_y[-64:])])
+    np.testing.assert_array_equal(out[0], tail[0])
+    srv.forecast_batch([ForecastRequest(y=_series(80, seed=2))])
+    assert srv.stats.truncated_series == 2
