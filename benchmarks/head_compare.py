@@ -1,0 +1,90 @@
+"""Head comparison: the three registered heads on one synthetic M4 split.
+
+The pluggable-head claim is twofold: every head trains and scores through
+the unchanged spec/estimator surface, and the esn head's frozen reservoir
+makes its fit cheaper than the lstm's at equal steps (the training step
+closes over the reservoir, so XLA never builds its weight-gradient
+matmuls). This benchmark fits each head for the SAME number of steps on
+the SAME prepared quarterly split and reports fit wall-clock plus
+sMAPE/MASE/OWA (vs Naive2, as in Table 4).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import eval_test_smape, save_result
+from repro.core import losses as L
+from repro.core.comb import naive2_forecast
+from repro.core.esrnn import make_config
+from repro.core.heads import available_heads
+from repro.data.pipeline import prepare
+from repro.data.synthetic_m4 import generate
+from repro.train.trainer import TrainConfig, train_esrnn
+
+FREQ = "quarterly"
+
+
+def run(fast: bool = False):
+    scale, steps = (0.002, 40) if fast else (0.004, 120)
+    data = prepare(generate(FREQ, scale=scale, seed=0))
+    m, h = data.seasonality, data.horizon
+    y_in = np.asarray(data.val_input)
+    target = jnp.asarray(data.test_target)
+    insample = jnp.asarray(y_in)
+    n2 = jnp.asarray(naive2_forecast(y_in, h, m), jnp.float32)
+    naive2_smape = float(L.smape(n2, target))
+    naive2_mase = float(L.mase(n2, target, insample, m))
+
+    # one-time jax/runtime warmup (device init, data transfer paths) so the
+    # first head timed doesn't absorb costs the others skip
+    train_esrnn(make_config(FREQ), data, TrainConfig(
+        batch_size=min(64, data.n_series), n_steps=2, lr=4e-3,
+        eval_every=2, ckpt_dir=None, seed=0))
+
+    rows = {}
+    for head in available_heads():
+        cfg = make_config(FREQ, head=head)
+        t0 = time.perf_counter()
+        out = train_esrnn(cfg, data, TrainConfig(
+            batch_size=min(64, data.n_series), n_steps=steps, lr=4e-3,
+            eval_every=max(steps // 3, 1), ckpt_dir=None, seed=0))
+        fit_s = time.perf_counter() - t0
+        smape, fc = eval_test_smape(cfg, data, out["params"])
+        mase = float(L.mase(jnp.asarray(fc), target, insample, m))
+        rows[head] = {
+            "fit_s": fit_s,
+            "steps": steps,
+            "smape": smape,
+            "mase": mase,
+            "owa": float(L.owa(smape, mase, naive2_smape, naive2_mase)),
+            "final_loss": float(out["history"]["loss"][-1]),
+        }
+
+    out = {
+        "frequency": FREQ,
+        "n_series": data.n_series,
+        "steps": steps,
+        "naive2": {"smape": naive2_smape, "mase": naive2_mase},
+        "per_head": rows,
+        "esn_fit_speedup_vs_lstm": rows["lstm"]["fit_s"] / rows["esn"]["fit_s"],
+    }
+    save_result("head_compare", out)
+    return out
+
+
+def main():
+    out = run()
+    print(f"head     {'fit_s':>8s} {'smape':>8s} {'mase':>8s} {'owa':>8s}")
+    for head, r in out["per_head"].items():
+        print(f"{head:8s} {r['fit_s']:8.2f} {r['smape']:8.3f} "
+              f"{r['mase']:8.3f} {r['owa']:8.3f}")
+    print(f"esn fit speedup vs lstm at equal steps: "
+          f"{out['esn_fit_speedup_vs_lstm']:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

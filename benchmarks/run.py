@@ -1,17 +1,19 @@
 """Benchmark harness entry point -- one function per paper table.
 
 ``python -m benchmarks.run [--fast]`` runs Table 4/5/6 analogs, the
-sustained-load serving benchmark and the roofline report, printing
-``name,us_per_call,derived`` CSV lines plus the human-readable tables, and
-saving JSON under experiments/bench/. It also writes the repo-root
-``BENCH_PR6.json`` trajectory point (speedup through the public estimator,
-the ``use_pallas`` train-step timing column, the fused-engine
-``scan_steps`` steps/sec column, the sharded-vs-single ``predict_path``
-series/sec column, the continuous-batching ``serve_load`` sustained-load
-column -- p50/p99 latency + series/sec for >= 2 queue configurations vs
-the batch-1 baseline -- sMAPE, device sweep, git sha) that CI archives as
-an artifact -- the perf record the next regression gets compared against
-(``BENCH_PR2.json``..``BENCH_PR5.json`` are the prior points, kept for
+sustained-load serving benchmark, the pluggable-head comparison and the
+roofline report, printing ``name,us_per_call,derived`` CSV lines plus the
+human-readable tables, and saving JSON under experiments/bench/. It also
+writes the repo-root ``BENCH_PR7.json`` trajectory point (speedup through
+the public estimator, the ``use_pallas`` train-step timing column, the
+fused-engine ``scan_steps`` steps/sec column, the sharded-vs-single
+``predict_path`` series/sec column, the continuous-batching ``serve_load``
+sustained-load column -- p50/p99 latency + series/sec for >= 2 queue
+configurations vs the batch-1 baseline -- the ``head_compare`` table (fit
+wall-clock + sMAPE/MASE/OWA per registered head at equal steps on the same
+split), sMAPE, device sweep, git sha) that CI archives as an artifact --
+the perf record the next regression gets compared against
+(``BENCH_PR2.json``..``BENCH_PR6.json`` are the prior points, kept for
 comparison).
 """
 
@@ -22,7 +24,7 @@ import subprocess
 import time
 
 BENCH_TRAJECTORY = os.path.join(
-    os.path.dirname(__file__), "..", "BENCH_PR6.json")
+    os.path.dirname(__file__), "..", "BENCH_PR7.json")
 
 
 def _git_sha() -> str:
@@ -35,12 +37,12 @@ def _git_sha() -> str:
         return "unknown"
 
 
-def write_trajectory(t5, t4, serve) -> str:
-    """BENCH_PR6.json: the machine-readable perf point CI archives."""
+def write_trajectory(t5, t4, serve, heads) -> str:
+    """BENCH_PR7.json: the machine-readable perf point CI archives."""
     import jax
 
     payload = {
-        "bench": "PR6",
+        "bench": "PR7",
         "git_sha": _git_sha(),
         "devices": len(jax.devices()),
         "speedup_vectorized_vs_loop": t5["estimator_path"]["speedup"],
@@ -61,6 +63,11 @@ def write_trajectory(t5, t4, serve) -> str:
         # server at >= 2 queue configs (CI gates: run completes, p99 finite,
         # series/sec recorded, continuous >= 1.5x at equal-or-better p99)
         "serve_load": serve,
+        # pluggable-head column: every registered head fitted for the same
+        # steps on the same quarterly split -- fit wall-clock + accuracy
+        # (CI gates: every head's OWA finite, lstm's OWA no worse than the
+        # PR6 record, esn's fit wall-clock under lstm's at equal steps)
+        "head_compare": heads,
         "smape_quarterly": t4["per_frequency"]["quarterly"]["esrnn"]["smape"],
         "owa_quarterly": t4["per_frequency"]["quarterly"]["esrnn"]["owa"],
         "device_sweep": t5["device_sweep"],
@@ -77,8 +84,8 @@ def main() -> None:
     args, _ = ap.parse_known_args()
 
     from benchmarks import (
-        roofline_report, serve_load, table4_accuracy, table5_speedup,
-        table6_categories,
+        head_compare, roofline_report, serve_load, table4_accuracy,
+        table5_speedup, table6_categories,
     )
 
     csv = []
@@ -148,6 +155,18 @@ def main() -> None:
           f"{sv['speedup_best_vs_baseline']:.2f}x series/s")
 
     t0 = time.perf_counter()
+    hc = head_compare.run(fast=args.fast)
+    dt = time.perf_counter() - t0
+    csv.append(("head_compare", dt * 1e6,
+                f"esn_fit_speedup={hc['esn_fit_speedup_vs_lstm']:.2f}x"))
+    print("\n== Pluggable heads (equal steps, same quarterly split) ==")
+    for head, r in hc["per_head"].items():
+        print(f"  {head:5s} fit {r['fit_s']:6.2f}s  smape {r['smape']:7.3f}  "
+              f"mase {r['mase']:7.3f}  owa {r['owa']:.3f}")
+    print(f"  esn fit speedup vs lstm: "
+          f"{hc['esn_fit_speedup_vs_lstm']:.2f}x at {hc['steps']} steps")
+
+    t0 = time.perf_counter()
     t6 = table6_categories.run(fast=True)
     dt = time.perf_counter() - t0
     csv.append(("table6_categories", dt * 1e6, "per-category sMAPE"))
@@ -163,7 +182,7 @@ def main() -> None:
     for name, us, derived in csv:
         print(f"{name},{us:.0f},{derived}")
 
-    print("\nwrote", write_trajectory(t5, t4, sv))
+    print("\nwrote", write_trajectory(t5, t4, sv, hc))
 
 
 if __name__ == "__main__":

@@ -5,7 +5,7 @@ Decode-microbenchmark methodology applied to forecast serving: a synthetic
 NOT slow down when the server falls behind, exactly like real traffic) is
 replayed against two serving engines over the identical request stream:
 
-* **baseline** -- ``BatchedForecastServer`` fed one request per call, i.e.
+* **baseline** -- ``BucketDispatcher.forecast_batch`` fed one request per call, i.e.
   dispatch-on-arrival with no cross-request batching. Replayed on a
   *virtual clock*: each request's service time is measured for real, queue
   wait is simulated (``start = max(arrival, prev_done)``), so the baseline
@@ -24,7 +24,7 @@ but for latency-bound serving. Both engines pre-warm every
 compiles never pollute the percentiles.
 
 Run directly (``python -m benchmarks.serve_load [--fast]``) or through
-``benchmarks.run``, which folds the result into ``BENCH_PR6.json``.
+``benchmarks.run``, which folds the result into ``BENCH_PR7.json``.
 """
 
 from __future__ import annotations
@@ -35,7 +35,7 @@ from typing import List, Optional
 import numpy as np
 
 from repro.forecast import (
-    BatchedForecastServer, ESRNNForecaster, ForecastRequest, get_smoke_spec,
+    BucketDispatcher, ESRNNForecaster, ForecastRequest, get_smoke_spec,
     synthetic_request_stream,
 )
 from repro.forecast.server import ServerConfig
@@ -71,8 +71,8 @@ def _fit_estimator(fast: bool) -> ESRNNForecaster:
 
 def _baseline(f, requests, arrivals) -> dict:
     """Batch-1 dispatch-on-arrival on a virtual clock (measured service)."""
-    srv = BatchedForecastServer(f.config, f.params_)
-    _prewarm(srv._dispatch, f.config)
+    srv = BucketDispatcher(f.config, f.params_)
+    _prewarm(srv, f.config)
     srv.stats.reset()
     done = 0.0
     lat = np.empty(len(requests))
@@ -143,8 +143,8 @@ def run(fast: bool = False, *, n_requests: Optional[int] = None,
         f.config, n, n_known=f.n_series_ or 0, seed=seed)
 
     # calibrate: warm batch-1 service time -> offered rate (open loop)
-    cal = BatchedForecastServer(f.config, f.params_)
-    _prewarm(cal._dispatch, f.config)
+    cal = BucketDispatcher(f.config, f.params_)
+    _prewarm(cal, f.config)
     t0 = time.perf_counter()
     n_cal = min(32, n)
     for r in requests[:n_cal]:

@@ -11,12 +11,21 @@ export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 echo "== tier-1 tests =="
 python -m pytest -x -q
 
+echo "== spec registry smoke (every head family listed) =="
+python -m repro.launch.forecast specs
+python -m repro.launch.forecast specs --json > /dev/null
+
 echo "== forecast fit smoke (20 steps) =="
 python -m repro.launch.forecast fit --spec esrnn-quarterly --smoke --steps 20
 
 echo "== fused-superstep fit smoke (scan_steps=8, sparse per-series adam) =="
 python -m repro.launch.forecast fit --spec esrnn-quarterly --smoke --steps 20 \
     --set scan_steps=8 --set sparse_adam=true
+
+echo "== pluggable-head fit smokes (esn frozen reservoir, ssm scan) =="
+python -m repro.launch.forecast fit --spec esn-quarterly --smoke --steps 20 \
+    --set sparse_adam=true
+python -m repro.launch.forecast fit --spec ssm-quarterly --smoke --steps 20
 
 echo "== forecast serve smoke (continuous batching) =="
 python -m repro.launch.forecast serve --smoke --steps 3 --requests 16

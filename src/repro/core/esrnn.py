@@ -44,7 +44,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import forward as F
-from repro.core.drnn import drnn_init
+from repro.core import heads as H
 from repro.core.holt_winters import hw_init_params
 
 
@@ -67,6 +67,10 @@ class ESRNNConfig:
                                    # (yearly/weekly) -- causal dot-product
                                    # attention over the LSTM hidden sequence
     use_pallas: bool = False       # route HW scan + LSTM cell through kernels
+    head: str = "lstm"             # repro.core.heads registry name: the
+                                   # network between the Eq.-6 windows and
+                                   # the Eq.-5 de-normalization ("lstm" --
+                                   # the paper's head, "esn", "ssm", ...)
     dtype: str = "float32"
 
     @property
@@ -99,34 +103,19 @@ def make_config(name: str, **overrides) -> ESRNNConfig:
 
 
 def esrnn_init(key, cfg: ESRNNConfig, n_series: int):
-    """Initialize the params pytree: {"hw": HWParams, "rnn": ..., "head": ...}.
+    """Initialize the params pytree: {"hw": HWParams, <head subtrees>}.
 
     The ``hw`` subtree is the per-series table (leading axis N); everything
-    else is shared across series.
+    else is shared across series and comes from the config's head
+    (:mod:`repro.core.heads` -- ``"rnn"``/``"head"``(/``"attn"``) for the
+    paper's lstm head, head-specific keys otherwise). The lstm head consumes
+    ``key`` exactly as the pre-registry init did, so fitted checkpoints and
+    the bit-for-bit goldens are unaffected.
     """
-    rnn_key, head_key1, head_key2 = jax.random.split(key, 3)
-    feat = cfg.input_size + cfg.n_categories
     hw = hw_init_params(
         n_series, cfg.seasonality, seasonality2=cfg.seasonality2, dtype=cfg.jdtype
     )
-    rnn = drnn_init(rnn_key, feat, cfg.hidden_size, cfg.dilations, cfg.jdtype)
-    scale = 1.0 / jnp.sqrt(jnp.asarray(cfg.hidden_size, jnp.float32))
-    head = {
-        "dense_w": (jax.random.uniform(head_key1, (cfg.hidden_size, cfg.hidden_size), jnp.float32, -1, 1) * scale).astype(cfg.jdtype),
-        "dense_b": jnp.zeros((cfg.hidden_size,), cfg.jdtype),
-        "out_w": (jax.random.uniform(head_key2, (cfg.hidden_size, cfg.output_size), jnp.float32, -1, 1) * scale).astype(cfg.jdtype),
-        "out_b": jnp.zeros((cfg.output_size,), cfg.jdtype),
-    }
-    params = {"hw": hw, "rnn": rnn, "head": head}
-    if cfg.attention:
-        ka, kb, kc = jax.random.split(head_key1, 3)
-        h = cfg.hidden_size
-        params["attn"] = {
-            "wq": (jax.random.normal(ka, (h, h)) * scale).astype(cfg.jdtype),
-            "wk": (jax.random.normal(kb, (h, h)) * scale).astype(cfg.jdtype),
-            "wv": (jax.random.normal(kc, (h, h)) * scale).astype(cfg.jdtype),
-        }
-    return params
+    return {"hw": hw, **H.get_head(cfg.head).init(cfg, key)}
 
 
 # ---------------------------------------------------------------------------

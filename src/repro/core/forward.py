@@ -37,8 +37,8 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import heads as H
 from repro.core import losses as L
-from repro.core.drnn import drnn_apply
 from repro.core.holt_winters import hw_smooth, hw_step
 
 __all__ = [
@@ -163,25 +163,13 @@ def features(x_in, cats):
 
 
 def rnn_head(cfg, params, feats):
-    """Dilated residual LSTM -> (attention) -> tanh dense -> linear head."""
-    hid, c_sq = drnn_apply(
-        params["rnn"], feats, dilations=cfg.dilations, use_pallas=cfg.use_pallas
-    )
-    if cfg.attention:
-        ap = params["attn"]
-        q = hid @ ap["wq"]
-        k = hid @ ap["wk"]
-        v = hid @ ap["wv"]
-        s = jnp.einsum("nph,nqh->npq", q, k) / jnp.sqrt(
-            jnp.asarray(cfg.hidden_size, jnp.float32)).astype(hid.dtype)
-        p_idx = jnp.arange(hid.shape[1])
-        mask = p_idx[:, None] >= p_idx[None, :]
-        s = jnp.where(mask[None], s.astype(jnp.float32), -jnp.inf)
-        hid = hid + jnp.einsum(
-            "npq,nqh->nph", jax.nn.softmax(s, axis=-1).astype(v.dtype), v)
-    head = params["head"]
-    z = jnp.tanh(hid @ head["dense_w"] + head["dense_b"])
-    return z @ head["out_w"] + head["out_b"], c_sq
+    """Dilated residual LSTM -> (attention) -> tanh dense -> linear head.
+
+    Kept as the public name of the paper's head; the implementation lives
+    in :mod:`repro.core.heads` as the ``lstm`` entry of the head registry
+    (same math, bit-for-bit -- the goldens assert it).
+    """
+    return H.lstm_head_apply(cfg, params, feats)
 
 
 # ---------------------------------------------------------------------------
@@ -190,15 +178,20 @@ def rnn_head(cfg, params, feats):
 
 
 def esrnn_states(cfg, params, y, cats) -> ESRNNStates:
-    """Run the full state-space forward pass once: smoothing, windows, RNN.
+    """Run the full state-space forward pass once: smoothing, windows, head.
 
     This is the shared core of the loss and every forecast/backtest path.
-    ``y`` (N, T) strictly positive, ``cats`` (N, C) one-hot.
+    ``y`` (N, T) strictly positive, ``cats`` (N, C) one-hot. The network
+    that maps windowed features to normalized predictions is pluggable:
+    ``cfg.head`` selects it from the :mod:`repro.core.heads` registry
+    (``lstm`` -- the paper's dilated LSTM, ``esn``, ``ssm``, or anything
+    registered since). Every head must be causal along the position axis,
+    which is what keeps :func:`forecast_at_origins` sound.
     """
     levels, seas = smooth(cfg, params, y)
     x_in, pos = input_windows(cfg, y, levels, seas)
     feats = features(x_in, cats)
-    yhat_n, c_sq = rnn_head(cfg, params, feats)
+    yhat_n, c_sq = H.get_head(cfg.head).apply(cfg, params, feats)
     return ESRNNStates(levels=levels, seas=seas, pos=pos, x_in=x_in,
                        yhat_n=yhat_n, c_sq=c_sq)
 

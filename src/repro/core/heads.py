@@ -1,0 +1,288 @@
+"""Pluggable forecasting heads behind ``ESRNNConfig.head``.
+
+The ES-RNN forward core (:mod:`repro.core.forward`) is a fixed
+deseasonalization pipeline -- Holt-Winters smoothing, Eq.-6 normalized
+windows, Eq.-5 de-normalization -- around one learned component: the network
+that maps the windowed features ``(N, P, W + C)`` to normalized log-space
+predictions ``(N, P, H)``. This module makes that component a *protocol*:
+
+    HeadSpec(
+        init(cfg, key)           -> non-hw params subtree(s),
+        apply(cfg, params, feats)-> (yhat_n (N, P, H), c_sq scalar),
+        frozen                   -> top-level param keys excluded from
+                                    training (closed over by the step fn),
+    )
+
+Every loss / forecast / backtest / serving path dispatches through
+``get_head(cfg.head).apply`` inside ``forward.esrnn_states``, so a new head
+is a one-file change: implement the protocol, ``register_head`` it, and the
+whole estimator + CLI + sharding + serving surface picks it up.
+
+Three heads ship:
+
+* ``lstm`` -- the paper's dilated residual LSTM (+ optional causal
+  attention) followed by the tanh-dense + linear readout. This is the exact
+  pre-registry math, bit-for-bit (the golden tests in
+  ``tests/core/test_forward.py`` pin it against frozen reference copies).
+* ``esn`` -- an echo-state head: the *same* dilated recurrent stack, but as
+  a fixed random reservoir (``frozen={"rnn"}``); only the dense readout
+  (and, as always, the per-series HW table) trains. Per the M4 ESN
+  benchmarking line of work, reservoirs are competitive at a fraction of
+  the fit cost -- here the training step closes over the reservoir weights,
+  so the backward pass skips every reservoir weight-gradient matmul.
+* ``ssm`` -- a state-space head reusing :func:`repro.models.ssm.ssd_chunked`
+  (the Mamba2 SSD chunked scan) over the window-position axis. Causal by
+  construction (masked intra-chunk quadratic + inter-chunk recurrence), so
+  rolling-origin backtests off one pass remain sound.
+
+Every head keeps the trained readout under the ``"head"`` key and stores no
+per-series state outside ``"hw"`` -- the sharding specs (hw sharded,
+everything else replicated), the serving table snapshot, and the checkpoint
+templates are head-agnostic by construction.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, FrozenSet, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.drnn import drnn_apply, drnn_init
+from repro.models.ssm import ssd_chunked
+
+__all__ = [
+    "HeadSpec", "register_head", "get_head", "available_heads",
+    "frozen_param_groups", "lstm_head_init", "lstm_head_apply",
+    "esn_head_init", "esn_head_apply", "ssm_head_init", "ssm_head_apply",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class HeadSpec:
+    """One pluggable head: init/apply plus its trainability declaration.
+
+    ``init(cfg, key)`` returns the head's param subtrees as a dict of
+    top-level keys (never ``"hw"`` -- the per-series table belongs to the
+    smoothing layer). ``apply(cfg, params, feats)`` maps features
+    ``(N, P, W + C)`` to ``(yhat_n (N, P, H), c_sq scalar)`` and must be
+    causal along P. ``frozen`` names the top-level param keys the training
+    engines exclude from differentiation and optimizer state.
+    """
+
+    name: str
+    init: Callable
+    apply: Callable
+    frozen: FrozenSet[str] = frozenset()
+
+
+_HEADS: Dict[str, HeadSpec] = {}
+
+
+def register_head(spec: HeadSpec) -> HeadSpec:
+    """Add a head to the registry (last registration of a name wins)."""
+    _HEADS[spec.name] = spec
+    return spec
+
+
+def available_heads() -> Tuple[str, ...]:
+    return tuple(sorted(_HEADS))
+
+
+def get_head(name: str) -> HeadSpec:
+    try:
+        return _HEADS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown forecasting head {name!r}; available heads: "
+            f"{list(available_heads())}") from None
+
+
+def frozen_param_groups(cfg) -> FrozenSet[str]:
+    """Top-level param keys the config's head declares untrainable."""
+    return get_head(cfg.head).frozen
+
+
+# ---------------------------------------------------------------------------
+# Shared readout: tanh dense -> linear (all heads end here)
+# ---------------------------------------------------------------------------
+
+
+def _readout_init(cfg, key1, key2):
+    scale = 1.0 / jnp.sqrt(jnp.asarray(cfg.hidden_size, jnp.float32))
+    return {
+        "dense_w": (jax.random.uniform(key1, (cfg.hidden_size, cfg.hidden_size), jnp.float32, -1, 1) * scale).astype(cfg.jdtype),
+        "dense_b": jnp.zeros((cfg.hidden_size,), cfg.jdtype),
+        "out_w": (jax.random.uniform(key2, (cfg.hidden_size, cfg.output_size), jnp.float32, -1, 1) * scale).astype(cfg.jdtype),
+        "out_b": jnp.zeros((cfg.output_size,), cfg.jdtype),
+    }
+
+
+def _readout_apply(params, hid):
+    head = params["head"]
+    z = jnp.tanh(hid @ head["dense_w"] + head["dense_b"])
+    return z @ head["out_w"] + head["out_b"]
+
+
+# ---------------------------------------------------------------------------
+# lstm: the paper's dilated residual LSTM (+ attention) head
+# ---------------------------------------------------------------------------
+#
+# Key-consumption order and every init expression are the pre-registry
+# ``esrnn_init`` body verbatim (minus the hw table), and the apply is the
+# pre-registry ``forward.rnn_head`` verbatim -- the goldens in
+# tests/core/test_forward.py assert bit-for-bit equality, no tolerance.
+
+
+def lstm_head_init(cfg, key):
+    rnn_key, head_key1, head_key2 = jax.random.split(key, 3)
+    feat = cfg.input_size + cfg.n_categories
+    rnn = drnn_init(rnn_key, feat, cfg.hidden_size, cfg.dilations, cfg.jdtype)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(cfg.hidden_size, jnp.float32))
+    params = {"rnn": rnn, "head": _readout_init(cfg, head_key1, head_key2)}
+    if cfg.attention:
+        ka, kb, kc = jax.random.split(head_key1, 3)
+        h = cfg.hidden_size
+        params["attn"] = {
+            "wq": (jax.random.normal(ka, (h, h)) * scale).astype(cfg.jdtype),
+            "wk": (jax.random.normal(kb, (h, h)) * scale).astype(cfg.jdtype),
+            "wv": (jax.random.normal(kc, (h, h)) * scale).astype(cfg.jdtype),
+        }
+    return params
+
+
+def lstm_head_apply(cfg, params, feats):
+    """Dilated residual LSTM -> (attention) -> tanh dense -> linear head."""
+    hid, c_sq = drnn_apply(
+        params["rnn"], feats, dilations=cfg.dilations, use_pallas=cfg.use_pallas
+    )
+    if cfg.attention:
+        ap = params["attn"]
+        q = hid @ ap["wq"]
+        k = hid @ ap["wk"]
+        v = hid @ ap["wv"]
+        s = jnp.einsum("nph,nqh->npq", q, k) / jnp.sqrt(
+            jnp.asarray(cfg.hidden_size, jnp.float32)).astype(hid.dtype)
+        p_idx = jnp.arange(hid.shape[1])
+        mask = p_idx[:, None] >= p_idx[None, :]
+        s = jnp.where(mask[None], s.astype(jnp.float32), -jnp.inf)
+        hid = hid + jnp.einsum(
+            "npq,nqh->nph", jax.nn.softmax(s, axis=-1).astype(v.dtype), v)
+    return _readout_apply(params, hid), c_sq
+
+
+# ---------------------------------------------------------------------------
+# esn: fixed random reservoir (the same dilated stack), trained readout only
+# ---------------------------------------------------------------------------
+
+
+def esn_head_init(cfg, key):
+    """Reservoir = the dilated recurrent stack, frozen; readout trains.
+
+    Reuses ``drnn_init`` unchanged -- the LSTM gates are contractive
+    (sigmoid/tanh), so the 1/sqrt(fan-in) uniform init gives a stable
+    fading-memory reservoir without an explicit spectral-radius rescale.
+    The attention flag is ignored: an attention layer is a trained
+    component, which is exactly what this head omits.
+    """
+    rnn_key, head_key1, head_key2 = jax.random.split(key, 3)
+    feat = cfg.input_size + cfg.n_categories
+    rnn = drnn_init(rnn_key, feat, cfg.hidden_size, cfg.dilations, cfg.jdtype)
+    return {"rnn": rnn, "head": _readout_init(cfg, head_key1, head_key2)}
+
+
+def esn_head_apply(cfg, params, feats):
+    """Frozen reservoir pass -> tanh dense -> linear readout.
+
+    Identical forward math to the lstm head without attention; the
+    difference is entirely in training (``frozen={"rnn"}``: the engines
+    close over the reservoir, so no reservoir weight gradients are ever
+    computed -- the dx path through it still runs because the per-series
+    HW params sit upstream of the windows).
+    """
+    hid, c_sq = drnn_apply(
+        params["rnn"], feats, dilations=cfg.dilations, use_pallas=cfg.use_pallas
+    )
+    return _readout_apply(params, hid), c_sq
+
+
+# ---------------------------------------------------------------------------
+# ssm: Mamba2 SSD chunked scan over the window positions
+# ---------------------------------------------------------------------------
+
+_SSM_STATE = 8     # per-head state size N of the SSD recurrence
+_SSM_CHUNK = 32    # positions per intra-chunk quadratic block
+
+
+def ssm_dims(cfg) -> Tuple[int, int]:
+    """(nheads, headdim) for the SSD scan, derived from ``hidden_size``.
+
+    The largest divisor of ``hidden_size`` that is at most
+    ``hidden_size // 8`` (so headdim >= 8), floored at one head -- every
+    preset (30/40/50-wide and the 8-wide smoke) gets an exact split.
+    """
+    hid = cfg.hidden_size
+    nheads = max(d for d in range(1, max(1, hid // 8) + 1) if hid % d == 0)
+    return nheads, hid // nheads
+
+
+def ssm_head_init(cfg, key):
+    in_key, head_key1, head_key2 = jax.random.split(key, 3)
+    feat = cfg.input_size + cfg.n_categories
+    nheads, _ = ssm_dims(cfg)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(feat, jnp.float32))
+    # order: [x (hidden), B (N), C (N), dt (nheads)]; a_log=0 -> A=-1 and
+    # dt_bias=0 -> dt ~ softplus(0) give a ~0.5/step decay at init
+    ssm = {
+        "w_in": (jax.random.uniform(in_key, (feat, cfg.hidden_size + 2 * _SSM_STATE + nheads), jnp.float32, -1, 1) * scale).astype(cfg.jdtype),
+        "a_log": jnp.zeros((nheads,), jnp.float32),
+        "dt_bias": jnp.zeros((nheads,), jnp.float32),
+        "d_skip": jnp.ones((nheads,), jnp.float32),
+    }
+    return {"ssm": ssm, "head": _readout_init(cfg, head_key1, head_key2)}
+
+
+def ssm_head_apply(cfg, params, feats):
+    """Linear proj -> SSD chunked scan over positions -> shared readout.
+
+    The position axis P plays the SSD time axis; the scan is causal
+    (masked intra-chunk scores, inter-chunk fp32 recurrence), so the
+    forward core's rolling-origin contract holds. P is padded to a chunk
+    multiple with dt = 0 -- a no-op step (decay exp(0)=1, update 0), so
+    the padding is exact, the same trick as ``repro.models.ssm.ssm_apply``.
+    """
+    n, t, _ = feats.shape
+    hid = cfg.hidden_size
+    nheads, headdim = ssm_dims(cfg)
+    sp = params["ssm"]
+    proj = feats @ sp["w_in"]
+    x = proj[..., :hid].reshape(n, t, nheads, headdim)
+    bb = proj[..., hid:hid + _SSM_STATE].reshape(n, t, 1, _SSM_STATE)
+    cc = proj[..., hid + _SSM_STATE:hid + 2 * _SSM_STATE].reshape(
+        n, t, 1, _SSM_STATE)
+    dt = jax.nn.softplus(
+        proj[..., hid + 2 * _SSM_STATE:].astype(jnp.float32) + sp["dt_bias"])
+    a = -jnp.exp(sp["a_log"])
+
+    q = min(_SSM_CHUNK, t)
+    pad = (-t) % q
+    if pad:
+        padt = lambda z: jnp.pad(
+            z, ((0, 0), (0, pad)) + ((0, 0),) * (z.ndim - 2))
+        xp, bp, cp, dp = padt(x), padt(bb), padt(cc), padt(dt)
+    else:
+        xp, bp, cp, dp = x, bb, cc, dt
+    y, _ = ssd_chunked(xp, dp, a, bp, cp, chunk=q)
+    y = y[:, :t] + sp["d_skip"].astype(y.dtype)[None, None, :, None] * x
+    hidseq = y.reshape(n, t, hid)
+    # the ssm analog of the LSTM cell-state penalty term: mean squared
+    # pre-readout state magnitude (same stabilization role, section 8.4)
+    c_sq = jnp.mean(jnp.square(hidseq.astype(jnp.float32)))
+    return _readout_apply(params, hidseq), c_sq
+
+
+register_head(HeadSpec("lstm", lstm_head_init, lstm_head_apply))
+register_head(HeadSpec("esn", esn_head_init, esn_head_apply,
+                       frozen=frozenset({"rnn"})))
+register_head(HeadSpec("ssm", ssm_head_init, ssm_head_apply))

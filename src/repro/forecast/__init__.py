@@ -18,14 +18,15 @@ from repro.forecast.spec import ForecastSpec, get_smoke_spec, get_spec, list_spe
 __all__ = [
     "ForecastSpec", "get_spec", "get_smoke_spec", "list_specs",
     "ESRNNForecaster", "NotFittedError",
-    "BatchedForecastServer", "ForecastRequest", "ServeStats",
-    "synthetic_request_stream",
+    "BucketDispatcher", "BatchedForecastServer", "ForecastRequest",
+    "ServeStats", "synthetic_request_stream",
     "ForecastServer", "ServerConfig", "ObserveWrite",
 ]
 
 _LAZY = {
     "ESRNNForecaster": "repro.forecast.estimator",
     "NotFittedError": "repro.forecast.estimator",
+    "BucketDispatcher": "repro.forecast.serving",
     "BatchedForecastServer": "repro.forecast.serving",
     "ForecastRequest": "repro.forecast.serving",
     "ServeStats": "repro.forecast.serving",

@@ -12,8 +12,9 @@ The production serving front end for fitted ES-RNN models:
 * :class:`~repro.forecast.server.finetune.IdleFineTuner` -- sparse-Adam
   bursts on recently observed series during queue idle gaps.
 
-The synchronous batch-at-a-time wrapper remains
-:class:`repro.forecast.serving.BatchedForecastServer`.
+The synchronous batch-at-a-time surface is
+:meth:`repro.forecast.serving.BucketDispatcher.forecast_batch` (the legacy
+``BatchedForecastServer`` wrapper is deprecated).
 """
 
 from repro.forecast.server.engine import (

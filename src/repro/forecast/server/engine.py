@@ -1,6 +1,6 @@
 """The continuous-batching forecast server: queue -> bucket fill -> dispatch.
 
-``BatchedForecastServer.forecast_batch`` serves whatever batch the caller
+``BucketDispatcher.forecast_batch`` serves whatever batch the caller
 assembled; under live traffic nobody assembles batches -- requests trickle
 in one at a time, and serving them one at a time wastes the entire point of
 the GPU implementation (a batch-1 forecast costs nearly the same wall time

@@ -39,7 +39,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.esrnn import ESRNNConfig
-from repro.train.engine import make_online_step_fn
+from repro.core.heads import frozen_param_groups
+from repro.train.engine import make_online_step_fn, split_frozen
 from repro.train.optimizer import AdamConfig, adam_init_sparse
 
 log = logging.getLogger("repro.forecast.server")
@@ -79,8 +80,12 @@ class IdleFineTuner:
         self.cfg_adam = AdamConfig(
             lr=lr, group_lr={"per_series": hw_lr_ratio},
             schedule="constant")
-        self.opt_state = adam_init_sparse(params)
-        self._step = jax.jit(make_online_step_fn(config, self.cfg_adam))
+        # head-declared frozen groups (e.g. the esn reservoir) stay fixed
+        # online exactly as offline: no gradients, no Adam moments
+        frozen = frozen_param_groups(config)
+        self.opt_state = adam_init_sparse(split_frozen(params, frozen)[0])
+        self._step = jax.jit(
+            make_online_step_fn(config, self.cfg_adam, frozen=frozen))
         self.last_loss: Optional[float] = None
 
     # -- batch assembly ------------------------------------------------------

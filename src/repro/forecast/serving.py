@@ -27,13 +27,11 @@ The module splits serving into two layers:
   shaping, per-request HW-row resolution against a host-side table
   snapshot, bucket-padded batched dispatch through
   ``esrnn_forecast``/``esrnn_forecast_dp``. Both servers drive it.
-* :class:`BatchedForecastServer` -- the synchronous batch-at-a-time
-  compatibility surface (``forecast_batch``): group, chunk, dispatch,
-  return in order. The production front end is
+* :class:`BatchedForecastServer` -- **deprecated** thin wrapper over the
+  dispatcher's synchronous batch surface. The production front end is
   :class:`repro.forecast.server.ForecastServer`, the continuous-batching
-  request loop with online ``observe`` state ingestion; this class remains
-  as the thin wrapper for scripted/batch workloads and the benchmark
-  baseline.
+  request loop with online ``observe`` state ingestion; scripted/batch
+  workloads call :meth:`BucketDispatcher.forecast_batch` directly.
 
 Per-series HW parameters are looked up by ``series_id`` for series seen at
 fit time; unknown series fall back to a primer row (alpha = gamma = 0.5,
@@ -58,6 +56,7 @@ import collections
 import dataclasses
 import logging
 import time
+import warnings
 from functools import partial
 from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
@@ -327,15 +326,55 @@ class BucketDispatcher:
         # on the latency path. Transferring the padded rows is a few KB.
         return np.asarray(fc)[:n]
 
+    def forecast_batch(
+        self, requests: Sequence[ForecastRequest]
+    ) -> List[np.ndarray]:
+        """Serve a batch of ragged requests synchronously, in order.
+
+        The scripted/batch entry point: group by length bucket, chunk by
+        ``max_batch``, dispatch each chunk through :meth:`run_bucket`,
+        return one (H,) forecast per request. Blocks until the whole batch
+        is back; per-request latency is the batch wall-time amortized over
+        the batch (the continuous server records real arrival times).
+        """
+        t0 = time.perf_counter()
+        groups: Dict[int, List[int]] = {}
+        for i, r in enumerate(requests):
+            if r.y is None:
+                raise ValueError(
+                    "ForecastRequest.y is required for batch serving; "
+                    "history-less series_id requests need the online "
+                    "ForecastServer (repro.forecast.server)")
+            groups.setdefault(
+                self.pick_length_bucket(len(r.y)), []).append(i)
+
+        out: List[Optional[np.ndarray]] = [None] * len(requests)
+        for bucket, idxs in sorted(groups.items()):
+            for lo in range(0, len(idxs), self.max_batch):
+                chunk = idxs[lo:lo + self.max_batch]
+                fc = self.run_bucket([requests[i] for i in chunk], bucket)
+                for j, i in enumerate(chunk):
+                    out[i] = fc[j]
+        dt = time.perf_counter() - t0
+        self.stats.requests += len(requests)
+        self.stats.total_s += dt
+        if requests:
+            # batch wall-time attributed to each request: this surface has no
+            # per-request arrival times (the continuous server does)
+            per_req = dt / len(requests)
+            for _ in requests:
+                self.stats.record_latency(per_req)
+        return out  # type: ignore[return-value]
+
 
 class BatchedForecastServer:
-    """Synchronous batch-at-a-time serving over the shared dispatcher.
+    """Deprecated synchronous wrapper -- use the dispatcher or ForecastServer.
 
-    The thin compatibility wrapper: callers hand a whole request batch and
-    block until every forecast is back. The continuous-batching production
-    front end (bounded queue, deadline-driven bucket fill, online
-    ``observe`` ingestion) is :class:`repro.forecast.server.ForecastServer`,
-    which drives the exact same :class:`BucketDispatcher`.
+    Kept one release for callers of the historical surface: constructing one
+    emits a :class:`DeprecationWarning` and every call delegates to a
+    :class:`BucketDispatcher` (batch workloads call its
+    :meth:`~BucketDispatcher.forecast_batch` directly; request loops want
+    :class:`repro.forecast.server.ForecastServer`).
     """
 
     def __init__(
@@ -348,6 +387,11 @@ class BatchedForecastServer:
         max_batch: Optional[int] = None,
         mesh=None,
     ):
+        warnings.warn(
+            "BatchedForecastServer is deprecated: use "
+            "repro.forecast.server.ForecastServer for request serving, or "
+            "BucketDispatcher.forecast_batch for synchronous batch "
+            "workloads", DeprecationWarning, stacklevel=2)
         self._dispatch = BucketDispatcher(
             config, params, length_buckets=length_buckets,
             batch_buckets=batch_buckets, max_batch=max_batch, mesh=mesh)
@@ -398,36 +442,7 @@ class BatchedForecastServer:
     def forecast_batch(
         self, requests: Sequence[ForecastRequest]
     ) -> List[np.ndarray]:
-        """Serve a batch of ragged requests; returns (H,) per request, in order."""
-        d = self._dispatch
-        t0 = time.perf_counter()
-        groups: Dict[int, List[int]] = {}
-        for i, r in enumerate(requests):
-            if r.y is None:
-                raise ValueError(
-                    "ForecastRequest.y is required for batch serving; "
-                    "history-less series_id requests need the online "
-                    "ForecastServer (repro.forecast.server)")
-            groups.setdefault(
-                d.pick_length_bucket(len(r.y)), []).append(i)
-
-        out: List[Optional[np.ndarray]] = [None] * len(requests)
-        for bucket, idxs in sorted(groups.items()):
-            for lo in range(0, len(idxs), d.max_batch):
-                chunk = idxs[lo:lo + d.max_batch]
-                fc = d.run_bucket([requests[i] for i in chunk], bucket)
-                for j, i in enumerate(chunk):
-                    out[i] = fc[j]
-        dt = time.perf_counter() - t0
-        d.stats.requests += len(requests)
-        d.stats.total_s += dt
-        if requests:
-            # batch wall-time attributed to each request: the wrapper has no
-            # per-request arrival times (the continuous server does)
-            per_req = dt / len(requests)
-            for _ in requests:
-                d.stats.record_latency(per_req)
-        return out  # type: ignore[return-value]
+        return self._dispatch.forecast_batch(requests)
 
 
 def synthetic_request_stream(

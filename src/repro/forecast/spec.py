@@ -19,6 +19,7 @@ import dataclasses
 from typing import Dict, List, Optional
 
 from repro.core.esrnn import ESRNNConfig, make_config
+from repro.core.heads import available_heads, get_head
 
 _MODEL_FIELDS = {f.name for f in dataclasses.fields(ESRNNConfig)} - {"name"}
 
@@ -84,13 +85,23 @@ class ForecastSpec:
         return self.model.use_pallas
 
     def replace(self, **overrides) -> "ForecastSpec":
-        """Override by field name; model-config fields route into ``model``."""
+        """Override by field name; model-config fields route into ``model``.
+
+        Unknown names raise (naming every valid spec and model field) rather
+        than being silently dropped -- a typo like ``hiden_size=64`` must
+        fail loudly, not train a default-width model.
+        """
         model_kw = {k: v for k, v in overrides.items() if k in _MODEL_FIELDS}
         spec_kw = {k: v for k, v in overrides.items() if k not in _MODEL_FIELDS}
-        unknown = [k for k in spec_kw
-                   if k not in {f.name for f in dataclasses.fields(ForecastSpec)}]
+        spec_fields = {f.name for f in dataclasses.fields(ForecastSpec)}
+        unknown = [k for k in spec_kw if k not in spec_fields]
         if unknown:
-            raise TypeError(f"unknown ForecastSpec override(s): {unknown}")
+            raise TypeError(
+                f"unknown ForecastSpec override(s): {sorted(unknown)}; "
+                f"valid spec fields: {sorted(spec_fields - {'model'})}; "
+                f"valid model fields: {sorted(_MODEL_FIELDS)}")
+        if "head" in model_kw:
+            get_head(model_kw["head"])  # unknown head names fail here, loudly
         spec = self
         if model_kw:
             if isinstance(model_kw.get("dilations"), list):
@@ -128,6 +139,11 @@ _FREQ_SPECS: Dict[str, Dict] = {
     "hourly": dict(batch_size=64, data_scale=0.05),
 }
 
+# Registry prefix -> head registry name. ``esrnn-`` (and the launcher-facing
+# ``m4-`` alias, and a bare frequency) is the paper's lstm head; every other
+# head in ``repro.core.heads`` gets its own ``<head>-<freq>`` family.
+_PREFIX_HEADS: Dict[str, str] = {"esrnn": "lstm", "m4": "lstm"}
+
 # Per-frequency smoke shrinkage: tiny model + tiny run, same code paths.
 _SMOKE_OVERRIDES = dict(
     data_scale=0.002, batch_size=16, n_steps=20, eval_every=10,
@@ -135,25 +151,46 @@ _SMOKE_OVERRIDES = dict(
 )
 
 
+def _canonical_name(head: str, freq: str) -> str:
+    return f"{'esrnn' if head == 'lstm' else head}-{freq}"
+
+
 def list_specs() -> List[str]:
-    return [f"esrnn-{freq}" for freq in _FREQ_SPECS]
+    """Every registry name: ``esrnn-<freq>`` plus ``<head>-<freq>`` per head."""
+    names = [f"esrnn-{freq}" for freq in _FREQ_SPECS]
+    for head in available_heads():
+        if head == "lstm":
+            continue
+        names.extend(f"{head}-{freq}" for freq in _FREQ_SPECS)
+    return names
 
 
 def get_spec(name: str, **overrides) -> ForecastSpec:
     """Resolve a registry name (+ optional overrides) into a ForecastSpec.
 
-    Accepts ``esrnn-<freq>``, the launcher-facing ``m4-<freq>`` alias from
-    ``repro.configs.ESRNN_CONFIGS``, or a bare frequency name.
+    Accepts ``esrnn-<freq>`` / ``m4-<freq>`` / a bare frequency (the paper's
+    lstm head), or ``<head>-<freq>`` for any other registered head
+    (``esn-quarterly``, ``ssm-monthly``, ...). The head is also a model
+    field, so ``get_spec("esrnn-quarterly", head="esn")`` and the CLI's
+    ``--set head=esn`` resolve to the same spec as ``esn-quarterly``.
     """
+    head = "lstm"
     freq = name
-    for prefix in ("esrnn-", "m4-"):
-        if freq.startswith(prefix):
-            freq = freq[len(prefix):]
+    prefix, dash, rest = name.partition("-")
+    if dash and rest in _FREQ_SPECS:
+        if prefix in _PREFIX_HEADS:
+            head, freq = _PREFIX_HEADS[prefix], rest
+        elif prefix in available_heads():
+            head, freq = prefix, rest
     if freq not in _FREQ_SPECS:
         raise KeyError(
             f"unknown forecast spec {name!r}; available: {list_specs()}")
+    if "head" in overrides:      # --set head=... canonicalizes the name too
+        head = overrides["head"]
+        get_head(head)
     spec = ForecastSpec(
-        name=f"esrnn-{freq}", model=make_config(freq), **_FREQ_SPECS[freq])
+        name=_canonical_name(head, freq),
+        model=make_config(freq, head=head), **_FREQ_SPECS[freq])
     return spec.replace(**overrides) if overrides else spec
 
 

@@ -1,5 +1,6 @@
 """Forecast launcher: the one CLI over the unified ESRNNForecaster API.
 
+    PYTHONPATH=src python -m repro.launch.forecast specs
     PYTHONPATH=src python -m repro.launch.forecast fit      --spec esrnn-quarterly --smoke
     PYTHONPATH=src python -m repro.launch.forecast predict  --dir /tmp/fq
     PYTHONPATH=src python -m repro.launch.forecast eval     --spec esrnn-quarterly --smoke
@@ -7,6 +8,11 @@
     PYTHONPATH=src python -m repro.launch.forecast serve    --smoke --requests 64
     echo '{"op":"observe","series_id":0,"y":105.2}' | \\
         PYTHONPATH=src python -m repro.launch.forecast observe --smoke
+
+``specs`` lists the registry (name, frequency, horizon, head per spec;
+``--json`` for machines). Heads are pluggable (``repro.core.heads``): pick
+one by spec name (``--spec esn-quarterly``) or by override
+(``--set head=ssm``) -- every subcommand below works with every head.
 
 ``fit`` trains (spec-driven synthetic M4 by default) and optionally saves
 the estimator; ``predict``/``eval``/``backtest`` run on a saved estimator
@@ -50,7 +56,7 @@ import logging
 import numpy as np
 
 from repro.forecast import (
-    BatchedForecastServer, ESRNNForecaster, get_smoke_spec, get_spec,
+    BucketDispatcher, ESRNNForecaster, get_smoke_spec, get_spec,
     list_specs, synthetic_request_stream,
 )
 
@@ -107,6 +113,24 @@ def _inference_mesh(args):
 
         return make_series_mesh(d)
     return None
+
+
+def cmd_specs(args):
+    """List the spec registry: one row per name, with the head made visible."""
+    import json
+
+    rows = [dict(name=n, frequency=(s := get_spec(n)).frequency,
+                 horizon=s.horizon, head=s.model.head)
+            for n in list_specs()]
+    if args.json:
+        print(json.dumps(rows, indent=2))
+        return 0
+    w = max(len(r["name"]) for r in rows)
+    print(f"{'name':{w}s}  {'frequency':9s}  {'horizon':>7s}  head")
+    for r in rows:
+        print(f"{r['name']:{w}s}  {r['frequency']:9s}  "
+              f"{r['horizon']:7d}  {r['head']}")
+    return 0
 
 
 def cmd_fit(args):
@@ -179,7 +203,7 @@ def cmd_serve(args):
     )
     mesh = _inference_mesh(args)
     if args.engine == "batch":
-        srv = BatchedForecastServer(
+        srv = BucketDispatcher(
             f.config, f.params_, max_batch=args.max_batch, mesh=mesh,
             **buckets)
         t0 = time.perf_counter()
@@ -303,9 +327,17 @@ def main(argv=None):
                             "--xla_force_host_platform_device_count=N)")
         p.add_argument("--set", action="append", metavar="KEY=VAL",
                        help="spec/model override, e.g. --set hidden_size=16, "
+                            "--set head=esn (pluggable forecasting head: "
+                            "lstm/esn/ssm), "
                             "--set use_pallas=true (trainable kernel path), "
                             "--set scan_steps=32 (fused superstep engine), "
                             "--set sparse_adam=true (segment per-series Adam)")
+
+    p_specs = sub.add_parser(
+        "specs", help="list the spec registry (name/frequency/horizon/head)")
+    p_specs.add_argument("--json", action="store_true",
+                         help="machine-readable JSON rows")
+    p_specs.set_defaults(fn=cmd_specs)
 
     p_fit = sub.add_parser("fit", help="train an estimator")
     common(p_fit)

@@ -37,7 +37,7 @@ computation itself.
 
 from __future__ import annotations
 
-from typing import Callable, Iterator, Tuple
+from typing import Callable, FrozenSet, Iterator, Tuple
 
 import jax
 
@@ -52,6 +52,24 @@ from repro.train.optimizer import (
 StepFn = Callable
 
 
+def split_frozen(params, frozen: FrozenSet[str]):
+    """Split a params dict by top-level key into (trainable, frozen).
+
+    The head registry (``repro.core.heads.frozen_param_groups``) declares
+    which top-level groups a head keeps untrainable (e.g. the esn head's
+    ``"rnn"`` reservoir). The step functions differentiate and run Adam over
+    the trainable subtree only, closing over the frozen one -- XLA then
+    never builds the frozen groups' weight-gradient computations, which is
+    where the esn head's near-free fits come from. Optimizer state is built
+    over the same trainable subtree (``adam_init(split_frozen(p, f)[0])``),
+    so checkpoints carry no moments for weights that never move. With
+    ``frozen`` empty this is the identity partition and every trajectory is
+    bit-for-bit what it was before frozen groups existed.
+    """
+    return ({k: v for k, v in params.items() if k not in frozen},
+            {k: v for k, v in params.items() if k in frozen})
+
+
 def make_step_fn(
     mcfg: ESRNNConfig,
     cfg_adam: AdamConfig,
@@ -61,6 +79,7 @@ def make_step_fn(
     *,
     mesh=None,
     sparse: bool = False,
+    frozen: FrozenSet[str] = frozenset(),
 ) -> StepFn:
     """Build the pure training step the per-step loop and the scan share.
 
@@ -71,6 +90,13 @@ def make_step_fn(
     segment path: gradients are taken w.r.t. the *gathered* batch rows (so
     the backward pass never scatters a zero-padded table-sized gradient) and
     Adam touches only those rows, with closed-form moment catch-up.
+
+    ``frozen`` names top-level param groups excluded from training (the
+    config head's declaration -- see :func:`split_frozen`): the step
+    differentiates and updates the trainable subtree only, and the caller's
+    ``opt_state`` must cover exactly that subtree. The returned step still
+    takes and returns the *full* params dict -- frozen groups ride through
+    unchanged -- so the checkpoint/save/predict surface stays head-agnostic.
     """
     if mesh is not None:
         from repro.sharding.series import esrnn_loss_dp
@@ -85,29 +111,32 @@ def make_step_fn(
         yb = y_all[idx]
         cb = cats_all[idx]
         mb = mask_all[idx]
+        p_train, p_froz = split_frozen(params, frozen)
 
         if sparse:
             hw_rows, shared = partition_series(params, idx)
+            sh_train, sh_froz = split_frozen(shared, frozen)
 
             def batch_loss(hw_b, sh):
-                return loss_fn(combine_series(hw_b, sh), yb, cb, mb)
+                return loss_fn(
+                    combine_series(hw_b, {**sh, **sh_froz}), yb, cb, mb)
 
             loss, (g_hw, g_sh) = jax.value_and_grad(
-                batch_loss, argnums=(0, 1))(hw_rows, shared)
+                batch_loss, argnums=(0, 1))(hw_rows, sh_train)
             grads = combine_series(g_hw, g_sh)
-            params, opt_state = adam_update_sparse(
-                grads, opt_state, params, cfg_adam, idx=idx,
+            p_train, opt_state = adam_update_sparse(
+                grads, opt_state, p_train, cfg_adam, idx=idx,
                 group_fn=esrnn_group_fn)
         else:
             def batch_loss(p):
                 # differentiating through the gather scatters the gradient
                 # back over the full N-row table (dense Adam consumes it)
-                return loss_fn(gather_series(p, idx), yb, cb, mb)
+                return loss_fn(gather_series({**p, **p_froz}, idx), yb, cb, mb)
 
-            loss, grads = jax.value_and_grad(batch_loss)(params)
-            params, opt_state = adam_update(
-                grads, opt_state, params, cfg_adam, group_fn=esrnn_group_fn)
-        return params, opt_state, loss
+            loss, grads = jax.value_and_grad(batch_loss)(p_train)
+            p_train, opt_state = adam_update(
+                grads, opt_state, p_train, cfg_adam, group_fn=esrnn_group_fn)
+        return {**p_train, **p_froz}, opt_state, loss
 
     return step
 
@@ -117,6 +146,7 @@ def make_online_step_fn(
     cfg_adam: AdamConfig,
     *,
     sparse: bool = True,
+    frozen: FrozenSet[str] = frozenset(),
 ) -> StepFn:
     """Training step over an *ad-hoc* batch: the serving fine-tune hook.
 
@@ -134,28 +164,31 @@ def make_online_step_fn(
     """
 
     def step(params, opt_state, y, cats, mask, rows):
+        p_train, p_froz = split_frozen(params, frozen)
         if sparse:
             hw_rows, shared = partition_series(params, rows)
+            sh_train, sh_froz = split_frozen(shared, frozen)
 
             def batch_loss(hw_b, sh):
                 return esrnn_loss_fn(
-                    mcfg, combine_series(hw_b, sh), y, cats, mask)
+                    mcfg, combine_series(hw_b, {**sh, **sh_froz}), y, cats,
+                    mask)
 
             loss, (g_hw, g_sh) = jax.value_and_grad(
-                batch_loss, argnums=(0, 1))(hw_rows, shared)
+                batch_loss, argnums=(0, 1))(hw_rows, sh_train)
             grads = combine_series(g_hw, g_sh)
-            params, opt_state = adam_update_sparse(
-                grads, opt_state, params, cfg_adam, idx=rows,
+            p_train, opt_state = adam_update_sparse(
+                grads, opt_state, p_train, cfg_adam, idx=rows,
                 group_fn=esrnn_group_fn)
         else:
             def batch_loss(p):
                 return esrnn_loss_fn(
-                    mcfg, gather_series(p, rows), y, cats, mask)
+                    mcfg, gather_series({**p, **p_froz}, rows), y, cats, mask)
 
-            loss, grads = jax.value_and_grad(batch_loss)(params)
-            params, opt_state = adam_update(
-                grads, opt_state, params, cfg_adam, group_fn=esrnn_group_fn)
-        return params, opt_state, loss
+            loss, grads = jax.value_and_grad(batch_loss)(p_train)
+            p_train, opt_state = adam_update(
+                grads, opt_state, p_train, cfg_adam, group_fn=esrnn_group_fn)
+        return {**p_train, **p_froz}, opt_state, loss
 
     return step
 

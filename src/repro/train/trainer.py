@@ -33,9 +33,11 @@ import numpy as np
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.core import losses as L
 from repro.core.esrnn import ESRNNConfig, esrnn_forecast, esrnn_init
+from repro.core.heads import frozen_param_groups
 from repro.data.pipeline import PreparedData, batch_indices, batch_schedule
 from repro.train.engine import (
     make_perstep_fn, make_step_fn, make_superstep_fn, segment_steps,
+    split_frozen,
 )
 from repro.train.optimizer import AdamConfig, adam_init, adam_init_sparse
 
@@ -176,8 +178,17 @@ def train_esrnn(
         # the engines donate (params, opt_state) unless hooks are present;
         # copy the caller's tree once so their reference stays valid
         params = jax.tree_util.tree_map(lambda a: jnp.array(a, copy=True), params)
-    opt_state = (adam_init_sparse(params) if cfg.sparse_adam
-                 else adam_init(params))
+    # optimizer state covers the trainable subtree only: the head registry
+    # declares groups it keeps fixed (e.g. the esn reservoir), and those
+    # carry no gradients, no Adam moments, and no checkpointed moment state
+    frozen = frozen_param_groups(mcfg)
+    trainable, _ = split_frozen(params, frozen)
+    if frozen:
+        log.info("head %r freezes param group(s) %s: training %s + hw only",
+                 mcfg.head, sorted(frozen),
+                 sorted(k for k in trainable if k != "hw"))
+    opt_state = (adam_init_sparse(trainable) if cfg.sparse_adam
+                 else adam_init(trainable))
     start_step = 0
 
     ckpt = Checkpointer(cfg.ckpt_dir, keep=cfg.keep) if cfg.ckpt_dir else None
@@ -209,7 +220,7 @@ def train_esrnn(
     # observation mask keeps left-padded (variable-length) positions out of
     # the loss; it is all-ones for equalized data.
     step_fn = make_step_fn(mcfg, cfg_adam, y_all, cats_all, mask_all,
-                           mesh=mesh, sparse=cfg.sparse_adam)
+                           mesh=mesh, sparse=cfg.sparse_adam, frozen=frozen)
 
     @jax.jit
     def val_smape(params):

@@ -1,0 +1,281 @@
+"""The pluggable head registry (repro.core.heads).
+
+Four families of guarantees:
+
+1. **Registry contract** -- lookup errors name the available heads; every
+   head builds its declared param groups and nothing else.
+2. **lstm golden** -- the registered lstm head IS the pre-registry math:
+   init and apply are pinned bit-for-bit against frozen in-file copies of
+   the old ``esrnn_init`` head block and ``forward.rnn_head`` (the broader
+   pre-PR5 goldens in ``test_forward.py`` cover the full loss/forecast).
+3. **esn frozen reservoir** -- a real fit moves the readout and the HW
+   table while every reservoir leaf stays bit-identical, and the loss
+   still decreases.
+4. **ssm causality** -- the SSD-scan head keeps the rolling-origin
+   contract of the unified forward pass (tolerance: the chunk partition
+   q = min(32, P) can differ between the full and the truncated pass).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import heads as H
+from repro.core.drnn import drnn_apply, drnn_init
+from repro.core.esrnn import (
+    esrnn_forecast, esrnn_forecast_at, esrnn_init, esrnn_loss, make_config,
+)
+from repro.core.forward import features, input_windows, smooth
+
+
+# ---------------------------------------------------------------------------
+# Frozen pre-registry reference (the old esrnn_init head block + rnn_head)
+# ---------------------------------------------------------------------------
+
+
+def _ref_init(key, cfg):
+    rnn_key, head_key1, head_key2 = jax.random.split(key, 3)
+    feat = cfg.input_size + cfg.n_categories
+    scale = 1.0 / jnp.sqrt(jnp.asarray(cfg.hidden_size, jnp.float32))
+    params = {
+        "rnn": drnn_init(rnn_key, feat, cfg.hidden_size, cfg.dilations,
+                         cfg.jdtype),
+        "head": {
+            "dense_w": (jax.random.uniform(
+                head_key1, (cfg.hidden_size, cfg.hidden_size), jnp.float32,
+                -1, 1) * scale).astype(cfg.jdtype),
+            "dense_b": jnp.zeros((cfg.hidden_size,), cfg.jdtype),
+            "out_w": (jax.random.uniform(
+                head_key2, (cfg.hidden_size, cfg.output_size), jnp.float32,
+                -1, 1) * scale).astype(cfg.jdtype),
+            "out_b": jnp.zeros((cfg.output_size,), cfg.jdtype),
+        },
+    }
+    if cfg.attention:
+        ka, kb, kc = jax.random.split(head_key1, 3)
+        h = cfg.hidden_size
+        params["attn"] = {
+            "wq": (jax.random.normal(ka, (h, h)) * scale).astype(cfg.jdtype),
+            "wk": (jax.random.normal(kb, (h, h)) * scale).astype(cfg.jdtype),
+            "wv": (jax.random.normal(kc, (h, h)) * scale).astype(cfg.jdtype),
+        }
+    return params
+
+
+def _ref_apply(cfg, params, feats):
+    hid, c_sq = drnn_apply(
+        params["rnn"], feats, dilations=cfg.dilations,
+        use_pallas=cfg.use_pallas)
+    if cfg.attention:
+        ap = params["attn"]
+        q = hid @ ap["wq"]
+        k = hid @ ap["wk"]
+        v = hid @ ap["wv"]
+        s = jnp.einsum("nph,nqh->npq", q, k) / jnp.sqrt(
+            jnp.asarray(cfg.hidden_size, jnp.float32)).astype(hid.dtype)
+        p_idx = jnp.arange(hid.shape[1])
+        mask = p_idx[:, None] >= p_idx[None, :]
+        s = jnp.where(mask[None], s.astype(jnp.float32), -jnp.inf)
+        hid = hid + jnp.einsum(
+            "npq,nqh->nph", jax.nn.softmax(s, axis=-1).astype(v.dtype), v)
+    head = params["head"]
+    z = jnp.tanh(hid @ head["dense_w"] + head["dense_b"])
+    return z @ head["out_w"] + head["out_b"], c_sq
+
+
+@pytest.fixture(scope="module")
+def batch():
+    rng = np.random.default_rng(13)
+    n, t = 5, 48
+    y = jnp.asarray(np.abs(rng.lognormal(3, 0.3, (n, t))) + 1, jnp.float32)
+    cats = jnp.asarray(np.eye(6, dtype=np.float32)[rng.integers(0, 6, n)])
+    return y, cats
+
+
+def _feats(cfg, params, y, cats):
+    levels, seas = smooth(cfg, params, y)
+    x_in, _pos = input_windows(cfg, y, levels, seas)
+    return features(x_in, cats)
+
+
+# ---------------------------------------------------------------------------
+# Registry contract
+# ---------------------------------------------------------------------------
+
+
+def test_three_heads_registered():
+    assert H.available_heads() == ("esn", "lstm", "ssm")
+
+
+def test_unknown_head_error_names_the_available_ones():
+    with pytest.raises(KeyError, match=r"tcn.*esn.*lstm.*ssm"):
+        H.get_head("tcn")
+
+
+def test_frozen_declarations():
+    assert H.frozen_param_groups(make_config("quarterly")) == frozenset()
+    assert H.frozen_param_groups(
+        make_config("quarterly", head="esn")) == frozenset({"rnn"})
+    assert H.frozen_param_groups(
+        make_config("quarterly", head="ssm")) == frozenset()
+
+
+@pytest.mark.parametrize("head,keys", [
+    ("lstm", {"hw", "rnn", "head"}),
+    ("esn", {"hw", "rnn", "head"}),
+    ("ssm", {"hw", "ssm", "head"}),
+])
+def test_param_groups_per_head(head, keys):
+    cfg = make_config("quarterly", hidden_size=8, head=head)
+    params = esrnn_init(jax.random.PRNGKey(0), cfg, 4)
+    assert set(params) == keys
+
+
+def test_lstm_attention_adds_the_attn_group():
+    cfg = make_config("quarterly", hidden_size=8, attention=True)
+    params = esrnn_init(jax.random.PRNGKey(0), cfg, 4)
+    assert set(params) == {"hw", "rnn", "head", "attn"}
+
+
+# ---------------------------------------------------------------------------
+# lstm golden: the registry moved code, it must not move numbers
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("attention", [False, True])
+def test_lstm_init_bit_for_bit_vs_pre_registry(attention):
+    cfg = make_config("quarterly", hidden_size=8, attention=attention)
+    key = jax.random.PRNGKey(7)
+    new = H.lstm_head_init(cfg, key)
+    old = _ref_init(key, cfg)
+    assert set(new) == set(old)
+    for a, b in zip(jax.tree_util.tree_leaves(new),
+                    jax.tree_util.tree_leaves(old)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("attention", [False, True])
+def test_lstm_apply_bit_for_bit_vs_pre_registry(batch, attention):
+    y, cats = batch
+    cfg = make_config("quarterly", hidden_size=8, attention=attention)
+    params = esrnn_init(jax.random.PRNGKey(3), cfg, y.shape[0])
+    feats = _feats(cfg, params, y, cats)
+    new_y, new_c = H.lstm_head_apply(cfg, params, feats)
+    old_y, old_c = _ref_apply(cfg, params, feats)
+    np.testing.assert_array_equal(np.asarray(new_y), np.asarray(old_y))
+    assert float(new_c) == float(old_c)
+
+
+def test_esn_forward_math_is_lstm_without_attention(batch):
+    """Same init key, attention off: the two heads' forward passes agree
+    exactly -- esn differs from lstm only in what trains."""
+    y, cats = batch
+    lo = esrnn_loss(make_config("quarterly", hidden_size=8),
+                    esrnn_init(jax.random.PRNGKey(5),
+                               make_config("quarterly", hidden_size=8),
+                               y.shape[0]), y, cats)
+    cfg_esn = make_config("quarterly", hidden_size=8, head="esn")
+    le = esrnn_loss(cfg_esn,
+                    esrnn_init(jax.random.PRNGKey(5), cfg_esn, y.shape[0]),
+                    y, cats)
+    assert float(lo) == float(le)
+
+
+# ---------------------------------------------------------------------------
+# Every head runs the whole core surface
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("head", ["lstm", "esn", "ssm"])
+def test_loss_and_forecast_finite_for_every_head(batch, head):
+    y, cats = batch
+    cfg = make_config("quarterly", hidden_size=8, head=head)
+    params = esrnn_init(jax.random.PRNGKey(0), cfg, y.shape[0])
+    loss = esrnn_loss(cfg, params, y, cats)
+    assert np.isfinite(float(loss))
+    fc = np.asarray(esrnn_forecast(cfg, params, y, cats))
+    assert fc.shape == (y.shape[0], cfg.output_size)
+    assert np.isfinite(fc).all() and (fc > 0).all()
+
+
+@pytest.mark.parametrize("head", ["lstm", "esn", "ssm"])
+def test_rolling_origin_parity_per_head(batch, head):
+    """forecast-at-origin off the full pass == truncated re-run.
+
+    lstm/esn are strictly causal step recurrences; the ssm head's SSD
+    chunk partition q = min(32, P) differs between the full and truncated
+    pass, so exactness holds only to numerical tolerance there.
+    """
+    y, cats = batch
+    cfg = make_config("quarterly", hidden_size=8, head=head)
+    params = esrnn_init(jax.random.PRNGKey(1), cfg, y.shape[0])
+    o = 30
+    fa = esrnn_forecast_at(cfg, params, y, cats, (o,))
+    trunc = esrnn_forecast(cfg, params, y[:, :o], cats)
+    np.testing.assert_allclose(np.asarray(fa[:, 0]), np.asarray(trunc),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_heads_produce_distinct_forecasts(batch):
+    y, cats = batch
+    fcs = {}
+    for head in ("lstm", "ssm"):
+        cfg = make_config("quarterly", hidden_size=8, head=head)
+        params = esrnn_init(jax.random.PRNGKey(0), cfg, y.shape[0])
+        fcs[head] = np.asarray(esrnn_forecast(cfg, params, y, cats))
+    assert not np.array_equal(fcs["lstm"], fcs["ssm"])
+
+
+def test_ssm_dims_split_every_preset_width():
+    for hid, want in [(8, (1, 8)), (30, (3, 10)), (40, (5, 8)),
+                      (50, (5, 10))]:
+        cfg = make_config("quarterly", hidden_size=hid)
+        assert H.ssm_dims(cfg) == want
+        nh, hd = H.ssm_dims(cfg)
+        assert nh * hd == hid and hd >= 8
+
+
+# ---------------------------------------------------------------------------
+# esn: the reservoir never moves under a real fit, the loss still drops
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("sparse_adam", [False, True])
+def test_esn_reservoir_frozen_through_fit(sparse_adam):
+    from repro.forecast import ESRNNForecaster, get_smoke_spec
+
+    f = ESRNNForecaster(get_smoke_spec(
+        "esn-quarterly", data_seed=2, n_steps=12, sparse_adam=sparse_adam))
+    data = f.make_data()
+    f.init_params(data.n_series)
+    before = jax.tree_util.tree_map(np.asarray, f.params_["rnn"])
+    head_before = np.asarray(f.params_["head"]["out_w"])
+    f.fit(data)
+    after = f.params_["rnn"]
+    for a, b in zip(jax.tree_util.tree_leaves(before),
+                    jax.tree_util.tree_leaves(after)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # the trainable groups moved and training made progress
+    assert not np.array_equal(head_before,
+                              np.asarray(f.params_["head"]["out_w"]))
+    losses = f.history_["loss"]
+    assert losses[-1] < losses[0]
+
+
+def test_lstm_trains_every_group():
+    """Control for the invariance test: with the default head the same fit
+    DOES move the recurrent stack."""
+    from repro.forecast import ESRNNForecaster, get_smoke_spec
+
+    f = ESRNNForecaster(get_smoke_spec(
+        "esrnn-quarterly", data_seed=2, n_steps=6))
+    data = f.make_data()
+    f.init_params(data.n_series)
+    before = jax.tree_util.tree_map(np.asarray, f.params_["rnn"])
+    f.fit(data)
+    moved = any(
+        not np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree_util.tree_leaves(before),
+                        jax.tree_util.tree_leaves(f.params_["rnn"])))
+    assert moved

@@ -1,0 +1,85 @@
+"""Sharded fit/predict parity per pluggable head (lstm / esn / ssm).
+
+The head registry's sharding story is structural: every head keeps its
+trained weights in replicated top-level groups and its per-series state in
+``"hw"`` only, so the series-DP param specs, the exact psum'd masked-mean
+loss, and the sharded inference path are head-agnostic by construction.
+This test forces 8 host devices in a subprocess (XLA locks the device
+count at first init) and asserts, for each head, that
+
+* an 8-way ``data_parallel`` fit reproduces the single-device fit
+  (final-loss and forecast parity <= 1e-6), and
+* sharded predict off one fitted table == single-device predict,
+* the esn reservoir stays bit-frozen under the sharded fit too.
+"""
+
+import json
+import subprocess
+import sys
+
+import pytest
+
+_SUBPROC = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax
+import numpy as np
+
+from repro.forecast import ESRNNForecaster, get_smoke_spec
+from repro.sharding.series import make_series_mesh
+
+out = {"devices": len(jax.devices())}
+mesh = make_series_mesh(8)
+
+for head in ("lstm", "esn", "ssm"):
+    name = {"lstm": "esrnn"}.get(head, head) + "-quarterly"
+    spec = get_smoke_spec(name, data_seed=3, n_steps=6)
+
+    f1 = ESRNNForecaster(spec)
+    data = f1.make_data()
+    f1.init_params(data.n_series)
+    f8 = ESRNNForecaster(spec.replace(data_parallel=8))
+    f8.init_params(data.n_series)
+    rnn_init = (jax.tree_util.tree_map(np.asarray, f8.params_["rnn"])
+                if head == "esn" else None)
+    f1.fit(data)
+    f8.fit(data)
+
+    out[head + "_loss_absdiff"] = float(abs(
+        f1.history_["loss"][-1] - f8.history_["loss"][-1]))
+    p1 = f1.predict()
+    p8dp = f8.predict()             # resolves its own 8-device mesh
+    out[head + "_fit_predict_reldiff"] = float(
+        np.max(np.abs(p1 - p8dp) / np.abs(p1)))
+    # sharded predict off the single-device table
+    p1m = f1.predict(mesh=mesh)
+    out[head + "_predict_reldiff"] = float(
+        np.max(np.abs(p1 - p1m) / np.abs(p1)))
+    e1, e8 = f1.evaluate(), f8.evaluate(mesh=mesh)
+    out[head + "_owa_absdiff"] = float(abs(e1["owa"] - e8["owa"]))
+
+    if head == "esn":
+        out["esn_reservoir_frozen_sharded"] = all(
+            np.array_equal(np.asarray(a), np.asarray(b))
+            for a, b in zip(jax.tree_util.tree_leaves(rnn_init),
+                            jax.tree_util.tree_leaves(f8.params_["rnn"])))
+
+print(json.dumps(out))
+"""
+
+
+@pytest.mark.slow
+def test_every_head_fit_and_predict_parity_on_8_devices():
+    r = subprocess.run(
+        [sys.executable, "-c", _SUBPROC], capture_output=True, text=True,
+        timeout=560)
+    assert r.returncode == 0, r.stderr[-3000:]
+    out = json.loads(r.stdout.strip().splitlines()[-1])
+    assert out["devices"] == 8
+    for head in ("lstm", "esn", "ssm"):
+        assert out[f"{head}_loss_absdiff"] <= 1e-6, (head, out)
+        assert out[f"{head}_fit_predict_reldiff"] <= 1e-6, (head, out)
+        assert out[f"{head}_predict_reldiff"] <= 1e-6, (head, out)
+        assert out[f"{head}_owa_absdiff"] <= 1e-5, (head, out)
+    assert out["esn_reservoir_frozen_sharded"], out

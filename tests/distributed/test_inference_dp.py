@@ -93,7 +93,7 @@ import jax
 import numpy as np
 
 from repro.forecast import (
-    BatchedForecastServer, ESRNNForecaster, get_smoke_spec,
+    BucketDispatcher, ESRNNForecaster, get_smoke_spec,
     synthetic_request_stream,
 )
 from repro.sharding.series import make_series_mesh
@@ -149,10 +149,10 @@ out["dp_spec_predict_reldiff"] = float(
 
 # sharded serving off a DP-fitted (device-sharded) table: host snapshot,
 # numpy per-request gather, shard_map forecast
-srv1 = BatchedForecastServer(fdp.config, fdp.params_,
+srv1 = BucketDispatcher(fdp.config, fdp.params_,
                              length_buckets=(32, 64),
                              batch_buckets=(1, 4, 16))
-srv8 = BatchedForecastServer(fdp.config, fdp.params_,
+srv8 = BucketDispatcher(fdp.config, fdp.params_,
                              length_buckets=(32, 64),
                              batch_buckets=(1, 4, 16), mesh=mesh)
 out["serve_table_is_host_numpy"] = all(

@@ -88,3 +88,38 @@ def test_serve_smoke(saved_dir, capsys):
                  "--batch-buckets", "1,8"]) == 0
     out = capsys.readouterr().out
     assert "jit cache" in out and "compiles" in out
+
+
+def test_specs_lists_every_head_family(capsys):
+    assert main(["specs"]) == 0
+    out = capsys.readouterr().out
+    assert "esrnn-quarterly" in out and "esn-quarterly" in out
+    assert "ssm-hourly" in out and "head" in out
+
+
+def test_specs_json(capsys):
+    import json
+
+    assert main(["specs", "--json"]) == 0
+    rows = json.loads(capsys.readouterr().out)
+    by_name = {r["name"]: r for r in rows}
+    assert by_name["esn-yearly"]["head"] == "esn"
+    assert by_name["esrnn-monthly"] == dict(
+        name="esrnn-monthly", frequency="monthly", horizon=18, head="lstm")
+
+
+@pytest.mark.parametrize("args", [
+    ["fit", "--spec", "esn-quarterly", "--smoke", "--steps", "2"],
+    ["fit", "--smoke", "--steps", "2", "--set", "head=ssm",
+     "--set", "hidden_size=8"],
+])
+def test_fit_alternative_heads(args, capsys):
+    assert main(args) == 0
+    assert "2 steps" in capsys.readouterr().out
+
+
+def test_eval_alternative_head(capsys):
+    assert main(["eval", "--spec", "esn-quarterly", "--smoke",
+                 "--steps", "2"]) == 0
+    out = capsys.readouterr().out
+    assert "esn-quarterly" in out and "smape" in out

@@ -19,7 +19,7 @@ import pytest
 from repro.core.esrnn import esrnn_forecast, esrnn_init, make_config
 from repro.core.holt_winters import hw_smooth
 from repro.forecast import (
-    BatchedForecastServer, ESRNNForecaster, ForecastRequest, get_smoke_spec,
+    BucketDispatcher, ESRNNForecaster, ForecastRequest, get_smoke_spec,
     synthetic_request_stream,
 )
 from repro.forecast.server import (
@@ -284,7 +284,7 @@ def test_synthetic_request_stream_deterministic():
 
 def test_overlong_history_truncated_and_counted(fitted):
     f = fitted
-    srv = BatchedForecastServer(
+    srv = BucketDispatcher(
         f.config, f.params_, length_buckets=(32, 64), batch_buckets=(1, 4))
     long_y = _series(100, seed=1)
     out = srv.forecast_batch([ForecastRequest(y=long_y)])

@@ -4,8 +4,8 @@ import numpy as np
 import pytest
 
 from repro.forecast import (
-    BatchedForecastServer, ESRNNForecaster, ForecastRequest, get_smoke_spec,
-    synthetic_request_stream,
+    BatchedForecastServer, BucketDispatcher, ESRNNForecaster, ForecastRequest,
+    get_smoke_spec, synthetic_request_stream,
 )
 
 
@@ -13,7 +13,7 @@ from repro.forecast import (
 def server():
     f = ESRNNForecaster(get_smoke_spec("esrnn-quarterly", data_seed=5))
     f.fit(n_steps=3)
-    srv = BatchedForecastServer(
+    srv = BucketDispatcher(
         f.config, f.params_,
         length_buckets=(32, 64, 128), batch_buckets=(1, 4, 16))
     return f, srv
@@ -45,11 +45,11 @@ def test_jit_cache_reuse_across_waves(server):
 def test_length_bucketing_pads_and_trims():
     f = ESRNNForecaster(get_smoke_spec("esrnn-quarterly"))
     f.init_params(4)
-    srv = BatchedForecastServer(
+    srv = BucketDispatcher(
         f.config, f.params_, length_buckets=(32, 64), batch_buckets=(1, 4))
-    short = srv._shape_history(np.full(20, 7.0, np.float32), 32)
+    short = srv.shape_history(np.full(20, 7.0, np.float32), 32)
     assert short.shape == (32,) and (short[:12] == 7.0).all()  # left-pad
-    long = srv._shape_history(np.arange(1, 101, dtype=np.float32), 64)
+    long = srv.shape_history(np.arange(1, 101, dtype=np.float32), 64)
     assert long.shape == (64,) and long[-1] == 100.0           # keep recent
 
 
@@ -93,7 +93,7 @@ def test_hw_table_is_host_resident(server):
     f, srv = server
     leaves = jax.tree_util.tree_leaves(srv._hw_table)
     assert leaves and all(isinstance(a, np.ndarray) for a in leaves)
-    rows = srv._hw_rows([ForecastRequest(y=np.ones(40, np.float32),
+    rows = srv.hw_rows([ForecastRequest(y=np.ones(40, np.float32),
                                          series_id=0),
                          ForecastRequest(y=np.ones(40, np.float32),
                                          series_id=None)])
@@ -113,9 +113,9 @@ def test_one_device_mesh_degenerates_to_single_device(server):
     from repro.sharding.series import make_series_mesh
 
     f, _ = server
-    srv_plain = BatchedForecastServer(
+    srv_plain = BucketDispatcher(
         f.config, f.params_, length_buckets=(32, 64), batch_buckets=(1, 4))
-    srv_mesh = BatchedForecastServer(
+    srv_mesh = BucketDispatcher(
         f.config, f.params_, length_buckets=(32, 64), batch_buckets=(1, 4),
         mesh=make_series_mesh(1))
     assert srv_mesh.mesh is None
@@ -129,10 +129,23 @@ def test_max_batch_clamped_to_largest_bucket():
     """max_batch beyond the bucket grid must not produce oversized chunks."""
     f = ESRNNForecaster(get_smoke_spec("esrnn-quarterly"))
     f.init_params(4)
-    srv = BatchedForecastServer(
+    srv = BucketDispatcher(
         f.config, f.params_, length_buckets=(32,), batch_buckets=(1, 4),
         max_batch=16)
     assert srv.max_batch == 4
     out = srv.forecast_batch(synthetic_request_stream(f.config, 10, seed=0))
     assert len(out) == 10 and all(np.isfinite(o).all() for o in out)
     assert srv.stats.padded_series >= 0
+
+
+def test_batched_server_wrapper_deprecated_but_working(server):
+    """The legacy wrapper warns once at construction and still serves."""
+    f, _ = server
+    with pytest.warns(DeprecationWarning, match="ForecastServer"):
+        srv = BatchedForecastServer(
+            f.config, f.params_, length_buckets=(32, 64),
+            batch_buckets=(1, 4))
+    reqs = synthetic_request_stream(f.config, 5, n_known=f.n_series_, seed=3)
+    out = srv.forecast_batch(reqs)
+    assert len(out) == 5 and all(np.isfinite(o).all() for o in out)
+    assert srv.stats.requests == 5

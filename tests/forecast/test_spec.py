@@ -68,3 +68,48 @@ def test_specs_are_frozen_and_hashable():
 def test_dict_roundtrip():
     spec = get_spec("esrnn-hourly", n_steps=11)
     assert ForecastSpec.from_dict(spec.to_dict()) == spec
+
+
+# ---------------------------------------------------------------------------
+# Pluggable heads in the registry
+# ---------------------------------------------------------------------------
+
+
+def test_registry_has_a_family_per_head():
+    names = list_specs()
+    for freq in PRESETS:
+        assert f"esn-{freq}" in names and f"ssm-{freq}" in names
+
+
+def test_head_prefixed_names_resolve():
+    s = get_spec("esn-quarterly")
+    assert s.name == "esn-quarterly" and s.model.head == "esn"
+    assert s.frequency == "quarterly" and s.horizon == 8
+    assert get_spec("ssm-hourly").model.head == "ssm"
+
+
+def test_head_override_equals_head_prefixed_name():
+    assert get_spec("esrnn-quarterly", head="esn") == get_spec("esn-quarterly")
+
+
+def test_unknown_head_override_raises():
+    with pytest.raises(KeyError, match="available heads"):
+        get_spec("esrnn-quarterly", head="tcn")
+
+
+def test_typo_override_error_names_valid_fields():
+    """A typo like hiden_size must fail loudly, naming the real fields --
+    never be silently dropped into a default-width model."""
+    with pytest.raises(TypeError) as exc:
+        get_spec("esrnn-quarterly", hiden_size=64)
+    msg = str(exc.value)
+    assert "hiden_size" in msg
+    assert "hidden_size" in msg          # the model field the user meant
+    assert "n_steps" in msg              # spec fields are listed too
+    assert "head" in msg
+
+
+def test_head_spec_dict_roundtrip():
+    spec = get_spec("esn-monthly", n_steps=9)
+    back = ForecastSpec.from_dict(spec.to_dict())
+    assert back == spec and back.model.head == "esn"
