@@ -4,17 +4,18 @@
 sustained-load serving benchmark, the pluggable-head comparison and the
 roofline report, printing ``name,us_per_call,derived`` CSV lines plus the
 human-readable tables, and saving JSON under experiments/bench/. It also
-writes the repo-root ``BENCH_PR7.json`` trajectory point (speedup through
+writes the repo-root ``BENCH_PR8.json`` trajectory point (speedup through
 the public estimator, the ``use_pallas`` train-step timing column, the
 fused-engine ``scan_steps`` steps/sec column, the sharded-vs-single
 ``predict_path`` series/sec column, the continuous-batching ``serve_load``
 sustained-load column -- p50/p99 latency + series/sec for >= 2 queue
 configurations vs the batch-1 baseline -- the ``head_compare`` table (fit
 wall-clock + sMAPE/MASE/OWA per registered head at equal steps on the same
-split), sMAPE, device sweep, git sha) that CI archives as an artifact --
-the perf record the next regression gets compared against
-(``BENCH_PR2.json``..``BENCH_PR6.json`` are the prior points, kept for
-comparison).
+split), the ``analysis`` column (graph-auditor metrics: true XLA compile
+counts vs budget, collective counts, aliased-buffer counts), sMAPE, device
+sweep, git sha) that CI archives as an artifact -- the perf record the next
+regression gets compared against (``BENCH_PR2.json``..``BENCH_PR7.json``
+are the prior points, kept for comparison).
 """
 
 import argparse
@@ -24,7 +25,7 @@ import subprocess
 import time
 
 BENCH_TRAJECTORY = os.path.join(
-    os.path.dirname(__file__), "..", "BENCH_PR7.json")
+    os.path.dirname(__file__), "..", "BENCH_PR8.json")
 
 
 def _git_sha() -> str:
@@ -37,12 +38,34 @@ def _git_sha() -> str:
         return "unknown"
 
 
-def write_trajectory(t5, t4, serve, heads) -> str:
-    """BENCH_PR7.json: the machine-readable perf point CI archives."""
+def analysis_column() -> dict:
+    """Graph-auditor metrics for the trajectory's ``analysis`` column.
+
+    Runs the full invariant audit (``repro.analysis.run_audit``) on the esn
+    smoke spec -- the head with a frozen group, so the gradient-leak lint is
+    load-bearing -- including the partitioned-HLO collective audit. The
+    column records the proof metrics (true XLA compile counts vs the bucket
+    budget, collective counts, aliased-buffer counts) next to the perf
+    numbers they protect; CI gates ``ok`` == true.
+    """
+    from repro.analysis import run_audit
+    from repro.forecast.spec import get_smoke_spec
+
+    report = run_audit(get_smoke_spec("esn-quarterly"),
+                       entries=("fit", "predict", "serve", "collectives"))
+    return {
+        "ok": report.ok,
+        "violations_total": len(report.violations),
+        "sections": {s.name: s.metrics for s in report.sections},
+    }
+
+
+def write_trajectory(t5, t4, serve, heads, analysis) -> str:
+    """BENCH_PR8.json: the machine-readable perf point CI archives."""
     import jax
 
     payload = {
-        "bench": "PR7",
+        "bench": "PR8",
         "git_sha": _git_sha(),
         "devices": len(jax.devices()),
         "speedup_vectorized_vs_loop": t5["estimator_path"]["speedup"],
@@ -68,6 +91,10 @@ def write_trajectory(t5, t4, serve, heads) -> str:
         # (CI gates: every head's OWA finite, lstm's OWA no worse than the
         # PR6 record, esn's fit wall-clock under lstm's at equal steps)
         "head_compare": heads,
+        # graph-auditor column: the invariant metrics behind the perf
+        # numbers above (compile counts vs budget, collective counts,
+        # aliased-buffer counts; CI gates analysis.ok == true)
+        "analysis": analysis,
         "smape_quarterly": t4["per_frequency"]["quarterly"]["esrnn"]["smape"],
         "owa_quarterly": t4["per_frequency"]["quarterly"]["esrnn"]["owa"],
         "device_sweep": t5["device_sweep"],
@@ -178,11 +205,21 @@ def main() -> None:
     print("\n== Roofline (from dry-run artifacts) ==")
     roofline_report.main()
 
+    t0 = time.perf_counter()
+    an = analysis_column()
+    dt = time.perf_counter() - t0
+    csv.append(("graph_audit", dt * 1e6,
+                f"violations={an['violations_total']}"))
+    print("\n== Graph audit (static invariant lints) ==")
+    for name, m in an["sections"].items():
+        print(f"  {name:12s} {m}")
+    print(f"  ok={an['ok']} violations={an['violations_total']}")
+
     print("\nname,us_per_call,derived")
     for name, us, derived in csv:
         print(f"{name},{us:.0f},{derived}")
 
-    print("\nwrote", write_trajectory(t5, t4, sv, hc))
+    print("\nwrote", write_trajectory(t5, t4, sv, hc, an))
 
 
 if __name__ == "__main__":

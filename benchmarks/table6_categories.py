@@ -3,7 +3,6 @@
 from __future__ import annotations
 
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import save_result, train_frequency
 from repro.core import losses as L

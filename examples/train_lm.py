@@ -9,7 +9,6 @@ watchdog -- on whatever devices this host has.
 """
 
 import argparse
-import dataclasses
 import logging
 
 from repro.models.config import ArchConfig

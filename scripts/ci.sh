@@ -8,6 +8,13 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 
+echo "== ruff lint (if installed) =="
+if command -v ruff > /dev/null 2>&1; then
+    ruff check .
+else
+    echo "ruff not installed locally; CI's lint job enforces it"
+fi
+
 echo "== tier-1 tests =="
 python -m pytest -x -q
 
@@ -41,5 +48,9 @@ EOF
 
 echo "== rolling-origin backtest smoke =="
 python -m repro.launch.forecast backtest --smoke --steps 3 --origins 60,72,80
+
+echo "== graph-audit smoke (jaxpr/HLO invariant lints, zero violations) =="
+python -m repro.launch.forecast analyze --smoke --set head=esn \
+    --entries fit,predict,serve
 
 echo "CI OK"

@@ -1,0 +1,231 @@
+"""The graph auditor: run every static invariant lint on the real entry
+points and produce one machine-readable report.
+
+Five invariants, one per lint module, audited per commit by CI:
+
+1. **recompile sentinel** (``repro.analysis.recompile``) -- serving stays
+   within its declared bucket-grid compile budget and a warm second wave
+   compiles nothing (the PR-6 ``fc[:n]`` unbounded-compile-family class),
+2. **gradient leak** (``repro.analysis.gradleak``) -- frozen param groups
+   (the esn reservoir) contribute zero gradient primitives to the training
+   step jaxpr,
+3. **donation** (``repro.analysis.donation``) -- the donated superstep's
+   ``(params, opt_state)`` buffers actually alias input->output in the
+   compiled module (no donated-but-copied),
+4. **collectives** (``repro.analysis.collectives``) -- partitioned sharded
+   predict contains zero collectives; the sharded loss gradient contains
+   the expected psums and only psums,
+5. **dtype policy** (``repro.analysis.dtypes``) -- no f64 promotion or
+   above-policy float upcast anywhere in the forward/loss/step programs.
+
+``repro.launch.forecast analyze`` is the CLI over :func:`run_audit`; the
+report's ``metrics`` (compile counts, collective counts, aliased-buffer
+counts) also land as the ``analysis`` column of the benchmark trajectory
+(``BENCH_PR8.json``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.analysis.collectives import (
+    collective_audit, collective_findings, probe_batch,
+)
+from repro.analysis.donation import donated_leaf_count, donation_findings
+from repro.analysis.dtypes import dtype_findings
+from repro.analysis.gradleak import (
+    Finding, gradient_leak_findings, probe_batch_size,
+)
+
+PROBE_SERIES = 15     # probe table rows (odd, clear of weight dims)
+PROBE_STEPS = 4       # superstep length for the donation audit
+
+
+@dataclasses.dataclass
+class AuditSection:
+    """One audited entry point: its violations and raw metrics."""
+
+    name: str
+    violations: List[Finding]
+    metrics: Dict
+
+    def to_dict(self):
+        return {"name": self.name,
+                "violations": [f.to_dict() for f in self.violations],
+                "metrics": self.metrics}
+
+
+@dataclasses.dataclass
+class AuditReport:
+    """Everything ``analyze`` emits: per-section findings + metrics."""
+
+    spec: str
+    sections: List[AuditSection]
+
+    @property
+    def violations(self) -> List[Finding]:
+        return [f for s in self.sections for f in s.violations]
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations
+
+    def to_dict(self):
+        return {"spec": self.spec, "ok": self.ok,
+                "violations_total": len(self.violations),
+                "sections": [s.to_dict() for s in self.sections]}
+
+    def to_json(self, indent: int = 1) -> str:
+        return json.dumps(self.to_dict(), indent=indent)
+
+
+def _probe_model(spec):
+    import jax
+
+    from repro.core.esrnn import esrnn_init
+
+    cfg = spec.model
+    y, cats = probe_batch(cfg, PROBE_SERIES)
+    params = esrnn_init(jax.random.PRNGKey(0), cfg, PROBE_SERIES)
+    return cfg, params, y, cats
+
+
+def audit_fit(spec) -> AuditSection:
+    """Gradient-leak + donation + dtype lints on the real training step."""
+    import jax.numpy as jnp
+
+    from repro.core.heads import frozen_param_groups
+    from repro.train.engine import (
+        lower_superstep, make_step_fn, split_frozen,
+    )
+    from repro.train.optimizer import AdamConfig, adam_init
+
+    cfg, params, y, cats = _probe_model(spec)
+    frozen = frozen_param_groups(cfg)
+    mask = jnp.ones(y.shape, jnp.float32)
+    step = make_step_fn(cfg, AdamConfig(lr=spec.rnn_lr), jnp.asarray(y),
+                        jnp.asarray(cats), mask, frozen=frozen)
+    opt = adam_init(split_frozen(params, frozen)[0])
+    b = probe_batch_size(cfg, params, frozen=frozen)
+    idx = jnp.arange(b) % PROBE_SERIES
+
+    violations: List[Finding] = []
+    leak, leak_metrics = gradient_leak_findings(step, params, opt, idx, frozen)
+    violations += leak
+
+    import jax
+
+    step_jaxpr = jax.make_jaxpr(step)(params, opt, idx)
+    dt, dt_metrics = dtype_findings(step_jaxpr, policy_dtype=cfg.dtype)
+    violations += dt
+
+    sched = jnp.stack([(jnp.arange(b) + k) % PROBE_SERIES
+                       for k in range(PROBE_STEPS)])
+    compiled = lower_superstep(step, params, opt, sched).compile()
+    don, don_metrics = donation_findings(
+        compiled, donated_leaf_count(params, opt), what="superstep")
+    violations += don
+
+    return AuditSection("fit", violations, {
+        "head": cfg.head, "frozen_groups": sorted(frozen),
+        "gradient_leak": leak_metrics, "dtype": dt_metrics,
+        "donation": don_metrics})
+
+
+def audit_predict(spec) -> AuditSection:
+    """Dtype lint over the forward forecast program."""
+    import jax
+
+    from repro.core.esrnn import esrnn_forecast_fn
+
+    cfg, params, y, cats = _probe_model(spec)
+    jaxpr = jax.make_jaxpr(
+        lambda p, yy, cc: esrnn_forecast_fn(cfg, p, yy, cc))(params, y, cats)
+    findings, metrics = dtype_findings(jaxpr, policy_dtype=cfg.dtype)
+    return AuditSection("predict", findings, {"dtype": metrics})
+
+
+def audit_serve(spec, *, waves: int = 2, requests: int = 24) -> AuditSection:
+    """Recompile sentinel on the real serving dispatcher.
+
+    Drives ``waves`` identical request waves through a
+    :class:`~repro.forecast.serving.BucketDispatcher` on a small bucket
+    grid. Violations: total XLA compiles over the declared budget, or any
+    compile at all on the warm second wave (every shape must be a cache
+    hit by then -- the ``fc[:n]`` family fails exactly this).
+    """
+    from repro.forecast.serving import (
+        BucketDispatcher, synthetic_request_stream,
+    )
+
+    cfg, params, _, _ = _probe_model(spec)
+    srv = BucketDispatcher(cfg, params,
+                           length_buckets=(32, 64), batch_buckets=(1, 8))
+    budget = srv.compile_budget
+    violations: List[Finding] = []
+    wave_compiles = []
+    for w in range(waves):
+        before = srv.stats.xla_compiles
+        reqs = synthetic_request_stream(
+            cfg, requests, n_known=PROBE_SERIES, seed=0,
+            len_range=(20, 60))
+        out = srv.forecast_batch(reqs)
+        assert all(np.isfinite(o).all() for o in out)
+        wave_compiles.append(srv.stats.xla_compiles - before)
+    if srv.stats.xla_compiles > budget:
+        violations.append(Finding(
+            "recompile",
+            f"serving compiled {srv.stats.xla_compiles} XLA executables "
+            f"over {waves} waves, above the declared bucket-grid budget "
+            f"of {budget}"))
+    if waves > 1 and wave_compiles[-1] > 0:
+        violations.append(Finding(
+            "recompile",
+            f"warm wave still compiled {wave_compiles[-1]} executables: "
+            f"an unbounded compile family on the serving hot path"))
+    return AuditSection("serve", violations, {
+        "compile_budget": budget,
+        "xla_compiles": srv.stats.xla_compiles,
+        "bucket_compiles": srv.stats.compiles,
+        "cache_hits": srv.stats.cache_hits,
+        "wave_xla_compiles": wave_compiles})
+
+
+def audit_collectives(spec, devices: int = 8) -> AuditSection:
+    """Zero-collective predict / psum-only loss grad on a series mesh."""
+    counts = collective_audit(spec.model, devices=devices)
+    findings, metrics = collective_findings(counts)
+    return AuditSection("collectives", findings,
+                        {**metrics, "counts": counts})
+
+
+_ENTRY_POINTS = {
+    "fit": audit_fit,
+    "predict": audit_predict,
+    "serve": audit_serve,
+}
+
+
+def run_audit(spec, entries: Sequence[str] = ("fit", "predict", "serve"),
+              devices: Optional[int] = None) -> AuditReport:
+    """Audit the requested entry points of one :class:`ForecastSpec`.
+
+    ``devices`` > 1 adds the partitioned-HLO collective audit (subprocess
+    with forced host devices when this process has fewer).
+    """
+    sections = []
+    for name in entries:
+        if name == "collectives":
+            continue  # handled below, needs the device count
+        if name not in _ENTRY_POINTS:
+            raise ValueError(
+                f"unknown audit entry point {name!r}; "
+                f"pick from {sorted(_ENTRY_POINTS)} + ['collectives']")
+        sections.append(_ENTRY_POINTS[name](spec))
+    if (devices and devices > 1) or "collectives" in entries:
+        sections.append(audit_collectives(spec, devices=devices or 8))
+    return AuditReport(spec.name, sections)

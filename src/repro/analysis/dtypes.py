@@ -1,0 +1,84 @@
+"""Dtype-policy lint: no f64 promotions or silent upcasts on the hot paths.
+
+The forward core computes in the config's declared dtype (``float32`` today;
+the ROADMAP's mixed-precision item makes ``bfloat16`` the next policy). Two
+regression classes this lint catches statically, on the traced jaxpr:
+
+* **f64 promotion** -- a stray ``float(...)``/numpy-f64 constant with x64
+  enabled doubles every downstream buffer and silently halves throughput;
+  no float64 abstract value may appear anywhere in the program.
+* **silent upcast** -- a ``convert_element_type`` from a float dtype to a
+  *wider* float than the policy allows means some op fell off the
+  declared-precision path (under a bf16 policy, an f32 convert is exactly
+  the "silent upcast to f32" failure mode mixed-precision work hunts).
+
+Integer/bool values are exempt (indices and masks are supposed to be exact),
+as are converts *down* to or within the policy width.
+"""
+
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.gradleak import Finding
+from repro.analysis.jaxpr_walk import iter_eqns
+
+
+def _is_float(dtype) -> bool:
+    # jnp.issubdtype, not np: bfloat16/f8 are ml_dtypes extension types
+    # that plain numpy does not classify as floating
+    return jnp.issubdtype(jnp.dtype(dtype), jnp.floating)
+
+
+def dtype_findings(jaxpr, policy_dtype="float32") -> Tuple[List[Finding], dict]:
+    """Lint one (Closed)Jaxpr against a float compute policy.
+
+    Flags every float64 aval and every float->float ``convert_element_type``
+    whose destination is wider than ``policy_dtype``. Returns
+    ``(findings, metrics)``; findings are deduplicated by (primitive, dtype
+    pair) so a single leaked constant does not produce hundreds of lines.
+    """
+    policy = jnp.dtype(policy_dtype)
+    findings: List[Finding] = []
+    seen = set()
+    f64_avals = 0
+    upcasts = 0
+    eqns = 0
+    for eqn in iter_eqns(jaxpr):
+        eqns += 1
+        for v in eqn.outvars:
+            dt = getattr(v.aval, "dtype", None)
+            if dt is None:
+                continue
+            if _is_float(dt) and jnp.dtype(dt) == np.float64:
+                f64_avals += 1
+                key = ("f64", eqn.primitive.name)
+                if key not in seen:
+                    seen.add(key)
+                    findings.append(Finding(
+                        "dtype-policy",
+                        f"float64 value produced by `{eqn.primitive.name}` "
+                        f"(shape {tuple(v.aval.shape)}): f64 promotion on a "
+                        f"{policy.name}-policy path"))
+        if eqn.primitive.name == "convert_element_type":
+            src = getattr(eqn.invars[0].aval, "dtype", None)
+            dst = eqn.params.get("new_dtype")
+            if (src is not None and dst is not None and _is_float(src)
+                    and _is_float(dst)
+                    and jnp.dtype(dst).itemsize > policy.itemsize):
+                upcasts += 1
+                key = ("upcast", str(src), str(jnp.dtype(dst)))
+                if key not in seen:
+                    seen.add(key)
+                    findings.append(Finding(
+                        "dtype-policy",
+                        f"silent upcast {jnp.dtype(src).name} -> "
+                        f"{jnp.dtype(dst).name} beyond the {policy.name} "
+                        f"policy"))
+    metrics = {"eqns_scanned": eqns, "f64_avals": f64_avals,
+               "float_upcasts": upcasts,
+               "policy_dtype": str(jnp.dtype(policy_dtype))}
+    return findings, metrics

@@ -1,0 +1,118 @@
+"""Shared HLO-text parsing helpers: shapes, collectives, aliasing.
+
+One home for the regexes that read compiled/partitioned HLO text, shared by
+the roofline extractors (``repro.roofline.analysis`` /
+``repro.roofline.hlo_walk``) and the graph auditor's collective and donation
+lints (``repro.analysis.collectives`` / ``repro.analysis.donation``) -- the
+two subsystems must never disagree about what counts as a collective or how
+a shape string turns into bytes.
+
+Everything here is pure text processing over ``compiled.as_text()`` output;
+no jax import, so the roofline modules stay importable without a backend.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Tuple
+
+# bytes per element for every HLO scalar type the repo's programs produce
+DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+# "f32[8,40]" / "pred[]" inside any HLO type string (tuples included)
+SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+
+# every cross-device collective opcode XLA emits for this repo's programs
+COLLECTIVE_KINDS = ("all-reduce", "all-gather", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+# "<type> all-reduce(" / "all-reduce-start(" at an op position; the async
+# "-done(" halves are deliberately NOT matched (counting both would double)
+_COLLECTIVE_OP_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9\[\]{},:#\* ]+?)\s+"
+    r"(" + "|".join(COLLECTIVE_KINDS) + r")"
+    r"(?:-start)?\(")
+
+# module-header input/output aliasing entries, inside the balanced block
+#   input_output_alias={ {0}: (0, {}, may-alias), {1}: (1, {}) }
+_ALIAS_ENTRY_RE = re.compile(r"\{([0-9, ]*)\}:\s*\((\d+),")
+
+
+def type_bytes(type_str: str) -> int:
+    """Total bytes of every shaped value in an HLO type string."""
+    total = 0
+    for dtype, dims in SHAPE_RE.findall(type_str):
+        if dtype not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_ops(hlo_text: str) -> List[Tuple[str, str]]:
+    """All collective ops in the module as ``(kind, output_type)`` pairs.
+
+    Async pairs count once (the ``-start`` op; ``-done`` never matches), so
+    ``len(collective_ops(text))`` is the number of collectives the program
+    executes per dispatch, and an empty list is the zero-collective proof
+    the sharded-predict audit gates on.
+    """
+    return [(m.group(2), m.group(1))
+            for m in _COLLECTIVE_OP_RE.finditer(hlo_text)]
+
+
+def collective_counts(hlo_text: str) -> Dict[str, int]:
+    """Collective op counts by kind (``{}`` for a collective-free program)."""
+    out: Dict[str, int] = {}
+    for kind, _ in collective_ops(hlo_text):
+        out[kind] = out.get(kind, 0) + 1
+    return out
+
+
+def collective_bytes_by_kind(hlo_text: str) -> Dict[str, int]:
+    """Sum of collective *output bytes* by kind (roofline's ICI term)."""
+    out: Dict[str, int] = {}
+    for kind, type_str in collective_ops(hlo_text):
+        out[kind] = out.get(kind, 0) + type_bytes(type_str)
+    return out
+
+
+def input_output_aliases(hlo_text: str) -> List[Tuple[Tuple[int, ...], int]]:
+    """Parsed module-header aliasing: ``[(output_index, parameter_number)]``.
+
+    The compiled module records which output buffers alias (reuse) which
+    input buffers -- this is what ``donate_argnums`` buys when XLA actually
+    honors it. A donated-but-copied buffer simply has no entry here, which
+    is what the donation audit (``repro.analysis.donation``) detects.
+    Only the module header is consulted (the attribute also never appears
+    elsewhere in ``as_text()`` output).
+    """
+    header = hlo_text.split("\n", 1)[0]
+    start = header.find("input_output_alias={")
+    if start < 0:
+        return []
+    # the attribute value nests braces ({0}: (0, {}, ...)); walk to balance
+    i = header.index("{", start)
+    depth, j = 0, i
+    for j in range(i, len(header)):
+        if header[j] == "{":
+            depth += 1
+        elif header[j] == "}":
+            depth -= 1
+            if depth == 0:
+                break
+    block = header[i:j + 1]
+    out = []
+    for idx_str, param_str in _ALIAS_ENTRY_RE.findall(block):
+        idx = tuple(int(t) for t in idx_str.split(",") if t.strip())
+        out.append((idx, int(param_str)))
+    return out

@@ -293,7 +293,6 @@ def hw_forecast(
     beyond T+m tile the last season cyclically (how ESRNN-GPU extends them).
     """
     m = max(seasonality, 1)
-    n = levels.shape[0]
     last_level = levels[:, -1]                      # (N,)
     last_season = seas[:, -m:]                      # (N, m)
     reps = -(-horizon // m)

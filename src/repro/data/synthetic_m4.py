@@ -18,7 +18,7 @@ signal, as in the real M4.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List
+from typing import List
 
 import numpy as np
 

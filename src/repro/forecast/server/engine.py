@@ -66,6 +66,9 @@ class ServerConfig:
     max_batch: Optional[int] = None   # per-dispatch cap (None: largest bucket)
     history_cap: Optional[int] = None  # online store tail (None: largest
                                        # length bucket -- what forecasts use)
+    compile_budget: Optional[int] = None  # declared XLA-compile bound for
+                                       # the recompile sentinel (None:
+                                       # length x batch bucket-grid size)
     # idle fine-tune hook (0 steps = off)
     finetune_steps: int = 0
     finetune_batch: int = 32
@@ -136,7 +139,8 @@ class ForecastServer:
         self.dispatcher = BucketDispatcher(
             config, params, length_buckets=length_buckets,
             batch_buckets=batch_buckets, max_batch=sc.max_batch,
-            mesh=mesh, stats=self.stats)
+            mesh=mesh, stats=self.stats,
+            compile_budget=sc.compile_budget)
         cap = (sc.history_cap if sc.history_cap is not None
                else self.dispatcher.length_buckets[-1])
         self.store = OnlineStateStore(
@@ -212,6 +216,19 @@ class ForecastServer:
         if self._thread is None:
             self.drain()
         return [f.result() for f in futs]
+
+    def check_compile_budget(self) -> int:
+        """Assert true XLA compiles stayed within the declared bucket budget.
+
+        Raises :class:`repro.analysis.CompileBudgetExceeded` when serving
+        compiled more executables than the bucket grid allows (the PR-6
+        ``fc[:n]`` bug class); returns the compile count otherwise. Ops
+        runbooks call this after a soak; the graph auditor calls the same
+        check in CI.
+        """
+        from repro.analysis.recompile import check_compile_budget
+
+        return check_compile_budget(self.stats)
 
     # -- scheduler -----------------------------------------------------------
 

@@ -64,6 +64,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.recompile import CompileCounter
 from repro.core.esrnn import ESRNNConfig, esrnn_forecast, esrnn_init
 
 log = logging.getLogger("repro.forecast.serving")
@@ -99,7 +100,14 @@ class ServeStats:
 
     requests: int = 0
     batches: int = 0
-    compiles: int = 0
+    compiles: int = 0                # bucket-grid shapes the dispatcher
+                                     # intended to compile
+    xla_compiles: int = 0            # backend compiles XLA actually ran
+                                     # while a dispatch was armed (ground
+                                     # truth; catches compiles the bucket
+                                     # accounting cannot see)
+    compile_budget: Optional[int] = None  # declared bound: len(length
+                                     # buckets) x len(batch buckets)
     cache_hits: int = 0
     padded_series: int = 0           # batch-padding rows added (wasted lanes)
     truncated_series: int = 0        # histories longer than the largest
@@ -135,6 +143,8 @@ class ServeStats:
         jit cache itself survives -- only the telemetry resets).
         """
         self.requests = self.batches = self.compiles = self.cache_hits = 0
+        self.xla_compiles = 0        # compile_budget survives: it is a
+                                     # declaration, not a counter
         self.padded_series = self.truncated_series = 0
         self.observes = self.write_batches = self.finetunes = 0
         self.queue_depth = self.queue_peak = 0
@@ -190,6 +200,7 @@ class BucketDispatcher:
         max_batch: Optional[int] = None,
         mesh=None,
         stats: Optional[ServeStats] = None,
+        compile_budget: Optional[int] = None,
     ):
         self.config = config
         self.mesh = mesh if mesh is not None and mesh.devices.size > 1 else None
@@ -207,6 +218,13 @@ class BucketDispatcher:
         self.max_batch = min(max_batch or self.batch_buckets[-1],
                              self.batch_buckets[-1])
         self.stats = stats if stats is not None else ServeStats()
+        # the declared jit-cache bound the recompile sentinel audits against;
+        # ServeStats.xla_compiles counts what XLA actually did while armed
+        self.compile_budget = (
+            compile_budget if compile_budget is not None
+            else len(self.length_buckets) * len(self.batch_buckets))
+        self.stats.compile_budget = self.compile_budget
+        self._xla_counter = CompileCounter(stats=self.stats)
         self._seen_shapes = set()
         self._warned_truncation = False
         self.set_params(params)
@@ -318,13 +336,19 @@ class BucketDispatcher:
         else:
             self._seen_shapes.add(shape)
             self.stats.compiles += 1
-        fc = self._forecast(params, jnp.asarray(y), jnp.asarray(cats))
-        self.stats.batches += 1
-        # strip the batch padding on the HOST copy: fc[:n] on the device
-        # array is a jitted slice op that XLA compiles once per distinct
-        # partial fill n -- an unbounded compile family (~tens of ms each)
-        # on the latency path. Transferring the padded rows is a few KB.
-        return np.asarray(fc)[:n]
+        # armed sentinel: every backend compile XLA runs inside this block
+        # lands in ServeStats.xla_compiles, including ones the bucket
+        # accounting above cannot see (the fc[:n] slice family was exactly
+        # such an invisible compile per distinct partial fill)
+        with self._xla_counter:
+            fc = self._forecast(params, jnp.asarray(y), jnp.asarray(cats))
+            self.stats.batches += 1
+            # strip the batch padding on the HOST copy: fc[:n] on the device
+            # array is a jitted slice op that XLA compiles once per distinct
+            # partial fill n -- an unbounded compile family (~tens of ms
+            # each) on the latency path. Transferring padded rows is cheap.
+            out = np.asarray(fc)[:n]
+        return out
 
     def forecast_batch(
         self, requests: Sequence[ForecastRequest]
@@ -424,6 +448,10 @@ class BatchedForecastServer:
     @property
     def max_batch(self):
         return self._dispatch.max_batch
+
+    @property
+    def compile_budget(self):
+        return self._dispatch.compile_budget
 
     @property
     def n_known(self):

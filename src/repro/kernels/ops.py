@@ -14,7 +14,6 @@ whose transposes JAX derives, and pad lanes are gradient-isolated
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

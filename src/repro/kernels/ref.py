@@ -18,7 +18,6 @@ def hw_scan_ref(y, alpha, gamma, init_seas):
     Returns levels (N, T), seas (N, T+M)  [seas[:, t] = s_t applied to y_t].
     """
     n, t_len = y.shape
-    m = init_seas.shape[1]
     l0 = y[:, 0] / init_seas[:, 0]
 
     def step(carry, y_t):

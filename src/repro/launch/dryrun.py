@@ -24,7 +24,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.configs import SHAPES, ShapeCell, all_cells, cell_applicable, get_config
+from repro.configs import SHAPES, all_cells, cell_applicable, get_config
 from repro.launch import steps
 from repro.launch.mesh import make_production_mesh
 from repro.models.model import build_model

@@ -6,6 +6,7 @@
     PYTHONPATH=src python -m repro.launch.forecast eval     --spec esrnn-quarterly --smoke
     PYTHONPATH=src python -m repro.launch.forecast backtest --dir /tmp/fq --origins 72,80
     PYTHONPATH=src python -m repro.launch.forecast serve    --smoke --requests 64
+    PYTHONPATH=src python -m repro.launch.forecast analyze  --smoke --set head=esn
     echo '{"op":"observe","series_id":0,"y":105.2}' | \\
         PYTHONPATH=src python -m repro.launch.forecast observe --smoke
 
@@ -24,6 +25,14 @@ percentiles, throughput and jit-cache reuse, mirroring the prefill/decode
 serving loop of ``repro.launch.serve``; ``observe`` drives the same server
 as a scripted JSONL op loop over stdin (online ``observe`` ingestion +
 read-your-writes forecasts + stats).
+
+``analyze`` runs the graph auditor (``repro.analysis``): five static
+invariant lints -- recompile sentinel, gradient leak, donation, collectives,
+dtype policy -- over the jaxprs and compiled HLO of the real fit / predict /
+serve entry points, printed as a JSON report; the exit code is the number
+of violations clamped to 1, so CI gates on it directly. ``--entries``
+picks the audited surfaces; add ``collectives`` (or pass ``--devices N``)
+for the partitioned-HLO collective audit.
 
 ``backtest`` is the rolling-origin protocol: forecast at each ``--origins``
 observation count as if the rest of the series were unseen, scored
@@ -307,6 +316,28 @@ def cmd_observe(args):
     return 0
 
 
+def cmd_analyze(args):
+    """Graph auditor: JSON report of all invariant lints on this spec."""
+    import json
+
+    from repro.analysis import run_audit
+
+    over = _parse_overrides(args.set)
+    spec = (get_smoke_spec(args.spec, **over) if args.smoke
+            else get_spec(args.spec, **over))
+    entries = tuple(e.strip() for e in args.entries.split(",") if e.strip())
+    report = run_audit(spec, entries=entries, devices=args.devices)
+    text = json.dumps(report.to_dict(), indent=2)
+    if args.json_out:
+        with open(args.json_out, "w") as fh:
+            fh.write(text + "\n")
+        log.info("report written to %s", args.json_out)
+    print(text)
+    for f in report.violations:
+        log.error("violation [%s]: %s", f.lint, f.message)
+    return 0 if report.ok else 1
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(
         prog="repro.launch.forecast",
@@ -388,6 +419,19 @@ def main(argv=None):
     p_srv.add_argument("--max-wait-ms", type=float, default=5.0,
                        help="max hold before a partial bucket dispatches")
     p_srv.set_defaults(fn=cmd_serve)
+
+    p_an = sub.add_parser(
+        "analyze",
+        help="graph auditor: static invariant lints (recompiles, gradient "
+             "leaks, donation, collectives, dtype policy) over the compiled "
+             "fit/predict/serve programs; exits nonzero on any violation")
+    common(p_an)
+    p_an.add_argument("--entries", default="fit,predict,serve",
+                      help="comma list from fit,predict,serve,collectives "
+                           "(collectives also implied by --devices N > 1)")
+    p_an.add_argument("--json-out", metavar="PATH",
+                      help="also write the JSON report to PATH")
+    p_an.set_defaults(fn=cmd_analyze)
 
     p_obs = sub.add_parser(
         "observe",

@@ -9,9 +9,7 @@ FSDP all-gathers then move bf16, half the bytes).
 
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp

@@ -73,7 +73,6 @@ def encode(cfg: ArchConfig, params, frames, *, use_pallas=False, remat=False):
     h = frames.astype(cfg.jdtype)
     h = h + _sinusoid(jnp.arange(h.shape[1])[None, :], cfg.d_model).astype(h.dtype)
     h = constrain(h, "dp", None, None)
-    positions = jnp.arange(h.shape[1])[None, :]
 
     def one(h, lp):
         x = apply_norm(h, lp["attn_norm"], "layernorm")

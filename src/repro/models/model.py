@@ -7,10 +7,9 @@ is family-agnostic: it only needs ``loss`` and the batch pytree.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable
 
 import jax
-import jax.numpy as jnp
 
 from repro.models import encdec as ED
 from repro.models import hybrid as HY

@@ -12,7 +12,7 @@ Decode is the O(1) recurrent step on a persistent (B, H, P, N) state plus a
 
 from __future__ import annotations
 
-from typing import NamedTuple, Optional, Tuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp

@@ -10,7 +10,6 @@ Three entry points per model: ``loss`` (teacher-forced CE), ``prefill``
 
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -190,8 +189,6 @@ def lm_make_caches(cfg: ArchConfig, batch_size: int, max_len: int, dtype):
     one = make(cfg, batch_size, max_len, dtype)
     n_prefix = cfg.first_dense_layers if cfg.family == "moe" else 0
     n_scan = cfg.n_layers - n_prefix
-    stack = lambda n: jax.tree_util.tree_map(
-        lambda c: jnp.broadcast_to(c[None], (n,) + c.shape).copy() if n else None, one)
     caches = {"layers": jax.tree_util.tree_map(
         lambda c: jnp.zeros((n_scan,) + c.shape, c.dtype), one)}
     if n_prefix:

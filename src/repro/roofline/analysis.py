@@ -17,52 +17,18 @@ same way).
 from __future__ import annotations
 
 import dataclasses
-import re
 from typing import Dict, Optional
+
+from repro.analysis.hlo_text import collective_bytes_by_kind
 
 PEAK_FLOPS = 197e12          # bf16 / chip
 HBM_BW = 819e9               # bytes/s / chip
 ICI_BW = 50e9                # bytes/s / link
 
-_DTYPE_BYTES = {
-    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
-    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
-    "s32": 4, "u32": 4, "f32": 4,
-    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
-}
-
-_COLLECTIVE_RE = re.compile(
-    r"=\s*(\([^)]*\)|[a-z0-9\[\]{},:#\* ]+?)\s+"
-    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
-    r"(?:-start|-done)?\(",
-)
-
-_SHAPE_RE = re.compile(r"([a-z]+[0-9]*(?:e[0-9a-z]+)?)\[([0-9,]*)\]")
-
-
-def _type_bytes(type_str: str) -> int:
-    total = 0
-    for dtype, dims in _SHAPE_RE.findall(type_str):
-        if dtype not in _DTYPE_BYTES:
-            continue
-        n = 1
-        if dims:
-            for d in dims.split(","):
-                n *= int(d)
-        total += n * _DTYPE_BYTES[dtype]
-    return total
-
 
 def collective_bytes_per_device(hlo_text: str) -> Dict[str, int]:
-    """Sum output bytes by collective kind (skip -done duplicates)."""
-    out: Dict[str, int] = {}
-    for m in _COLLECTIVE_RE.finditer(hlo_text):
-        type_str, kind = m.group(1), m.group(2)
-        span = hlo_text[m.start():m.end()]
-        if "-done(" in span:
-            continue  # async pair: count the -start only
-        out[kind] = out.get(kind, 0) + _type_bytes(type_str)
-    return out
+    """Sum output bytes by collective kind (async -done halves not counted)."""
+    return collective_bytes_by_kind(hlo_text)
 
 
 @dataclasses.dataclass

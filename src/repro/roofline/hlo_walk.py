@@ -15,19 +15,14 @@ reduce-scatter / all-to-all / collective-permute (async ``-done`` skipped).
 
 from __future__ import annotations
 
-import json
 import re
-from typing import Dict, List, Optional, Set, Tuple
+from typing import Dict, List, Optional, Set
 
-_DTYPE_BYTES = {
-    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
-    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
-    "s32": 4, "u32": 4, "f32": 4,
-    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
-    "token": 0, "opaque": 0,
-}
+from repro.analysis.hlo_text import (
+    COLLECTIVE_KINDS as _COLLECTIVES,
+    type_bytes as _type_bytes,
+)
 
-_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
 _COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*->.*\{\s*$")
 _OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$")
 _TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
@@ -38,21 +33,6 @@ _BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
 
 _SKIP_OPS = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
              "after-all", "partition-id", "replica-id", "iota"}
-_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
-                "collective-permute")
-
-
-def _type_bytes(type_str: str) -> int:
-    total = 0
-    for dtype, dims in _SHAPE_RE.findall(type_str):
-        if dtype not in _DTYPE_BYTES:
-            continue
-        n = 1
-        if dims:
-            for d in dims.split(","):
-                n *= int(d)
-        total += n * _DTYPE_BYTES[dtype]
-    return total
 
 
 class _Op:
@@ -240,8 +220,6 @@ def analyze_hlo(text: str) -> Dict[str, float]:
     # slice-touching ops: count only the moved region (mirrors
     # HloCostAnalysis' optimized handling; naive operand+output accounting
     # would bill a 6 GB loop carry on every iteration of a scan).
-    all_ops = {c: {op.name: op for op in ops} for c, ops in comps.items()}
-
     def op_bytes(op: _Op, types, cname) -> float:
         def operand_refs():
             arglist = op.rest.split(")")[0]

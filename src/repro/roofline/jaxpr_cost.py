@@ -18,11 +18,8 @@ computes exact *global* (pre-partitioning) FLOPs from the jaxpr:
 
 from __future__ import annotations
 
-import math
-from typing import Any
 
 import jax
-from jax import core
 
 
 def _prod(xs) -> int:

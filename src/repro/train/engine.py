@@ -229,6 +229,21 @@ def make_superstep_fn(step_fn: StepFn, *, donate: bool = True):
     return jax.jit(superstep, donate_argnums=(0, 1) if donate else ())
 
 
+def lower_superstep(step_fn: StepFn, params, opt_state, idx_schedule, *,
+                    donate: bool = True):
+    """AOT-lower the donated superstep for the given argument shapes.
+
+    The graph auditor's donation lint needs the *compiled* artifact (its
+    ``input_output_alias`` header proves which donated buffers actually
+    alias); ``make_superstep_fn`` only returns the jitted callable, whose
+    executable is not inspectable until traced. Returns the ``Lowered``
+    object -- call ``.compile()`` for the executable, ``.as_text()`` for
+    the pre-optimization module.
+    """
+    return make_superstep_fn(step_fn, donate=donate).lower(
+        params, opt_state, idx_schedule)
+
+
 def next_boundary(step: int, n_steps: int, *everys: int) -> int:
     """First step strictly after ``step`` where eval/ckpt may fire."""
     cands = [n_steps]

@@ -1,0 +1,53 @@
+"""The `analyze` CLI + run_audit report plumbing.
+
+The fast ``predict`` entry (one trace, no fits, no serving waves) keeps
+this a tier-1 test; the full fit/serve/collectives audit runs in the CI
+graph-audit job and scripts/ci.sh.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.analysis import run_audit
+from repro.forecast.spec import get_smoke_spec
+
+REPO = os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))))
+
+
+def test_run_audit_predict_entry_is_clean():
+    report = run_audit(get_smoke_spec("esn-quarterly"), entries=("predict",))
+    assert report.ok
+    d = report.to_dict()
+    assert d["ok"] is True
+    assert d["violations_total"] == 0
+    (sec,) = d["sections"]
+    assert sec["name"] == "predict"
+    assert sec["metrics"]["dtype"]["eqns_scanned"] > 0
+    json.loads(report.to_json())  # round-trips
+
+
+def test_run_audit_rejects_unknown_entry():
+    with pytest.raises(ValueError):
+        run_audit(get_smoke_spec("esn-quarterly"), entries=("fit", "nope"))
+
+
+def test_analyze_cli_writes_report_and_exits_zero(tmp_path):
+    out = tmp_path / "audit.json"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(REPO, "src") + os.pathsep
+                         + env.get("PYTHONPATH", ""))
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.forecast", "analyze",
+         "--smoke", "--set", "head=esn", "--entries", "predict",
+         "--json-out", str(out)],
+        capture_output=True, text=True, env=env, cwd=REPO, timeout=600)
+    assert proc.returncode == 0, proc.stderr
+    report = json.loads(out.read_text())
+    assert report["ok"] is True
+    names = [s["name"] for s in report["sections"]]
+    assert names == ["predict"]

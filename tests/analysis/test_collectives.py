@@ -1,0 +1,75 @@
+"""Collective audit: shared HLO-text parsing + invariant evaluation.
+
+The counting layer is exercised on canned HLO text (fast, no mesh); the
+invariant layer on seeded good/bad count dictionaries. The end-to-end
+8-device compile of the real sharded programs runs in the CI graph-audit
+job and tests/distributed/ -- not here.
+"""
+
+from repro.analysis.collectives import collective_findings
+from repro.analysis.hlo_text import (
+    collective_bytes_by_kind, collective_counts, collective_ops, type_bytes,
+)
+
+CANNED = """\
+HloModule jit_grad, entry_computation_layout=...
+
+%region_0 (a: f32[], b: f32[]) -> f32[] {
+  ROOT %add = f32[] add(f32[] %a, f32[] %b)
+}
+
+ENTRY %main (p0: f32[8,40]) -> f32[8,40] {
+  %p0 = f32[8,40]{1,0} parameter(0)
+  %ar = f32[8,40]{1,0} all-reduce(f32[8,40]{1,0} %p0), to_apply=%region_0
+  %ag-start = f32[16,40]{1,0} all-gather-start(f32[8,40]{1,0} %ar), dimensions={0}
+  %ag-done = f32[16,40]{1,0} all-gather-done(f32[16,40]{1,0} %ag-start)
+  ROOT %out = f32[8,40]{1,0} slice(f32[16,40]{1,0} %ag-done), slice={[0:8], [0:40]}
+}
+"""
+
+
+def test_collective_ops_counts_start_not_done():
+    ops = collective_ops(CANNED)
+    assert [k for k, _ in ops] == ["all-reduce", "all-gather"]
+    assert collective_counts(CANNED) == {"all-reduce": 1, "all-gather": 1}
+
+
+def test_collective_bytes_by_kind():
+    by_kind = collective_bytes_by_kind(CANNED)
+    assert by_kind["all-reduce"] == 8 * 40 * 4
+    assert by_kind["all-gather"] == 16 * 40 * 4
+
+
+def test_type_bytes_tuples_and_scalars():
+    assert type_bytes("f32[128,256]{1,0}") == 128 * 256 * 4
+    assert type_bytes("(f32[2,2], s32[3])") == 16 + 12
+    assert type_bytes("pred[]") == 1
+    assert type_bytes("token[]") == 0
+
+
+def test_healthy_counts_pass():
+    counts = {"devices": 8, "predict": {}, "loss_grad": {"all-reduce": 17}}
+    findings, metrics = collective_findings(counts)
+    assert findings == []
+    assert metrics == {"devices": 8, "predict_collectives": 0,
+                       "grad_all_reduces": 17, "grad_other_collectives": 0}
+
+
+def test_collective_in_predict_is_flagged():
+    counts = {"devices": 8, "predict": {"all-gather": 2},
+              "loss_grad": {"all-reduce": 17}}
+    findings, _ = collective_findings(counts)
+    assert any("sharded predict" in f.message for f in findings)
+
+
+def test_non_psum_gradient_collective_is_flagged():
+    counts = {"devices": 8, "predict": {},
+              "loss_grad": {"all-reduce": 17, "collective-permute": 1}}
+    findings, _ = collective_findings(counts)
+    assert any("non-psum" in f.message for f in findings)
+
+
+def test_missing_gradient_all_reduce_is_flagged():
+    counts = {"devices": 8, "predict": {}, "loss_grad": {}}
+    findings, _ = collective_findings(counts)
+    assert any("no all-reduce" in f.message for f in findings)

@@ -1,0 +1,64 @@
+"""Dtype-policy lint: clean programs pass, seeded f64/upcast programs fail."""
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.dtypes import dtype_findings
+
+
+def test_clean_f32_program_passes():
+    def f(x):
+        return jnp.tanh(x @ x.T).sum()
+
+    jaxpr = jax.make_jaxpr(f)(jnp.ones((4, 3)))
+    findings, metrics = dtype_findings(jaxpr, policy_dtype="float32")
+    assert findings == []
+    assert metrics["f64_avals"] == 0
+    assert metrics["float_upcasts"] == 0
+    assert metrics["eqns_scanned"] > 0
+
+
+def test_f64_promotion_is_flagged():
+    """Seeded violation: an x64-enabled program producing float64 values."""
+    with jax.experimental.enable_x64():
+        def f(x):
+            return x.astype(jnp.float64) * 2.0
+
+        jaxpr = jax.make_jaxpr(f)(jnp.ones((4,), jnp.float32))
+    findings, metrics = dtype_findings(jaxpr, policy_dtype="float32")
+    assert any("f64 promotion" in f.message for f in findings)
+    assert metrics["f64_avals"] >= 1
+    # the f32 -> f64 convert is also an above-policy upcast
+    assert metrics["float_upcasts"] >= 1
+
+
+def test_upcast_beyond_bf16_policy_is_flagged():
+    """Under a bfloat16 policy an f32 convert is the silent-upcast failure."""
+    def f(x):
+        return x.astype(jnp.float32).sum()
+
+    jaxpr = jax.make_jaxpr(f)(jnp.ones((4,), jnp.bfloat16))
+    findings, metrics = dtype_findings(jaxpr, policy_dtype="bfloat16")
+    assert any("silent upcast" in f.message for f in findings)
+    assert metrics["float_upcasts"] >= 1
+
+
+def test_downcast_within_policy_passes():
+    def f(x):
+        return x.astype(jnp.bfloat16).sum()
+
+    jaxpr = jax.make_jaxpr(f)(jnp.ones((4,), jnp.float32))
+    findings, _ = dtype_findings(jaxpr, policy_dtype="float32")
+    assert findings == []
+
+
+def test_findings_dedup_by_dtype_pair():
+    def f(x):
+        a = x.astype(jnp.float32).sum()
+        b = (x * 2).astype(jnp.float32).sum()
+        return a + b
+
+    jaxpr = jax.make_jaxpr(f)(jnp.ones((4,), jnp.bfloat16))
+    findings, metrics = dtype_findings(jaxpr, policy_dtype="bfloat16")
+    assert metrics["float_upcasts"] >= 2
+    assert len([f for f in findings if "silent upcast" in f.message]) == 1

@@ -1,0 +1,99 @@
+"""Recompile sentinel: the fc[:n] partial-fill bug class stays dead.
+
+PR 6 shipped a dispatcher that sliced the *device* forecast array per
+request (``fc[:n]``): every distinct partial fill ``n`` compiled a fresh
+slice executable, an unbounded compile family invisible to the bucket-grid
+counters. These tests (a) reproduce the bug class directly and show the
+sentinel catches it, and (b) pin the fixed serving path to its declared
+``len(length_buckets) x len(batch_buckets)`` budget using ground-truth XLA
+compile counts, not dispatcher intent.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.audit import _probe_model
+from repro.analysis.recompile import (
+    CompileBudgetExceeded, CompileCounter, check_compile_budget,
+)
+from repro.forecast.serving import BucketDispatcher, synthetic_request_stream
+from repro.forecast.spec import get_smoke_spec
+
+
+def test_device_slice_per_n_is_an_unbounded_compile_family(compile_sentinel):
+    """The PR-6 bug class: slicing a device array per distinct ``n``
+    compiles one executable per ``n``; the host-side ``np.asarray(fc)[:n]``
+    form compiles nothing."""
+    fc = jnp.arange(64.0)
+    fills = (3, 5, 7, 11, 13)
+
+    before = compile_sentinel.count
+    for n in fills:
+        _ = fc[:n]  # device slice: distinct shape -> distinct executable
+    device_compiles = compile_sentinel.count - before
+    assert device_compiles >= len(fills)
+
+    host = np.asarray(fc)
+    before = compile_sentinel.count
+    for n in fills:
+        _ = host[:n]  # host slice: zero XLA involvement
+    assert compile_sentinel.count - before == 0
+
+
+def test_expect_raises_on_budget_overrun(compile_sentinel):
+    # a shape no other test slices, so the process-wide jit cache is cold
+    fc = jnp.arange(49.0) + 1.0
+    with pytest.raises(CompileBudgetExceeded):
+        with compile_sentinel.expect(budget=1, what="partial-fill slices"):
+            for n in (3, 5, 7):
+                _ = fc[:n]
+
+
+def test_expect_passes_within_budget(compile_sentinel):
+    with compile_sentinel.expect(budget=8, what="nothing"):
+        pass  # no compiles at all
+
+
+def test_serving_stays_within_declared_grid_budget():
+    """The fixed dispatcher: ragged lengths and partial fills across two
+    identical waves, yet ``xla_compiles`` (ground truth) never exceeds the
+    bucket grid and the warm second wave compiles nothing."""
+    cfg, params, _, _ = _probe_model(get_smoke_spec("esn-quarterly"))
+    disp = BucketDispatcher(cfg, params, length_buckets=(32, 64),
+                            batch_buckets=(1, 8))
+    assert disp.compile_budget == 4
+    assert disp.stats.compile_budget == 4
+
+    for wave in range(2):
+        before = disp.stats.xla_compiles
+        reqs = synthetic_request_stream(cfg, 16, n_known=15, seed=0,
+                                        len_range=(20, 60))
+        out = disp.forecast_batch(reqs)
+        assert len(out) == len(reqs)
+        wave_compiles = disp.stats.xla_compiles - before
+        if wave == 0:
+            assert wave_compiles <= disp.compile_budget
+        else:
+            assert wave_compiles == 0  # warm grid: every request a cache hit
+    check_compile_budget(disp.stats)  # returns, does not raise
+
+
+def test_check_compile_budget_raises_on_overrun():
+    class Stats:
+        xla_compiles = 9
+        compile_budget = 4
+        compiles = 4
+        cache_hits = 5
+
+    with pytest.raises(CompileBudgetExceeded):
+        check_compile_budget(Stats())
+
+
+def test_check_compile_budget_requires_a_budget():
+    class Stats:
+        xla_compiles = 0
+        compile_budget = None
+
+    with pytest.raises(ValueError):
+        check_compile_budget(Stats())

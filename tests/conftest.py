@@ -1,0 +1,19 @@
+"""Repo-wide fixtures.
+
+``compile_sentinel`` arms the process-wide XLA compile listener
+(:mod:`repro.analysis.recompile`) for the duration of a test, so any suspect
+region can be wrapped in ``sentinel.expect(budget=..., what=...)`` and fail
+loudly when a hot path compiles more executables than it declared -- the
+PR-6 ``fc[:n]`` partial-fill bug class.
+"""
+
+import pytest
+
+from repro.analysis.recompile import CompileCounter
+
+
+@pytest.fixture
+def compile_sentinel():
+    """An armed CompileCounter: every XLA backend compile in the test bumps it."""
+    with CompileCounter() as counter:
+        yield counter

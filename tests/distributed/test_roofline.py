@@ -2,11 +2,11 @@
 
 import jax
 import jax.numpy as jnp
-import numpy as np
+
 
 from repro.roofline.analysis import RooflineTerms, model_flops
 from repro.roofline.hlo_walk import _type_bytes, analyze_hlo
-from repro.roofline.jaxpr_cost import flops_of, jaxpr_flops
+from repro.roofline.jaxpr_cost import flops_of
 
 
 def test_matmul_flops_exact():

@@ -8,8 +8,6 @@ conditioned on the online history must equal a fresh forecast given the
 extended series explicitly.
 """
 
-import threading
-import time
 
 import jax
 import jax.numpy as jnp
@@ -23,7 +21,7 @@ from repro.forecast import (
     synthetic_request_stream,
 )
 from repro.forecast.server import (
-    ForecastServer, ObserveWrite, OnlineStateStore, QueueFull, ServerConfig,
+    ObserveWrite, OnlineStateStore, QueueFull, ServerConfig,
 )
 
 

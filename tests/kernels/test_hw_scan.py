@@ -166,7 +166,6 @@ def test_pad_lane_grads_are_isolated():
     """
     y_full, p_full = _setup(128, 20, 4, seed=2, dtype=jnp.float32)
     n_sub = 120
-    sub = lambda a: a[:n_sub] if a.ndim else a
     p_sub = dataclasses.replace(
         p_full,
         alpha_logit=p_full.alpha_logit[:n_sub],

@@ -6,7 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import ARCHS, SHAPES, ShapeCell, get_config, get_smoke_config
+from repro.configs import ARCHS, ShapeCell, get_config, get_smoke_config
 from repro.launch.steps import make_train_step
 from repro.models.model import build_model
 from repro.train.optimizer import adam_init

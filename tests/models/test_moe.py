@@ -1,6 +1,5 @@
 """MoE dispatch correctness: gather/scatter path vs dense per-expert loop."""
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -1,6 +1,5 @@
 """Mamba2 SSD vs sequential recurrence (hypothesis shape sweep)."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
