@@ -45,9 +45,15 @@ def run(fast: bool = False):
         batch_size=min(64, data.n_series), n_steps=2, lr=4e-3,
         eval_every=2, ckpt_dir=None, seed=0))
 
+    # the registered heads at the default fp32 policy, plus the lstm head
+    # under the bf16 compute policy -- the equal-quality claim of the
+    # mixed-precision path (CI gates lstm_bf16 OWA within 1% of fp32 lstm)
+    variants = [(head, "fp32") for head in available_heads()]
+    variants.append(("lstm", "bf16"))
+
     rows = {}
-    for head in available_heads():
-        cfg = make_config(FREQ, head=head)
+    for head, precision in variants:
+        cfg = make_config(FREQ, head=head, precision=precision)
         t0 = time.perf_counter()
         out = train_esrnn(cfg, data, TrainConfig(
             batch_size=min(64, data.n_series), n_steps=steps, lr=4e-3,
@@ -55,9 +61,11 @@ def run(fast: bool = False):
         fit_s = time.perf_counter() - t0
         smape, fc = eval_test_smape(cfg, data, out["params"])
         mase = float(L.mase(jnp.asarray(fc), target, insample, m))
-        rows[head] = {
+        key = head if precision == "fp32" else f"{head}_{precision}"
+        rows[key] = {
             "fit_s": fit_s,
             "steps": steps,
+            "precision": precision,
             "smape": smape,
             "mase": mase,
             "owa": float(L.owa(smape, mase, naive2_smape, naive2_mase)),
@@ -71,6 +79,7 @@ def run(fast: bool = False):
         "naive2": {"smape": naive2_smape, "mase": naive2_mase},
         "per_head": rows,
         "esn_fit_speedup_vs_lstm": rows["lstm"]["fit_s"] / rows["esn"]["fit_s"],
+        "bf16_owa_ratio": rows["lstm_bf16"]["owa"] / rows["lstm"]["owa"],
     }
     save_result("head_compare", out)
     return out
@@ -84,6 +93,7 @@ def main():
               f"{r['mase']:8.3f} {r['owa']:8.3f}")
     print(f"esn fit speedup vs lstm at equal steps: "
           f"{out['esn_fit_speedup_vs_lstm']:.2f}x")
+    print(f"bf16 lstm OWA / fp32 lstm OWA: {out['bf16_owa_ratio']:.4f}")
 
 
 if __name__ == "__main__":

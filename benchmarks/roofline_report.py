@@ -1,4 +1,17 @@
-"""Aggregate dry-run JSONs into the EXPERIMENTS.md roofline table."""
+"""Roofline reporting: dry-run aggregate table + live ES-RNN entry points.
+
+Two sections:
+
+* :func:`main` -- aggregate previously saved dry-run JSONs into the
+  EXPERIMENTS.md roofline table (unchanged from the seed).
+* :func:`esrnn_section` -- compile the *real* ES-RNN programs (the donated
+  fused train superstep from ``repro.train.engine`` and the forecast
+  program, sharded over a series mesh when this process has multiple
+  devices) at both precision policies and report FLOPs, HBM bytes,
+  arithmetic intensity and the roofline time terms per entry point. This
+  is the ``roofline`` column of the BENCH_PR9 trajectory; CI gates the
+  bf16/fp32 fused-step byte ratio.
+"""
 
 from __future__ import annotations
 
@@ -7,6 +20,45 @@ import json
 import os
 
 DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def esrnn_section(fast: bool = False) -> dict:
+    """fp32-vs-bf16 roofline of the live fit/predict programs.
+
+    Returns the :func:`repro.roofline.esrnn.precision_compare` payload with
+    a ``sharded_predict`` flag recording whether the predict rows went
+    through the series-mesh ``shard_map`` program.
+    """
+    import jax
+
+    from repro.core.esrnn import make_config
+    from repro.roofline.esrnn import precision_compare
+
+    mesh = None
+    if len(jax.devices()) > 1:
+        from repro.sharding.series import make_series_mesh
+
+        mesh = make_series_mesh()
+    out = precision_compare(make_config("quarterly"), mesh=mesh)
+    out["sharded_predict"] = mesh is not None
+    out["devices"] = len(jax.devices())
+    return out
+
+
+def print_esrnn_section(out: dict) -> None:
+    print(f"  probe {out['probe']}  devices={out['devices']} "
+          f"sharded_predict={out['sharded_predict']}")
+    print("  entry    prec  flops/step   hlo_B/step  jaxpr_B/step  "
+          "intensity  dominant")
+    for r in out["rows"]:
+        print(f"  {r['entry']:8s} {r['precision']:5s} {r['flops']:.3e}  "
+              f"{r['hlo_bytes']:.3e}  {r['jaxpr_bytes']:.3e}   "
+              f"{r['intensity']:8.2f}  {r['dominant']}")
+    print(f"  fit bf16/fp32 bytes: jaxpr "
+          f"{out['fit_jaxpr_bytes_ratio_bf16']:.3f} "
+          f"(hardware-neutral, CI gate <= 0.65), hlo "
+          f"{out['fit_hlo_bytes_ratio_bf16']:.3f} (this backend); "
+          f"predict jaxpr {out['predict_jaxpr_bytes_ratio_bf16']:.3f}")
 
 
 def load(mesh: str):

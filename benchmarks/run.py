@@ -4,18 +4,25 @@
 sustained-load serving benchmark, the pluggable-head comparison and the
 roofline report, printing ``name,us_per_call,derived`` CSV lines plus the
 human-readable tables, and saving JSON under experiments/bench/. It also
-writes the repo-root ``BENCH_PR8.json`` trajectory point (speedup through
+writes the repo-root ``BENCH_PR9.json`` trajectory point (speedup through
 the public estimator, the ``use_pallas`` train-step timing column, the
 fused-engine ``scan_steps`` steps/sec column, the sharded-vs-single
 ``predict_path`` series/sec column, the continuous-batching ``serve_load``
 sustained-load column -- p50/p99 latency + series/sec for >= 2 queue
 configurations vs the batch-1 baseline -- the ``head_compare`` table (fit
 wall-clock + sMAPE/MASE/OWA per registered head at equal steps on the same
-split), the ``analysis`` column (graph-auditor metrics: true XLA compile
-counts vs budget, collective counts, aliased-buffer counts), sMAPE, device
-sweep, git sha) that CI archives as an artifact -- the perf record the next
-regression gets compared against (``BENCH_PR2.json``..``BENCH_PR7.json``
+split, now with a bf16-policy lstm row and its OWA ratio vs fp32), the
+``analysis`` column (graph-auditor metrics: true XLA compile counts vs
+budget, collective counts, aliased-buffer counts), the ``roofline`` column
+(FLOPs / HBM bytes / arithmetic intensity / compute-vs-memory term for the
+real fused train step and predict program, fp32 vs bf16 side by side; CI
+gates the bf16 fused-step byte ratio <= 0.65), sMAPE, device sweep, git
+sha) that CI archives as an artifact -- the perf record the next
+regression gets compared against (``BENCH_PR2.json``..``BENCH_PR9.json``
 are the prior points, kept for comparison).
+
+Invoke through ``scripts/run_env.sh`` for pinned runtime hygiene (tcmalloc,
+XLA flags, dtype bits): ``bash scripts/run_env.sh python -m benchmarks.run``.
 """
 
 import argparse
@@ -25,7 +32,7 @@ import subprocess
 import time
 
 BENCH_TRAJECTORY = os.path.join(
-    os.path.dirname(__file__), "..", "BENCH_PR8.json")
+    os.path.dirname(__file__), "..", "BENCH_PR9.json")
 
 
 def _git_sha() -> str:
@@ -60,12 +67,12 @@ def analysis_column() -> dict:
     }
 
 
-def write_trajectory(t5, t4, serve, heads, analysis) -> str:
-    """BENCH_PR8.json: the machine-readable perf point CI archives."""
+def write_trajectory(t5, t4, serve, heads, analysis, roofline) -> str:
+    """BENCH_PR9.json: the machine-readable perf point CI archives."""
     import jax
 
     payload = {
-        "bench": "PR8",
+        "bench": "PR9",
         "git_sha": _git_sha(),
         "devices": len(jax.devices()),
         "speedup_vectorized_vs_loop": t5["estimator_path"]["speedup"],
@@ -95,6 +102,11 @@ def write_trajectory(t5, t4, serve, heads, analysis) -> str:
         # numbers above (compile counts vs budget, collective counts,
         # aliased-buffer counts; CI gates analysis.ok == true)
         "analysis": analysis,
+        # roofline column: static FLOPs / HBM bytes / intensity / roofline
+        # time terms of the real fused train step and predict program, at
+        # both precision policies (CI gates every term finite & non-zero
+        # and the bf16 fused-step jaxpr-byte ratio <= 0.65x of fp32)
+        "roofline": roofline,
         "smape_quarterly": t4["per_frequency"]["quarterly"]["esrnn"]["smape"],
         "owa_quarterly": t4["per_frequency"]["quarterly"]["esrnn"]["owa"],
         "device_sweep": t5["device_sweep"],
@@ -206,6 +218,14 @@ def main() -> None:
     roofline_report.main()
 
     t0 = time.perf_counter()
+    rl = roofline_report.esrnn_section(fast=args.fast)
+    dt = time.perf_counter() - t0
+    csv.append(("roofline_esrnn", dt * 1e6,
+                f"fit_bf16_bytes_ratio={rl['fit_jaxpr_bytes_ratio_bf16']:.3f}"))
+    print("\n== Roofline (live ES-RNN entry points, fp32 vs bf16) ==")
+    roofline_report.print_esrnn_section(rl)
+
+    t0 = time.perf_counter()
     an = analysis_column()
     dt = time.perf_counter() - t0
     csv.append(("graph_audit", dt * 1e6,
@@ -219,7 +239,7 @@ def main() -> None:
     for name, us, derived in csv:
         print(f"{name},{us:.0f},{derived}")
 
-    print("\nwrote", write_trajectory(t5, t4, sv, hc, an))
+    print("\nwrote", write_trajectory(t5, t4, sv, hc, an, rl))
 
 
 if __name__ == "__main__":

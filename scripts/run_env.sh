@@ -1,0 +1,54 @@
+#!/usr/bin/env bash
+# Runtime-hygiene launcher: pin the process environment before python/jax
+# start, then exec the wrapped command.
+#
+#   bash scripts/run_env.sh python -m benchmarks.run --fast
+#   bash scripts/run_env.sh python -m repro.launch.forecast fit --spec esrnn-quarterly
+#
+# What it pins (and why):
+#   * tcmalloc via LD_PRELOAD when present -- glibc malloc fragments badly
+#     under XLA's large transient host allocations; tcmalloc is the
+#     standard fix on TPU VMs. Silently skipped when no candidate exists.
+#   * TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD -- silence the >1GB alloc
+#     warnings that large per-series tables trigger.
+#   * XLA_FLAGS --xla_force_host_platform_device_count -- deterministic
+#     host-device count for the series-mesh sharded paths (set
+#     ESRNN_HOST_DEVICES=1 for single-device runs; only appended when the
+#     flag is not already pinned by the caller).
+#   * JAX_DEFAULT_DTYPE_BITS=32 / JAX_ENABLE_X64=0 -- keep weak types at
+#     32 bits so a stray python float can never promote a bf16/f32 program
+#     to f64 (the dtype lint would fail the run; this stops it compiling).
+#   * TF_CPP_MIN_LOG_LEVEL -- drop libtpu/XLA info-spam from benchmark logs.
+set -euo pipefail
+
+# --- allocator ------------------------------------------------------------
+if [ -z "${LD_PRELOAD:-}" ]; then
+  for so in \
+      /usr/lib/x86_64-linux-gnu/libtcmalloc.so.4 \
+      /usr/lib/x86_64-linux-gnu/libtcmalloc_minimal.so.4 \
+      /usr/lib/libtcmalloc.so.4; do
+    if [ -e "$so" ]; then
+      export LD_PRELOAD="$so"
+      break
+    fi
+  done
+fi
+export TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD="${TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD:-60000000000}"
+
+# --- logging --------------------------------------------------------------
+export TF_CPP_MIN_LOG_LEVEL="${TF_CPP_MIN_LOG_LEVEL:-2}"
+
+# --- dtypes ---------------------------------------------------------------
+export JAX_ENABLE_X64=0
+export JAX_DEFAULT_DTYPE_BITS="${JAX_DEFAULT_DTYPE_BITS:-32}"
+
+# --- device topology ------------------------------------------------------
+# pin the host-platform device count unless the caller already did
+case "${XLA_FLAGS:-}" in
+  *xla_force_host_platform_device_count*) ;;
+  *)
+    export XLA_FLAGS="--xla_force_host_platform_device_count=${ESRNN_HOST_DEVICES:-8}${XLA_FLAGS:+ $XLA_FLAGS}"
+    ;;
+esac
+
+exec "$@"

@@ -21,7 +21,7 @@ Five invariants, one per lint module, audited per commit by CI:
 ``repro.launch.forecast analyze`` is the CLI over :func:`run_audit`; the
 report's ``metrics`` (compile counts, collective counts, aliased-buffer
 counts) also land as the ``analysis`` column of the benchmark trajectory
-(``BENCH_PR8.json``).
+(``BENCH_PR9.json``).
 """
 
 from __future__ import annotations
@@ -36,7 +36,7 @@ from repro.analysis.collectives import (
     collective_audit, collective_findings, probe_batch,
 )
 from repro.analysis.donation import donated_leaf_count, donation_findings
-from repro.analysis.dtypes import dtype_findings
+from repro.analysis.dtypes import accumulation_findings, dtype_findings
 from repro.analysis.gradleak import (
     Finding, gradient_leak_findings, probe_batch_size,
 )
@@ -119,9 +119,20 @@ def audit_fit(spec) -> AuditSection:
 
     import jax
 
+    # policy-aware lint: the compute dtype (bf16 under precision="bf16") is
+    # the policy floor, converts up to the state dtype are the declared fp32
+    # accumulation points, anything wider (and any f64) still fails
     step_jaxpr = jax.make_jaxpr(step)(params, opt, idx)
-    dt, dt_metrics = dtype_findings(step_jaxpr, policy_dtype=cfg.dtype)
+    dt, dt_metrics = dtype_findings(
+        step_jaxpr, policy_dtype=cfg.compute_dtype.name, state_dtype=cfg.dtype)
     violations += dt
+
+    # ...and the state half: HW table, Adam moments, and the loss the
+    # masked-mean reduction emits must all be the state dtype
+    loss_aval = jax.eval_shape(step, params, opt, idx)[2]
+    acc, acc_metrics = accumulation_findings(params, opt, loss_aval,
+                                             state_dtype=cfg.dtype)
+    violations += acc
 
     sched = jnp.stack([(jnp.arange(b) + k) % PROBE_SERIES
                        for k in range(PROBE_STEPS)])
@@ -131,9 +142,10 @@ def audit_fit(spec) -> AuditSection:
     violations += don
 
     return AuditSection("fit", violations, {
-        "head": cfg.head, "frozen_groups": sorted(frozen),
+        "head": cfg.head, "precision": cfg.precision,
+        "frozen_groups": sorted(frozen),
         "gradient_leak": leak_metrics, "dtype": dt_metrics,
-        "donation": don_metrics})
+        "accumulation": acc_metrics, "donation": don_metrics})
 
 
 def audit_predict(spec) -> AuditSection:
@@ -145,8 +157,10 @@ def audit_predict(spec) -> AuditSection:
     cfg, params, y, cats = _probe_model(spec)
     jaxpr = jax.make_jaxpr(
         lambda p, yy, cc: esrnn_forecast_fn(cfg, p, yy, cc))(params, y, cats)
-    findings, metrics = dtype_findings(jaxpr, policy_dtype=cfg.dtype)
-    return AuditSection("predict", findings, {"dtype": metrics})
+    findings, metrics = dtype_findings(
+        jaxpr, policy_dtype=cfg.compute_dtype.name, state_dtype=cfg.dtype)
+    return AuditSection("predict", findings,
+                        {"precision": cfg.precision, "dtype": metrics})
 
 
 def audit_serve(spec, *, waves: int = 2, requests: int = 24) -> AuditSection:

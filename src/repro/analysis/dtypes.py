@@ -18,8 +18,9 @@ as are converts *down* to or within the policy width.
 
 from __future__ import annotations
 
-from typing import List, Tuple
+from typing import List, Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -33,15 +34,28 @@ def _is_float(dtype) -> bool:
     return jnp.issubdtype(jnp.dtype(dtype), jnp.floating)
 
 
-def dtype_findings(jaxpr, policy_dtype="float32") -> Tuple[List[Finding], dict]:
+def dtype_findings(jaxpr, policy_dtype="float32",
+                   state_dtype: Optional[str] = None
+                   ) -> Tuple[List[Finding], dict]:
     """Lint one (Closed)Jaxpr against a float compute policy.
 
     Flags every float64 aval and every float->float ``convert_element_type``
-    whose destination is wider than ``policy_dtype``. Returns
-    ``(findings, metrics)``; findings are deduplicated by (primitive, dtype
-    pair) so a single leaked constant does not produce hundreds of lines.
+    whose destination is wider than ``policy_dtype``. Under a mixed-precision
+    policy (``ESRNNConfig.precision="bf16"``) pass the *state* dtype too:
+    converts up to ``state_dtype`` are then legitimate (they are the declared
+    fp32 accumulation points -- HW recurrence, loss reduction, dot-general
+    emissions), while converts beyond it still fail, as does any f64. With
+    ``state_dtype=None`` (the default) the lint is single-dtype strict --
+    every convert above ``policy_dtype`` is a silent upcast.
+
+    Returns ``(findings, metrics)``; findings are deduplicated by
+    (primitive, dtype pair) so a single leaked constant does not produce
+    hundreds of lines.
     """
     policy = jnp.dtype(policy_dtype)
+    widest = policy
+    if state_dtype is not None and jnp.dtype(state_dtype).itemsize > policy.itemsize:
+        widest = jnp.dtype(state_dtype)
     findings: List[Finding] = []
     seen = set()
     f64_avals = 0
@@ -68,7 +82,7 @@ def dtype_findings(jaxpr, policy_dtype="float32") -> Tuple[List[Finding], dict]:
             dst = eqn.params.get("new_dtype")
             if (src is not None and dst is not None and _is_float(src)
                     and _is_float(dst)
-                    and jnp.dtype(dst).itemsize > policy.itemsize):
+                    and jnp.dtype(dst).itemsize > widest.itemsize):
                 upcasts += 1
                 key = ("upcast", str(src), str(jnp.dtype(dst)))
                 if key not in seen:
@@ -80,5 +94,64 @@ def dtype_findings(jaxpr, policy_dtype="float32") -> Tuple[List[Finding], dict]:
                         f"policy"))
     metrics = {"eqns_scanned": eqns, "f64_avals": f64_avals,
                "float_upcasts": upcasts,
-               "policy_dtype": str(jnp.dtype(policy_dtype))}
+               "policy_dtype": str(jnp.dtype(policy_dtype)),
+               "state_dtype": (str(jnp.dtype(state_dtype))
+                               if state_dtype is not None else None)}
+    return findings, metrics
+
+
+def accumulation_findings(params, opt_state, loss_aval,
+                          state_dtype="float32") -> Tuple[List[Finding], dict]:
+    """Prove the fp32-*state* half of the precision policy on real pytrees.
+
+    The compute half of a mixed-precision policy is checked statically on
+    the jaxpr (:func:`dtype_findings`); this checks the other half -- the
+    values that must NEVER drop to the compute dtype no matter what policy
+    is declared:
+
+    * the per-series Holt-Winters table (``params["hw"]``) -- the master
+      copy the level/seasonality recurrence trains,
+    * the Adam moments (``mu``/``nu`` in the optimizer state, including the
+      sparse variant's),
+    * the scalar loss the masked-mean reduction emits (``loss_aval`` from
+      ``jax.eval_shape`` of the step).
+
+    ``params``/``opt_state`` may be real arrays or ShapeDtypeStructs.
+    """
+    state = jnp.dtype(state_dtype)
+    findings: List[Finding] = []
+
+    def bad_leaf_dtypes(tree):
+        return sorted({
+            jnp.dtype(leaf.dtype).name
+            for leaf in jax.tree_util.tree_leaves(tree)
+            if _is_float(leaf.dtype) and jnp.dtype(leaf.dtype) != state})
+
+    hw_bad = bad_leaf_dtypes(params.get("hw", {}) if isinstance(params, dict)
+                             else params)
+    if hw_bad:
+        findings.append(Finding(
+            "dtype-policy",
+            f"per-series HW table holds {hw_bad} leaves; the master "
+            f"level/seasonality state must stay {state.name}"))
+
+    moments = {k: v for k, v in opt_state.items() if k in ("mu", "nu")} \
+        if isinstance(opt_state, dict) else opt_state
+    mom_bad = bad_leaf_dtypes(moments)
+    if mom_bad:
+        findings.append(Finding(
+            "dtype-policy",
+            f"Adam moments hold {mom_bad} leaves; optimizer accumulators "
+            f"must stay {state.name}"))
+
+    loss_ok = jnp.dtype(loss_aval.dtype) == state
+    if not loss_ok:
+        findings.append(Finding(
+            "dtype-policy",
+            f"loss reduction emits {jnp.dtype(loss_aval.dtype).name}; the "
+            f"masked-mean pinball accumulation must stay {state.name}"))
+
+    metrics = {"hw_table_dtypes_bad": hw_bad, "moment_dtypes_bad": mom_bad,
+               "loss_dtype": jnp.dtype(loss_aval.dtype).name,
+               "state_dtype": state.name}
     return findings, metrics

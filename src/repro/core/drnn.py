@@ -31,6 +31,56 @@ import jax
 import jax.numpy as jnp
 
 
+@jax.custom_vjp
+def _gates_lowp(wx, wh, b, x, h):
+    """Gate pre-activations for sub-f32 streams: f32 accumulators, low-p IO.
+
+    Two deliberate departures from the fp32 formulation, both invisible to
+    it (this function is only reached for sub-f32 streams):
+
+    * the x- and h-dots fuse into ONE concatenated dot_general -- same
+      fp32 accumulator via ``preferred_element_type``, one MXU dispatch,
+      and one (B, 4H) f32 emission instead of two plus an f32 add; the
+      bias joins *after* the stream-dtype cast (a depth-1 pointwise add
+      needs no fp32 accumulator).
+    * a custom backward: XLA's native AD would transpose the trailing
+      f32->bf16 cast into a bf16->f32 convert on ``dgates``, promoting
+      every backward dot to full f32 operands. Here ``dgates`` stays in
+      the stream dtype, each backward dot keeps low-precision operands
+      with an fp32 accumulator, and emits stream-dtype cotangents
+      (custom_vjp requires primal dtypes anyway). This is what makes the
+      backward half of the fit roofline's byte ratio drop, not just the
+      forward half.
+    """
+    xh = jnp.concatenate([x, h], axis=1)
+    w = jnp.concatenate([wx, wh], axis=0)
+    return (jnp.dot(xh, w, preferred_element_type=jnp.float32)
+            .astype(x.dtype) + b.astype(x.dtype))
+
+
+def _gates_lowp_fwd(wx, wh, b, x, h):
+    return _gates_lowp(wx, wh, b, x, h), (wx, wh, b, x, h)
+
+
+def _gates_lowp_bwd(res, dg):
+    # stream-dtype emissions throughout: a bf16 dot accumulates in fp32
+    # inside the MXU regardless of its output dtype, so requesting an f32
+    # emission here would only round-trip the identical accumulator through
+    # HBM at twice the width before the very next op rounds it anyway
+    wx, wh, b, x, h = res
+    i = x.shape[1]
+    xh = jnp.concatenate([x, h], axis=1)
+    w = jnp.concatenate([wx, wh], axis=0)
+    dxh = jnp.dot(dg, w.T)
+    dw = jnp.dot(xh.T, dg)
+    db = jnp.sum(dg, axis=0).astype(b.dtype)
+    return (dw[:i].astype(wx.dtype), dw[i:].astype(wh.dtype), db,
+            dxh[:, :i].astype(x.dtype), dxh[:, i:].astype(h.dtype))
+
+
+_gates_lowp.defvjp(_gates_lowp_fwd, _gates_lowp_bwd)
+
+
 def lstm_cell(params, x, h_prev, c_prev, *, use_pallas: bool = False):
     """One fused LSTM step. x:(B,I) h,c:(B,H) -> (h,c):(B,H).
 
@@ -40,9 +90,25 @@ def lstm_cell(params, x, h_prev, c_prev, *, use_pallas: bool = False):
         from repro.kernels import ops as kernel_ops
 
         return kernel_ops.lstm_cell(params["wx"], params["wh"], params["b"], x, h_prev, c_prev)
-    gates = x @ params["wx"] + h_prev @ params["wh"] + params["b"]
+    # fp32 *accumulation*, stream-dtype elementwise: the gate pre-activations
+    # are deep sums (dot_generals over I and H plus bias), so they accumulate
+    # in fp32 regardless of the stream dtype -- same contract as the Pallas
+    # kernel's MXU accumulators. The nonlinearities and the single-step state
+    # update are pointwise (no accumulation depth), so they run in the stream
+    # dtype; under bf16 this is what actually halves the cell's HBM-level
+    # traffic (the roofline fit row). The fp32 branch keeps XLA's native AD
+    # (bit-identical to the historical formulation); sub-f32 streams route
+    # through the custom-vjp linear block so the backward dots stay in the
+    # stream dtype too.
+    if jnp.dtype(x.dtype) == jnp.float32:
+        gates = (jnp.dot(x, params["wx"], preferred_element_type=jnp.float32)
+                 + jnp.dot(h_prev, params["wh"], preferred_element_type=jnp.float32)
+                 + params["b"].astype(jnp.float32)).astype(x.dtype)
+    else:
+        gates = _gates_lowp(params["wx"], params["wh"], params["b"], x, h_prev)
     i, f, g, o = jnp.split(gates, 4, axis=-1)
-    c = jax.nn.sigmoid(f) * c_prev + jax.nn.sigmoid(i) * jnp.tanh(g)
+    c = (jax.nn.sigmoid(f) * c_prev.astype(x.dtype)
+         + jax.nn.sigmoid(i) * jnp.tanh(g))
     h = jax.nn.sigmoid(o) * jnp.tanh(c)
     return h, c
 

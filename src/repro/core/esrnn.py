@@ -72,10 +72,27 @@ class ESRNNConfig:
                                    # the Eq.-5 de-normalization ("lstm" --
                                    # the paper's head, "esn", "ssm", ...)
     dtype: str = "float32"
+    precision: str = "fp32"        # compute policy: "fp32" | "bf16". Master
+                                   # params, the per-series HW table, Adam
+                                   # moments and the masked-mean loss
+                                   # reduction always stay in ``dtype``;
+                                   # "bf16" streams activations and shared
+                                   # weights through the heads/kernels in
+                                   # bfloat16 with fp32 dot accumulators.
 
     @property
     def jdtype(self):
         return jnp.dtype(self.dtype)
+
+    @property
+    def compute_dtype(self):
+        """Dtype activations/shared weights are cast to inside the forward."""
+        if self.precision == "bf16":
+            return jnp.dtype(jnp.bfloat16)
+        if self.precision == "fp32":
+            return jnp.dtype(self.dtype)
+        raise ValueError(
+            f"unknown precision policy {self.precision!r} (want fp32|bf16)")
 
 
 # Table 1 presets + the monthly/yearly rows.

@@ -83,7 +83,18 @@ class ESRNNStates:
 
 
 def smooth(cfg, params, y):
-    """HW smoothing with the config's dispatch (pure jax or Pallas kernels)."""
+    """HW smoothing with the config's dispatch (pure jax or Pallas kernels).
+
+    Under the ``bf16`` precision policy the observation stream is cast to the
+    compute dtype before smoothing -- that is what halves the y tiles the HW
+    recurrence reads -- while the recurrence itself, the per-series HW table,
+    and the returned levels/seasonality stay in the state dtype (fp32): the
+    smoothing parameters are fp32 and every step promotes, so the
+    accumulated state never rounds through bf16.
+    """
+    cdt = cfg.compute_dtype
+    if y.dtype != cdt:
+        y = y.astype(cdt)
     return hw_smooth(
         y,
         params["hw"],
@@ -191,6 +202,12 @@ def esrnn_states(cfg, params, y, cats) -> ESRNNStates:
     levels, seas = smooth(cfg, params, y)
     x_in, pos = input_windows(cfg, y, levels, seas)
     feats = features(x_in, cats)
+    # The head computes in the policy's dtype (bf16 halves every activation
+    # and weight tile it streams); its readout re-emits yhat_n in fp32 so the
+    # pinball reduction and the Eq.-5 exp stay full precision.
+    cdt = cfg.compute_dtype
+    if feats.dtype != cdt:
+        feats = feats.astype(cdt)
     yhat_n, c_sq = H.get_head(cfg.head).apply(cfg, params, feats)
     return ESRNNStates(levels=levels, seas=seas, pos=pos, x_in=x_in,
                        yhat_n=yhat_n, c_sq=c_sq)

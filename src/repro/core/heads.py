@@ -109,6 +109,21 @@ def frozen_param_groups(cfg) -> FrozenSet[str]:
 # ---------------------------------------------------------------------------
 
 
+def _policy_cast(tree, dtype):
+    """Cast a shared-weight subtree's float leaves to the compute dtype.
+
+    Identity under the fp32 policy (master weights already are the state
+    dtype); under bf16 this cast is where the half-width weight tiles come
+    from -- gradients flow back through it and arrive in fp32 for the
+    optimizer, so the master weights and Adam moments never round.
+    """
+    if jnp.dtype(dtype) == jnp.float32:
+        return tree
+    return jax.tree_util.tree_map(
+        lambda a: a.astype(dtype)
+        if jnp.issubdtype(a.dtype, jnp.floating) else a, tree)
+
+
 def _readout_init(cfg, key1, key2):
     scale = 1.0 / jnp.sqrt(jnp.asarray(cfg.hidden_size, jnp.float32))
     return {
@@ -120,9 +135,19 @@ def _readout_init(cfg, key1, key2):
 
 
 def _readout_apply(params, hid):
-    head = params["head"]
-    z = jnp.tanh(hid @ head["dense_w"] + head["dense_b"])
-    return z @ head["out_w"] + head["out_b"]
+    # fp32 dot accumulators regardless of the compute dtype; the final
+    # linear re-emits yhat_n in fp32 (tiny tensor), so the loss reduction
+    # and Eq.-5 exp downstream never see bf16 rounding. Bit-identical to
+    # the pre-policy math under fp32.
+    head = _policy_cast(params["head"], hid.dtype)
+    # cast the fp32-accumulated pre-activation back to the stream dtype
+    # *before* the pointwise tanh, so the nonlinearity (and its backward
+    # mul chain) runs at stream precision; no-op under fp32
+    z = jnp.tanh((
+        jnp.dot(hid, head["dense_w"], preferred_element_type=jnp.float32)
+        + head["dense_b"].astype(jnp.float32)).astype(hid.dtype))
+    return (jnp.dot(z, head["out_w"], preferred_element_type=jnp.float32)
+            + head["out_b"].astype(jnp.float32))
 
 
 # ---------------------------------------------------------------------------
@@ -153,20 +178,28 @@ def lstm_head_init(cfg, key):
 
 
 def lstm_head_apply(cfg, params, feats):
-    """Dilated residual LSTM -> (attention) -> tanh dense -> linear head."""
+    """Dilated residual LSTM -> (attention) -> tanh dense -> linear head.
+
+    ``feats`` arrives in the policy's compute dtype; the recurrent stack and
+    attention weights are cast to match (:func:`_policy_cast`), with the
+    attention scores accumulated in fp32 so the softmax stays full
+    precision under bf16.
+    """
     hid, c_sq = drnn_apply(
-        params["rnn"], feats, dilations=cfg.dilations, use_pallas=cfg.use_pallas
+        _policy_cast(params["rnn"], feats.dtype), feats,
+        dilations=cfg.dilations, use_pallas=cfg.use_pallas
     )
     if cfg.attention:
-        ap = params["attn"]
+        ap = _policy_cast(params["attn"], feats.dtype)
         q = hid @ ap["wq"]
         k = hid @ ap["wk"]
         v = hid @ ap["wv"]
-        s = jnp.einsum("nph,nqh->npq", q, k) / jnp.sqrt(
-            jnp.asarray(cfg.hidden_size, jnp.float32)).astype(hid.dtype)
+        s = jnp.einsum(
+            "nph,nqh->npq", q, k, preferred_element_type=jnp.float32
+        ) / jnp.sqrt(jnp.asarray(cfg.hidden_size, jnp.float32))
         p_idx = jnp.arange(hid.shape[1])
         mask = p_idx[:, None] >= p_idx[None, :]
-        s = jnp.where(mask[None], s.astype(jnp.float32), -jnp.inf)
+        s = jnp.where(mask[None], s, -jnp.inf)
         hid = hid + jnp.einsum(
             "npq,nqh->nph", jax.nn.softmax(s, axis=-1).astype(v.dtype), v)
     return _readout_apply(params, hid), c_sq
@@ -202,7 +235,8 @@ def esn_head_apply(cfg, params, feats):
     HW params sit upstream of the windows).
     """
     hid, c_sq = drnn_apply(
-        params["rnn"], feats, dilations=cfg.dilations, use_pallas=cfg.use_pallas
+        _policy_cast(params["rnn"], feats.dtype), feats,
+        dilations=cfg.dilations, use_pallas=cfg.use_pallas
     )
     return _readout_apply(params, hid), c_sq
 
@@ -256,10 +290,17 @@ def ssm_head_apply(cfg, params, feats):
     hid = cfg.hidden_size
     nheads, headdim = ssm_dims(cfg)
     sp = params["ssm"]
-    proj = feats @ sp["w_in"]
-    x = proj[..., :hid].reshape(n, t, nheads, headdim)
-    bb = proj[..., hid:hid + _SSM_STATE].reshape(n, t, 1, _SSM_STATE)
-    cc = proj[..., hid + _SSM_STATE:hid + 2 * _SSM_STATE].reshape(
+    cdt = feats.dtype
+    # input projection: compute-dtype weight tile, fp32 accumulator; the
+    # x/B/C streams drop back to the compute dtype for the SSD scan while
+    # the dt gate and the decay/bias/skip params stay fp32 (they set the
+    # recurrence's stability, the state-dtype part of the policy).
+    proj = jnp.dot(feats, _policy_cast(sp["w_in"], cdt),
+                   preferred_element_type=jnp.float32)
+    x = proj[..., :hid].astype(cdt).reshape(n, t, nheads, headdim)
+    bb = proj[..., hid:hid + _SSM_STATE].astype(cdt).reshape(
+        n, t, 1, _SSM_STATE)
+    cc = proj[..., hid + _SSM_STATE:hid + 2 * _SSM_STATE].astype(cdt).reshape(
         n, t, 1, _SSM_STATE)
     dt = jax.nn.softplus(
         proj[..., hid + 2 * _SSM_STATE:].astype(jnp.float32) + sp["dt_bias"])

@@ -195,7 +195,11 @@ def _hw_smooth_scan(y, params, seasonality, seasonality2):
     seasonal = seasonality > 1
 
     # seasonality ring buffer s_{t} .. s_{t+m-1}; index 0 is "current" s_t.
-    seas0 = c["init_seas"] if seasonal else jnp.ones((n, m), y.dtype)
+    # Rings live in the *param* dtype (fp32), not y's: under the bf16 policy
+    # y streams in half width but the level/seasonality recurrence must
+    # accumulate in the state dtype -- each step promotes y_t, so the carry
+    # never rounds through bf16.
+    seas0 = c["init_seas"] if seasonal else jnp.ones((n, m), alpha.dtype)
 
     dual = seasonality2 > 1
     if dual:
@@ -205,7 +209,7 @@ def _hw_smooth_scan(y, params, seasonality, seasonality2):
     else:
         m2 = 1
         gamma2 = jnp.zeros_like(gamma)
-        seas20 = jnp.ones((n, 1), y.dtype)
+        seas20 = jnp.ones((n, 1), alpha.dtype)
 
     # initial level: first de-seasonalized observation (primer estimate).
     l0 = y[:, 0] / (seas0[:, 0] * seas20[:, 0])

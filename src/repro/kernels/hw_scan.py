@@ -57,13 +57,17 @@ def _hw_scan_kernel(y_ref, a_ref, g_ref, s0_ref, lev_ref, seas_ref, ring_ref,
                     *, t_len: int, m: int):
     alpha = a_ref[0, :]                     # (BN,)
     gamma = g_ref[0, :]
+    # Precision policy: y may stream in bf16 (half-width VMEM tiles), but the
+    # level/seasonality recurrence accumulates in the param dtype (fp32) --
+    # each loaded y row is widened before use, state never rounds down.
+    state_dt = alpha.dtype
 
     # init the seasonality ring in VMEM scratch
     ring_ref[...] = s0_ref[...]
 
     def body(t, l_prev):
         slot = jax.lax.rem(t, m)
-        y_t = pl.load(y_ref, (pl.ds(t, 1), slice(None)))[0]        # (BN,)
+        y_t = pl.load(y_ref, (pl.ds(t, 1), slice(None)))[0].astype(state_dt)
         s_t = pl.load(ring_ref, (pl.ds(slot, 1), slice(None)))[0]
         l_t = alpha * y_t / s_t + (1.0 - alpha) * l_prev
         s_new = gamma * y_t / l_t + (1.0 - gamma) * s_t
@@ -72,7 +76,7 @@ def _hw_scan_kernel(y_ref, a_ref, g_ref, s0_ref, lev_ref, seas_ref, ring_ref,
         pl.store(seas_ref, (pl.ds(t, 1), slice(None)), s_t[None, :])
         return l_t
 
-    l0 = y_ref[0, :] / s0_ref[0, :]
+    l0 = y_ref[0, :].astype(state_dt) / s0_ref[0, :]
     jax.lax.fori_loop(0, t_len, body, l0)
 
     # trailing future factors s_T .. s_{T+M-1} live in ring slots (T+k) mod M
@@ -94,9 +98,11 @@ def _hw_scan_bwd_kernel(y_ref, a_ref, g_ref, lev_ref, seas_ref,
     """
     alpha = a_ref[0, :]                     # (BN,)
     gamma = g_ref[0, :]
+    state_dt = alpha.dtype
     # s_0 == init_seas_0: the forward emits it as seas row 0, so the
     # init_seas array itself need not be streamed into the backward.
     s00 = seas_ref[0, :]
+    y0 = y_ref[0, :].astype(state_dt)
 
     # seed: the trailing future factors s_T .. s_{T+M-1} are pure outputs,
     # so their cotangents are exactly the incoming dseas rows.
@@ -111,13 +117,13 @@ def _hw_scan_bwd_kernel(y_ref, a_ref, g_ref, lev_ref, seas_ref,
         lam_next, da, dg = carry
         t = t_len - 1 - i
         slot = jax.lax.rem(t, m)
-        y_t = pl.load(y_ref, (pl.ds(t, 1), slice(None)))[0]
+        y_t = pl.load(y_ref, (pl.ds(t, 1), slice(None)))[0].astype(state_dt)
         l_t = pl.load(lev_ref, (pl.ds(t, 1), slice(None)))[0]
         s_t = pl.load(seas_ref, (pl.ds(t, 1), slice(None)))[0]
         # l_{t-1}: levels row t-1 for t > 0, else the primer l_{-1} = y_0/s_0
         l_prev = pl.load(lev_ref, (pl.ds(jnp.maximum(t - 1, 0), 1),
                                    slice(None)))[0]
-        l_prev = jnp.where(t > 0, l_prev, y_ref[0, :] / s00)
+        l_prev = jnp.where(t > 0, l_prev, y0 / s00)
         sig_tpm = pl.load(ring_ref, (pl.ds(slot, 1), slice(None)))[0]
 
         lam_t = (pl.load(dlev_ref, (pl.ds(t, 1), slice(None)))[0]
@@ -131,7 +137,8 @@ def _hw_scan_bwd_kernel(y_ref, a_ref, g_ref, lev_ref, seas_ref,
         dy_t = lam_t * alpha / s_t + sig_tpm * gamma / l_t
         # l_{-1} = y_0 / s_0 adds (1-alpha)*lam_0 / s_0 to dy_0
         dy_t = dy_t + jnp.where(t == 0, (1.0 - alpha) * lam_t / s00, 0.0)
-        pl.store(dy_ref, (pl.ds(t, 1), slice(None)), dy_t[None, :])
+        pl.store(dy_ref, (pl.ds(t, 1), slice(None)),
+                 dy_t.astype(dy_ref.dtype)[None, :])
 
         da = da + lam_t * (y_t / s_t - l_prev)
         dg = dg + sig_tpm * (y_t / l_t - s_t)
@@ -144,7 +151,7 @@ def _hw_scan_bwd_kernel(y_ref, a_ref, g_ref, lev_ref, seas_ref,
     # after the loop, ring slot k holds sig_k == d loss / d init_seas_k
     ds0_ref[...] = ring_ref[...]
     # ... minus the primer-level term through l_{-1} = y_0 / s_0 on slot 0
-    corr = (1.0 - alpha) * lam0 * y_ref[0, :] / (s00 * s00)
+    corr = (1.0 - alpha) * lam0 * y0 / (s00 * s00)
     row0 = pl.load(ds0_ref, (pl.ds(0, 1), slice(None)))[0]
     pl.store(ds0_ref, (pl.ds(0, 1), slice(None)), (row0 - corr)[None, :])
 
@@ -152,7 +159,10 @@ def _hw_scan_bwd_kernel(y_ref, a_ref, g_ref, lev_ref, seas_ref,
 def _hw_scan_fwd_call(y_tm, alpha, gamma, init_seas_tm, *, interpret: bool):
     t_len, n = y_tm.shape
     m = init_seas_tm.shape[0]
-    dtype = y_tm.dtype
+    # outputs and the VMEM ring carry the *param* (state) dtype: under the
+    # bf16 policy only the streamed y tiles are half width, the recurrence
+    # state stays fp32
+    dtype = alpha.dtype
     grid = (n // BLOCK_N,)
 
     kernel = functools.partial(_hw_scan_kernel, t_len=t_len, m=m)
@@ -182,7 +192,9 @@ def _hw_scan_fwd_call(y_tm, alpha, gamma, init_seas_tm, *, interpret: bool):
 def _hw_scan_bwd_call(y_tm, alpha, gamma, levels, seas, dlev, dseas, *,
                       m: int, interpret: bool):
     t_len, n = y_tm.shape
-    dtype = y_tm.dtype
+    # param/init-seas cotangents accumulate in the state dtype; only dy
+    # drops back to the (possibly bf16) observation dtype
+    dtype = alpha.dtype
     grid = (n // BLOCK_N,)
 
     kernel = functools.partial(_hw_scan_bwd_kernel, t_len=t_len, m=m)
@@ -201,7 +213,7 @@ def _hw_scan_bwd_call(y_tm, alpha, gamma, levels, seas, dlev, dseas, *,
         ],
         out_specs=[col(t_len), col(1), col(1), col(m)],
         out_shape=[
-            jax.ShapeDtypeStruct((t_len, n), dtype),
+            jax.ShapeDtypeStruct((t_len, n), y_tm.dtype),
             jax.ShapeDtypeStruct((1, n), dtype),
             jax.ShapeDtypeStruct((1, n), dtype),
             jax.ShapeDtypeStruct((m, n), dtype),
@@ -231,7 +243,7 @@ def _hw_scan_tm_bwd(interpret, res, cotangents):
     dlev, dseas = cotangents
     dy, da, dg, ds0 = _hw_scan_bwd_call(
         y_tm, alpha, gamma, levels, seas,
-        jnp.asarray(dlev, y_tm.dtype), jnp.asarray(dseas, y_tm.dtype),
+        jnp.asarray(dlev, levels.dtype), jnp.asarray(dseas, seas.dtype),
         m=seas.shape[0] - y_tm.shape[0], interpret=interpret)
     return dy, da, dg, ds0
 

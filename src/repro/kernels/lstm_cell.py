@@ -30,6 +30,21 @@ from jax.experimental import pallas as pl
 BLOCK_B = 128
 
 
+def block_b_for(dtype) -> int:
+    """Batch-tile rows per grid step, by stream dtype.
+
+    The roofline report (``repro.roofline.esrnn`` / BENCH_PR9) puts the
+    fused train step deep in the memory-bound regime (arithmetic intensity
+    far below the TPU ridge point), so the tile size is bandwidth-driven:
+    a bf16 stream halves every per-row VMEM tile (x/h/c plus the (B, 4H)
+    activation residual), which lets a 2-byte dtype double the batch rows
+    per grid step inside the same VMEM budget -- half the grid dispatches,
+    and each gate GEMM sees an MXU-shaped 256-row operand. fp32 keeps the
+    tuned 128.
+    """
+    return 2 * BLOCK_B if jnp.dtype(dtype).itemsize <= 2 else BLOCK_B
+
+
 def _gates(wx_ref, wh_ref, b_ref, x, h):
     return (
         jnp.dot(x, wx_ref[...], preferred_element_type=jnp.float32)
@@ -123,18 +138,19 @@ def _lstm_bwd_kernel(wx_ref, wh_ref, x_ref, h_ref, c_ref, c_new_ref, act_ref,
     db_ref[...] += jnp.sum(dgates, axis=0)[None, :].astype(db_ref.dtype)
 
 
-def _lstm_call_specs():
+def _lstm_call_specs(block_b: int):
     full = lambda rows, cols: pl.BlockSpec((rows, cols), lambda i: (0, 0))
-    tile = lambda cols: pl.BlockSpec((BLOCK_B, cols), lambda i: (i, 0))
+    tile = lambda cols: pl.BlockSpec((block_b, cols), lambda i: (i, 0))
     return full, tile
 
 
-def _lstm_fwd_call(wx, wh, b, x, h, c, *, interpret: bool, with_acts: bool):
+def _lstm_fwd_call(wx, wh, b, x, h, c, *, interpret: bool, with_acts: bool,
+                   block_b: int = BLOCK_B):
     bsz, input_size = x.shape
     hidden = h.shape[1]
     dtype = x.dtype
-    grid = (bsz // BLOCK_B,)
-    full, tile = _lstm_call_specs()
+    grid = (bsz // block_b,)
+    full, tile = _lstm_call_specs(block_b)
     in_specs = [
         full(input_size, 4 * hidden),
         full(hidden, 4 * hidden),
@@ -160,12 +176,13 @@ def _lstm_fwd_call(wx, wh, b, x, h, c, *, interpret: bool, with_acts: bool):
     )(wx, wh, b[None, :], x, h, c)
 
 
-def _lstm_bwd_call(wx, wh, x, h, c, c_new, act, dh, dc, *, interpret: bool):
+def _lstm_bwd_call(wx, wh, x, h, c, c_new, act, dh, dc, *, interpret: bool,
+                   block_b: int = BLOCK_B):
     bsz, input_size = x.shape
     hidden = h.shape[1]
     dtype = x.dtype
-    grid = (bsz // BLOCK_B,)
-    full, tile = _lstm_call_specs()
+    grid = (bsz // block_b,)
+    full, tile = _lstm_call_specs(block_b)
     kernel = functools.partial(_lstm_bwd_kernel, hidden=hidden)
     dx, dhp, dcp, dwx, dwh, db = pl.pallas_call(
         kernel,
@@ -193,45 +210,55 @@ def _lstm_bwd_call(wx, wh, x, h, c, c_new, act, dh, dc, *, interpret: bool):
             jax.ShapeDtypeStruct((bsz, input_size), dtype),
             jax.ShapeDtypeStruct((bsz, hidden), dtype),
             jax.ShapeDtypeStruct((bsz, hidden), dtype),
-            jax.ShapeDtypeStruct((input_size, 4 * hidden), dtype),
-            jax.ShapeDtypeStruct((hidden, 4 * hidden), dtype),
-            jax.ShapeDtypeStruct((1, 4 * hidden), dtype),
+            # weight/bias grads accumulate across the sequential batch-grid
+            # steps: always fp32, or a bf16 stream would round the running
+            # sum at every revisit (the bf16-policy failure mode this
+            # kernel exists to avoid). Cast back to the param dtype happens
+            # in the vjp wrapper, after the sum is complete.
+            jax.ShapeDtypeStruct((input_size, 4 * hidden), jnp.float32),
+            jax.ShapeDtypeStruct((hidden, 4 * hidden), jnp.float32),
+            jax.ShapeDtypeStruct((1, 4 * hidden), jnp.float32),
         ],
         interpret=interpret,
     )(wx, wh, x, h, c, c_new, act, dh, dc)
     return dwx, dwh, db[0], dx, dhp, dcp
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
-def _lstm_cell_padded(interpret, wx, wh, b, x, h, c):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _lstm_cell_padded(interpret, block_b, wx, wh, b, x, h, c):
     return _lstm_fwd_call(wx, wh, b, x, h, c, interpret=interpret,
-                          with_acts=False)
+                          with_acts=False, block_b=block_b)
 
 
-def _lstm_cell_padded_fwd(interpret, wx, wh, b, x, h, c):
-    h_new, c_new, act = _lstm_fwd_call(wx, wh, b, x, h, c,
-                                       interpret=interpret, with_acts=True)
+def _lstm_cell_padded_fwd(interpret, block_b, wx, wh, b, x, h, c):
+    h_new, c_new, act = _lstm_fwd_call(wx, wh, b, x, h, c, interpret=interpret,
+                                       with_acts=True, block_b=block_b)
     return (h_new, c_new), (wx, wh, x, h, c, c_new, act)
 
 
-def _lstm_cell_padded_bwd(interpret, res, cotangents):
+def _lstm_cell_padded_bwd(interpret, block_b, res, cotangents):
     wx, wh, x, h, c, c_new, act = res
     dh, dc = cotangents
     dwx, dwh, db, dx, dhp, dcp = _lstm_bwd_call(
         wx, wh, x, h, c, c_new, act,
         jnp.asarray(dh, x.dtype), jnp.asarray(dc, x.dtype),
-        interpret=interpret)
-    return dwx, dwh, db, dx, dhp, dcp
+        interpret=interpret, block_b=block_b)
+    # the kernel accumulates weight grads in fp32; drop to the (possibly
+    # bf16) weight dtype only once, after the full-batch sum
+    return (dwx.astype(wx.dtype), dwh.astype(wh.dtype),
+            db.astype(wx.dtype), dx, dhp, dcp)
 
 
 _lstm_cell_padded.defvjp(_lstm_cell_padded_fwd, _lstm_cell_padded_bwd)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def lstm_cell_padded(wx, wh, b, x, h, c, *, interpret: bool = False):
-    """Padded entry: B % BLOCK_B == 0; I, H already lane-aligned by ops.py.
+@functools.partial(jax.jit, static_argnames=("interpret", "block_b"))
+def lstm_cell_padded(wx, wh, b, x, h, c, *, interpret: bool = False,
+                     block_b: int = BLOCK_B):
+    """Padded entry: B % block_b == 0; I, H already lane-aligned by ops.py.
 
     Differentiable end-to-end: the custom_vjp's backward is the fused
-    gradient kernel (see module docstring).
+    gradient kernel (see module docstring). ``block_b`` is the batch tile
+    per grid step (:func:`block_b_for` picks it from the stream dtype).
     """
-    return _lstm_cell_padded(interpret, wx, wh, b, x, h, c)
+    return _lstm_cell_padded(interpret, block_b, wx, wh, b, x, h, c)

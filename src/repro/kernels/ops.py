@@ -63,7 +63,10 @@ def hw_scan(y, params, *, seasonality: int):
     m = max(seasonality, 1)
     c = params.constrained()
     alpha, gamma = c["alpha"], c["gamma"]
-    init_seas = c["init_seas"] if seasonality > 1 else jnp.ones((n, m), y.dtype)
+    # flat ring in the *param* dtype: the recurrence state stays fp32 even
+    # when y streams in bf16 (see hw_scan.py's precision contract)
+    init_seas = (c["init_seas"] if seasonality > 1
+                 else jnp.ones((n, m), alpha.dtype))
     if seasonality <= 1:
         # gamma must keep s == 1: force gamma = 0 contribution by flat ring
         gamma = jnp.zeros_like(gamma)
@@ -93,9 +96,10 @@ def lstm_cell(wx, wh, b, x, h, c):
     """Fused LSTM cell; signature mirrors ref.lstm_cell_ref."""
     bsz, input_size = x.shape
     hidden = h.shape[1]
+    block_b = _lstm.block_b_for(x.dtype)
     i_pad = input_size + ((-input_size) % 128)
     h_pad = hidden + ((-hidden) % 128)
-    b_pad = bsz + ((-bsz) % _lstm.BLOCK_B)
+    b_pad = bsz + ((-bsz) % block_b)
 
     wx_p = jnp.pad(_pad_gates(wx, hidden, h_pad), ((0, i_pad - input_size), (0, 0)))
     wh_p = jnp.pad(_pad_gates(wh, hidden, h_pad), ((0, h_pad - hidden), (0, 0)))
@@ -105,7 +109,8 @@ def lstm_cell(wx, wh, b, x, h, c):
     c_p = jnp.pad(c, ((0, b_pad - bsz), (0, h_pad - hidden)))
 
     h_new, c_new = _lstm.lstm_cell_padded(
-        wx_p, wh_p, b_p, x_p, h_p, c_p, interpret=_interpret()
+        wx_p, wh_p, b_p, x_p, h_p, c_p, interpret=_interpret(),
+        block_b=block_b,
     )
     return h_new[:bsz, :hidden], c_new[:bsz, :hidden]
 

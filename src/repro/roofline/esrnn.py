@@ -1,0 +1,212 @@
+"""Roofline of the *real* ES-RNN entry points: fused train step and predict.
+
+The ROADMAP's mixed-precision item starts from a measurement gap -- the seed
+shipped a roofline package (HLO walker + jaxpr cost) that had never been
+pointed at the ES-RNN path. This module closes it: it builds the actual
+training step (``repro.train.engine.make_step_fn`` fused into the donated
+``lower_superstep`` artifact) and the actual forecast program
+(``esrnn_forecast_fn``, optionally ``shard_map``-sharded over a series
+mesh), compiles them AOT, and extracts roofline terms per entry point --
+FLOPs, HBM bytes, arithmetic intensity, and the compute/memory/collective
+time terms of :class:`repro.roofline.analysis.RooflineTerms`.
+
+Two byte measures are reported side by side, on purpose:
+
+* ``hlo_bytes`` -- the loop-aware compiled-HLO walk
+  (:func:`repro.roofline.hlo_walk.analyze_hlo`): what the *backend that
+  compiled the module* will stream. On a CPU host this includes any f32
+  converts CPU legalization inserts around bf16 ops.
+* ``jaxpr_bytes`` -- the loop-aware aval walk
+  (:func:`repro.roofline.jaxpr_cost.jaxpr_bytes`): backend-independent
+  traffic of the program as written, the hardware-neutral yardstick for
+  precision-policy comparison (the BENCH_PR9 ``roofline`` column's
+  fp32-vs-bf16 per-step ratio gates on it).
+
+What the numbers say (and what this PR did about it): at every realistic
+batch size the fused step's arithmetic intensity sits far below the TPU
+ridge point (PEAK_FLOPS / HBM_BW ~ 240 flops/byte) -- the ES-RNN step is
+memory-bound, exactly the Hewamalage et al. observation that motivated the
+bf16 policy. Halving the streamed bytes is therefore worth ~2x on the
+memory term, and the Pallas batch tile doubles for 2-byte streams
+(:func:`repro.kernels.lstm_cell.block_b_for`) because VMEM per row halved.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.roofline.analysis import analyze
+from repro.roofline.jaxpr_cost import jaxpr_bytes, jaxpr_flops
+
+# Probe sizes: big enough that the head/window tensors dominate constants,
+# small enough to trace/compile in CI seconds.
+PROBE_SERIES = 64
+PROBE_T = 60
+PROBE_BATCH = 32
+PROBE_SCAN_STEPS = 4
+
+
+@dataclasses.dataclass
+class EntryRoofline:
+    """One (entry point, precision) roofline row of the bench artifact."""
+
+    entry: str                 # "fit" | "predict"
+    precision: str             # cfg.precision
+    steps: int                 # fused steps in the artifact (1 for predict)
+    flops: float               # per-step, jaxpr walker (loop-aware, global)
+    hlo_bytes: float           # per-step, compiled-HLO walker
+    jaxpr_bytes: float         # per-step, aval walker (backend-independent)
+    intensity: float           # flops / hlo_bytes
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    bytes_by_dtype: Dict[str, float]
+
+    def to_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+def _probe_inputs(cfg, n_series: int, t_len: int):
+    from repro.analysis.collectives import probe_batch
+    from repro.core.esrnn import esrnn_init
+
+    y, cats = probe_batch(cfg, n_series, t=t_len)
+    params = esrnn_init(jax.random.PRNGKey(0), cfg, n_series)
+    return params, jnp.asarray(y), jnp.asarray(cats)
+
+
+def _row(entry, cfg, compiled, jaxpr, *, steps: int, chips: int) -> EntryRoofline:
+    flops_total = jaxpr_flops(jaxpr)
+    terms = analyze(compiled, chips=chips, flops_global=flops_total)
+    jb = jaxpr_bytes(jaxpr)
+    hlo_per_step = terms.bytes_global / steps
+    return EntryRoofline(
+        entry=entry,
+        precision=cfg.precision,
+        steps=steps,
+        flops=flops_total / steps,
+        hlo_bytes=hlo_per_step,
+        jaxpr_bytes=jb / steps,
+        intensity=(flops_total / terms.bytes_global
+                   if terms.bytes_global else 0.0),
+        compute_s=terms.compute_s / steps,
+        memory_s=terms.memory_s / steps,
+        collective_s=terms.collective_s / steps,
+        dominant=terms.dominant,
+        bytes_by_dtype=jaxpr_bytes_breakdown(jaxpr),
+    )
+
+
+def jaxpr_bytes_breakdown(jaxpr) -> Dict[str, float]:
+    from repro.roofline.jaxpr_cost import jaxpr_bytes_by_dtype
+
+    return {k: float(v) for k, v in jaxpr_bytes_by_dtype(jaxpr).items()}
+
+
+def fit_roofline(cfg, *, n_series: int = PROBE_SERIES, t_len: int = PROBE_T,
+                 batch: int = PROBE_BATCH,
+                 scan_steps: int = PROBE_SCAN_STEPS) -> EntryRoofline:
+    """Roofline of the donated fused superstep (the real training artifact).
+
+    Builds ``make_step_fn`` over probe tensors, fuses ``scan_steps`` steps
+    via ``lower_superstep`` exactly as the trainer does, compiles, and
+    normalizes every term per step.
+    """
+    from repro.core.heads import frozen_param_groups
+    from repro.train.engine import (
+        lower_superstep, make_step_fn, make_superstep_fn, split_frozen,
+    )
+    from repro.train.optimizer import AdamConfig, adam_init
+
+    params, y, cats = _probe_inputs(cfg, n_series, t_len)
+    mask = jnp.ones(y.shape, jnp.float32)
+    frozen = frozen_param_groups(cfg)
+    step = make_step_fn(cfg, AdamConfig(lr=1e-3), y, cats, mask,
+                        frozen=frozen)
+    opt = adam_init(split_frozen(params, frozen)[0])
+    sched = jnp.stack([(jnp.arange(batch) + k * batch) % n_series
+                       for k in range(scan_steps)])
+
+    compiled = lower_superstep(step, params, opt, sched).compile()
+    # the jaxpr walkers need the traced (undonated) program, not the artifact
+    jaxpr = jax.make_jaxpr(make_superstep_fn(step, donate=False))(
+        params, opt, sched)
+    return _row("fit", cfg, compiled, jaxpr, steps=scan_steps, chips=1)
+
+
+def predict_roofline(cfg, *, n_series: int = PROBE_SERIES,
+                     t_len: int = PROBE_T,
+                     mesh=None) -> EntryRoofline:
+    """Roofline of the forecast program; pass ``mesh`` for the sharded path.
+
+    With a mesh the program is the ``shard_map`` series-data-parallel
+    forecast (``esrnn_forecast_dp`` -- zero collectives by construction,
+    which the collective term should confirm) and terms are global across
+    the mesh's chips.
+    """
+    from repro.core.esrnn import esrnn_forecast_fn
+
+    params, y, cats = _probe_inputs(cfg, n_series, t_len)
+    chips = 1
+    if mesh is not None:
+        from repro.sharding.series import esrnn_forecast_dp
+
+        chips = int(np.prod(mesh.devices.shape))
+
+        def fc(p, yy, cc):
+            return esrnn_forecast_dp(cfg, p, yy, cc, mesh=mesh)
+    else:
+        def fc(p, yy, cc):
+            return esrnn_forecast_fn(cfg, p, yy, cc)
+
+    compiled = jax.jit(fc).lower(params, y, cats).compile()
+    jaxpr = jax.make_jaxpr(fc)(params, y, cats)
+    return _row("predict", cfg, compiled, jaxpr, steps=1, chips=chips)
+
+
+def precision_compare(base_cfg, *, mesh=None,
+                      entries=("fit", "predict")) -> Dict:
+    """fp32 vs bf16 rows for each entry point + the per-step byte ratios.
+
+    This is the BENCH_PR9 ``roofline`` column: one row per
+    (entry, precision), plus ``fit_jaxpr_bytes_ratio_bf16`` /
+    ``fit_hlo_bytes_ratio_bf16`` -- bf16 per-step bytes over fp32 per-step
+    bytes for the fused train step. The jaxpr ratio is the
+    hardware-independent gate (<= 0.65 in CI); the HLO ratio is reported
+    for whatever backend compiled the artifact.
+    """
+    import dataclasses as dc
+
+    rows = []
+    by_key: Dict[tuple, EntryRoofline] = {}
+    for precision in ("fp32", "bf16"):
+        cfg = dc.replace(base_cfg, precision=precision)
+        if "fit" in entries:
+            r = fit_roofline(cfg)
+            rows.append(r)
+            by_key[("fit", precision)] = r
+        if "predict" in entries:
+            r = predict_roofline(cfg, mesh=mesh)
+            rows.append(r)
+            by_key[("predict", precision)] = r
+
+    def ratio(entry: str, field: str) -> Optional[float]:
+        a, b = by_key.get((entry, "bf16")), by_key.get((entry, "fp32"))
+        if a is None or b is None or not getattr(b, field):
+            return None
+        return getattr(a, field) / getattr(b, field)
+
+    return {
+        "probe": {"n_series": PROBE_SERIES, "t_len": PROBE_T,
+                  "batch": PROBE_BATCH, "scan_steps": PROBE_SCAN_STEPS},
+        "rows": [r.to_dict() for r in rows],
+        "fit_jaxpr_bytes_ratio_bf16": ratio("fit", "jaxpr_bytes"),
+        "fit_hlo_bytes_ratio_bf16": ratio("fit", "hlo_bytes"),
+        "predict_jaxpr_bytes_ratio_bf16": ratio("predict", "jaxpr_bytes"),
+    }

@@ -40,6 +40,7 @@ from __future__ import annotations
 from typing import Callable, FrozenSet, Iterator, Tuple
 
 import jax
+import jax.numpy as jnp
 
 from repro.core.esrnn import (
     ESRNNConfig, combine_series, esrnn_loss_fn, gather_series,
@@ -80,6 +81,7 @@ def make_step_fn(
     mesh=None,
     sparse: bool = False,
     frozen: FrozenSet[str] = frozenset(),
+    compress: bool = False,
 ) -> StepFn:
     """Build the pure training step the per-step loop and the scan share.
 
@@ -97,7 +99,23 @@ def make_step_fn(
     ``opt_state`` must cover exactly that subtree. The returned step still
     takes and returns the *full* params dict -- frozen groups ride through
     unchanged -- so the checkpoint/save/predict surface stays head-agnostic.
+
+    ``compress`` turns on error-feedback int8 compression of the *shared*
+    weight gradients (``repro.train.grad_compression``) before Adam sees
+    them: the values entering the (GSPMD-emitted) gradient all-reduce are
+    int8-decodable, and the quantization residual is carried in the step
+    state and added back next step, which keeps convergence (Karimireddy et
+    al. 2019). The per-series HW rows are data-sharded and never
+    all-reduced, so they stay exact. With ``compress`` the step's
+    ``opt_state`` is ``(adam_state, error_state)`` where ``error_state``
+    covers the shared trainable groups (``init_error_state``). Dense
+    optimizer path only.
     """
+    if sparse and compress:
+        raise ValueError(
+            "compress=True requires the dense optimizer path: the sparse "
+            "segment update only ever touches per-series HW rows locally, "
+            "so there is no shared-gradient exchange to compress")
     if mesh is not None:
         from repro.sharding.series import esrnn_loss_dp
 
@@ -134,8 +152,26 @@ def make_step_fn(
                 return loss_fn(gather_series({**p, **p_froz}, idx), yb, cb, mb)
 
             loss, grads = jax.value_and_grad(batch_loss)(p_train)
-            p_train, opt_state = adam_update(
-                grads, opt_state, p_train, cfg_adam, group_fn=esrnn_group_fn)
+            if compress:
+                from repro.train.grad_compression import compress_tree_int8
+
+                adam_state, err = opt_state
+                # deterministic per-batch quantization noise: fold the batch
+                # identity into a fixed key, so a resumed/refused run
+                # re-draws the same noise at the same schedule position
+                key = jax.random.fold_in(
+                    jax.random.PRNGKey(0), jnp.sum(idx).astype(jnp.uint32))
+                g_shared = {k: v for k, v in grads.items() if k != "hw"}
+                g_shared, err = compress_tree_int8(g_shared, err, key)
+                grads = {**grads, **g_shared}
+                p_train, adam_state = adam_update(
+                    grads, adam_state, p_train, cfg_adam,
+                    group_fn=esrnn_group_fn)
+                opt_state = (adam_state, err)
+            else:
+                p_train, opt_state = adam_update(
+                    grads, opt_state, p_train, cfg_adam,
+                    group_fn=esrnn_group_fn)
         return {**p_train, **p_froz}, opt_state, loss
 
     return step

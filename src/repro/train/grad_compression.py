@@ -15,6 +15,11 @@ the all-reduce itself is emitted by GSPMD, so "compression" here means the
 values entering the collective are int8/sparse-decodable. The reference
 semantics (quantize -> [all-reduce] -> dequantize + error) are exact and
 unit-tested; the collective-bytes saving shows up in the roofline term.
+
+Wired into the training engine: ``TrainConfig.compress_grads`` (or
+``make_step_fn(..., compress=True)``) routes the shared-weight gradients
+through :func:`compress_tree_int8` each step, carrying the error-feedback
+residual in the step state alongside the Adam state.
 """
 
 from __future__ import annotations

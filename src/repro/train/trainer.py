@@ -63,6 +63,10 @@ class TrainConfig:
                                         # (1 = per-step dispatch loop)
     sparse_adam: bool = False           # segment per-series Adam: update only
                                         # the batch's HW rows (lazy moments)
+    compress_grads: bool = False        # error-feedback int8 compression of
+                                        # the shared-weight gradient exchange
+                                        # (per-series rows stay exact; dense
+                                        # Adam only)
 
     @classmethod
     def from_spec(cls, spec, *, ckpt_dir: Optional[str] = None,
@@ -87,6 +91,7 @@ class TrainConfig:
             data_parallel=spec.data_parallel,
             scan_steps=spec.scan_steps,
             sparse_adam=spec.sparse_adam,
+            compress_grads=getattr(spec, "compress_grads", False),
         )
 
 
@@ -189,6 +194,18 @@ def train_esrnn(
                  sorted(k for k in trainable if k != "hw"))
     opt_state = (adam_init_sparse(trainable) if cfg.sparse_adam
                  else adam_init(trainable))
+    if cfg.compress_grads:
+        if cfg.sparse_adam:
+            raise ValueError(
+                "compress_grads requires dense Adam (sparse_adam=False): "
+                "the sparse path has no shared-gradient exchange to compress")
+        from repro.train.grad_compression import init_error_state
+
+        # step state grows an error-feedback residual over the shared
+        # trainable groups; checkpoints carry it like any other opt leaf
+        opt_state = (opt_state, init_error_state(
+            {k: v for k, v in trainable.items() if k != "hw"}))
+        log.info("error-feedback int8 compression of shared grads enabled")
     start_step = 0
 
     ckpt = Checkpointer(cfg.ckpt_dir, keep=cfg.keep) if cfg.ckpt_dir else None
@@ -220,7 +237,8 @@ def train_esrnn(
     # observation mask keeps left-padded (variable-length) positions out of
     # the loss; it is all-ones for equalized data.
     step_fn = make_step_fn(mcfg, cfg_adam, y_all, cats_all, mask_all,
-                           mesh=mesh, sparse=cfg.sparse_adam, frozen=frozen)
+                           mesh=mesh, sparse=cfg.sparse_adam, frozen=frozen,
+                           compress=cfg.compress_grads)
 
     @jax.jit
     def val_smape(params):

@@ -1,0 +1,147 @@
+"""Mixed-precision policy: bf16 compute, fp32 state, fp32-quality results.
+
+Trajectory-TOLERANCE tests, deliberately not bit-exact goldens: the bf16
+policy's contract is *equal-quality* convergence, not equal bits. Per head
+the suite asserts a short fit under ``precision="bf16"`` tracks the fp32
+trajectory within a small relative tolerance, forecasts stay finite, the
+fp32-state half holds (master params, HW table, Adam moments, loss all
+fp32), and the fp32 path is left bit-identical by construction (the policy
+threading is a no-op under ``precision="fp32"`` -- the repo's pre-existing
+golden suites enforce that side).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.esrnn import (
+    esrnn_forecast_fn, esrnn_init, esrnn_loss_fn, esrnn_predict_stats,
+    make_config,
+)
+from repro.core.heads import available_heads, frozen_param_groups
+from repro.data.pipeline import prepare
+from repro.data.synthetic_m4 import generate
+from repro.train.engine import make_step_fn, split_frozen
+from repro.train.optimizer import AdamConfig, adam_init
+
+STEPS = 12
+BATCH = 16
+
+
+def _data():
+    d = prepare(generate("quarterly", scale=0.002, seed=0))
+    return jnp.asarray(d.train), jnp.asarray(d.cats)
+
+
+def _fit(cfg, y, cats, steps=STEPS):
+    n = y.shape[0]
+    params = esrnn_init(jax.random.PRNGKey(0), cfg, n)
+    frozen = frozen_param_groups(cfg)
+    mask = jnp.ones(y.shape, jnp.float32)
+    step = make_step_fn(cfg, AdamConfig(lr=1e-3), y, cats, mask, frozen=frozen)
+    opt = adam_init(split_frozen(params, frozen)[0])
+    losses = []
+    for k in range(steps):
+        idx = (jnp.arange(BATCH) + BATCH * k) % n
+        params, opt, loss = step(params, opt, idx)
+    losses.append(float(loss))
+    return params, opt, losses
+
+
+def test_compute_dtype_property():
+    cfg = make_config("quarterly")
+    assert cfg.compute_dtype == jnp.dtype(jnp.float32)
+    assert dataclasses.replace(cfg, precision="bf16").compute_dtype \
+        == jnp.dtype(jnp.bfloat16)
+    with pytest.raises(ValueError, match="precision policy"):
+        _ = dataclasses.replace(cfg, precision="fp16").compute_dtype
+
+
+@pytest.mark.parametrize("head", sorted(available_heads()))
+def test_bf16_fit_tracks_fp32_trajectory(head):
+    y, cats = _data()
+    cfg32 = make_config("quarterly", head=head)
+    cfg16 = dataclasses.replace(cfg32, precision="bf16")
+    _, _, l32 = _fit(cfg32, y, cats)
+    _, _, l16 = _fit(cfg16, y, cats)
+    assert np.isfinite(l16).all()
+    # equal-quality, not equal-bits: the 12-step loss must track fp32
+    np.testing.assert_allclose(l16, l32, rtol=0.05)
+
+
+@pytest.mark.parametrize("head", sorted(available_heads()))
+def test_bf16_predict_and_stats_finite_and_close(head):
+    y, cats = _data()
+    cfg32 = make_config("quarterly", head=head)
+    cfg16 = dataclasses.replace(cfg32, precision="bf16")
+    params = esrnn_init(jax.random.PRNGKey(0), cfg32, y.shape[0])
+    fc32 = np.asarray(esrnn_forecast_fn(cfg32, params, y, cats))
+    fc16 = np.asarray(esrnn_forecast_fn(cfg16, params, y, cats))
+    assert fc16.dtype == np.float32          # readout re-emits fp32
+    assert np.isfinite(fc16).all()
+    np.testing.assert_allclose(fc16, fc32, rtol=0.05, atol=1e-3)
+    mean, sigma = esrnn_predict_stats(cfg16, params, y, cats)
+    assert np.isfinite(np.asarray(mean)).all()
+    assert np.isfinite(np.asarray(sigma)).all()
+
+
+def test_bf16_state_stays_fp32_through_training():
+    """The fp32-accumulation half: table, moments, loss, master params."""
+    y, cats = _data()
+    cfg = make_config("quarterly", precision="bf16")
+    params, opt, _ = _fit(cfg, y, cats, steps=4)
+    assert all(jnp.dtype(l.dtype) == jnp.float32
+               for l in jax.tree_util.tree_leaves(params["hw"]))
+    # master copies of the shared weights stay fp32 (cast to bf16 at apply)
+    assert all(jnp.dtype(l.dtype) == jnp.float32
+               for l in jax.tree_util.tree_leaves(params)
+               if jnp.issubdtype(l.dtype, jnp.floating))
+    assert all(jnp.dtype(l.dtype) == jnp.float32
+               for k in ("mu", "nu")
+               for l in jax.tree_util.tree_leaves(opt[k]))
+    from repro.core.esrnn import gather_series
+
+    idx = jnp.arange(8)
+    loss = esrnn_loss_fn(cfg, gather_series(params, idx), y[:8], cats[:8],
+                         jnp.ones(y[:8].shape, jnp.float32))
+    assert loss.dtype == jnp.float32
+
+
+def test_bf16_gradients_arrive_fp32():
+    """Grads flow through the policy cast back to the fp32 master leaves."""
+    from repro.core.esrnn import gather_series
+
+    y, cats = _data()
+    cfg = make_config("quarterly", precision="bf16")
+    params = esrnn_init(jax.random.PRNGKey(0), cfg, y.shape[0])
+    idx = jnp.arange(8)
+    g = jax.grad(lambda p: esrnn_loss_fn(
+        cfg, gather_series(p, idx), y[:8], cats[:8],
+        jnp.ones(y[:8].shape, jnp.float32)))(params)
+    leaves = jax.tree_util.tree_leaves(g)
+    assert all(jnp.dtype(l.dtype) == jnp.float32 for l in leaves
+               if jnp.issubdtype(l.dtype, jnp.floating))
+    assert all(np.isfinite(np.asarray(l)).all() for l in leaves)
+
+
+def test_spec_routes_precision_override():
+    from repro.forecast.spec import get_smoke_spec
+
+    spec = get_smoke_spec("esrnn-quarterly").replace(precision="bf16")
+    assert spec.model.precision == "bf16"
+    assert spec.model.compute_dtype == jnp.dtype(jnp.bfloat16)
+
+
+def test_bf16_backtest_finite():
+    from repro.core.esrnn import esrnn_forecast_at_fn
+
+    y, cats = _data()
+    cfg = make_config("quarterly", precision="bf16")
+    params = esrnn_init(jax.random.PRNGKey(0), cfg, y.shape[0])
+    t = y.shape[1]
+    origins = (t - 2 * cfg.output_size, t - cfg.output_size)
+    fc = np.asarray(esrnn_forecast_at_fn(cfg, params, y, cats, origins))
+    assert np.isfinite(fc).all()

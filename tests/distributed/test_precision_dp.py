@@ -1,0 +1,93 @@
+"""bf16 policy under series-DP sharding: 8 forced host devices.
+
+The mixed-precision path must be *sharding-transparent*: the policy casts
+happen inside the per-shard compute, the psum'd masked-mean loss and the
+per-series HW table stay fp32 on every shard. Unlike the fp32 path (1e-6
+parity in test_heads_dp.py), bf16 parity is bounded by quantization, not
+layout: GSPMD partitioning changes which f32 intermediates get rounded to
+bf16, so sharded-vs-single differences sit at the bf16 ulp scale (~1e-4
+after a short fit) -- the tolerances here pin that budget so a real
+divergence (sharded math changing, state dropping to bf16) still fails.
+Also checks the sharded predict roofline probe emits finite numbers and
+the bf16/fp32 byte ratio survives partitioning.
+"""
+
+import json
+import subprocess
+import sys
+
+import pytest
+
+_SUBPROC = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax
+import numpy as np
+
+from repro.forecast import ESRNNForecaster, get_smoke_spec
+from repro.sharding.series import make_series_mesh
+
+out = {"devices": len(jax.devices())}
+mesh = make_series_mesh(8)
+
+spec = get_smoke_spec("esrnn-quarterly", data_seed=3, n_steps=6)
+spec16 = spec.replace(precision="bf16")
+
+f1 = ESRNNForecaster(spec16)
+data = f1.make_data()
+f1.init_params(data.n_series)
+f8 = ESRNNForecaster(spec16.replace(data_parallel=8))
+f8.init_params(data.n_series)
+f1.fit(data)
+f8.fit(data)
+
+out["loss_absdiff"] = float(abs(
+    f1.history_["loss"][-1] - f8.history_["loss"][-1]))
+p1 = f1.predict()
+p8 = f8.predict()
+out["fit_predict_reldiff"] = float(np.max(np.abs(p1 - p8) / np.abs(p1)))
+p1m = f1.predict(mesh=mesh)
+out["predict_reldiff"] = float(np.max(np.abs(p1 - p1m) / np.abs(p1)))
+e1, e8 = f1.evaluate(), f8.evaluate(mesh=mesh)
+out["owa_absdiff"] = float(abs(e1["owa"] - e8["owa"]))
+out["hw_f32"] = all(
+    str(l.dtype) == "float32"
+    for l in jax.tree_util.tree_leaves(f8.params_["hw"]))
+
+# sharded predict roofline probe: finite terms + the bf16 byte saving
+# survives GSPMD partitioning
+from repro.core.esrnn import make_config
+from repro.roofline.esrnn import predict_roofline
+import dataclasses
+
+cfg32 = make_config("quarterly")
+r32 = predict_roofline(cfg32, mesh=mesh)
+r16 = predict_roofline(dataclasses.replace(cfg32, precision="bf16"), mesh=mesh)
+out["sharded_predict_bytes_finite"] = bool(
+    np.isfinite(r32.jaxpr_bytes) and np.isfinite(r16.jaxpr_bytes)
+    and r32.jaxpr_bytes > 0)
+out["sharded_predict_bytes_ratio"] = float(r16.jaxpr_bytes / r32.jaxpr_bytes)
+
+print(json.dumps(out))
+"""
+
+
+@pytest.mark.slow
+def test_bf16_sharded_fit_predict_parity_on_8_devices():
+    r = subprocess.run(
+        [sys.executable, "-c", _SUBPROC], capture_output=True, text=True,
+        timeout=560)
+    assert r.returncode == 0, r.stderr[-3000:]
+    out = json.loads(r.stdout.strip().splitlines()[-1])
+    assert out["devices"] == 8
+    assert out["loss_absdiff"] <= 1e-6, out
+    # bf16-ulp budget (see module docstring), not the fp32 paths' 1e-6
+    assert out["fit_predict_reldiff"] <= 1e-3, out
+    assert out["predict_reldiff"] <= 1e-3, out
+    assert out["owa_absdiff"] <= 1e-3, out
+    assert out["hw_f32"], out
+    assert out["sharded_predict_bytes_finite"], out
+    # the policy's byte saving must survive partitioning (<= 0.65 gate is
+    # enforced on the fit program in CI; predict is typically lower still)
+    assert out["sharded_predict_bytes_ratio"] <= 0.75, out

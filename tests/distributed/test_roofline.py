@@ -93,3 +93,66 @@ def test_roofline_terms_math():
     assert abs(t.memory_s - 1.0) < 1e-9
     assert t.dominant in ("compute", "memory")
     assert model_flops(int(1e9), 1000) == 6e12
+
+
+# ---------------------------------------------------------------------------
+# jaxpr-level byte accounting (backend-independent precision yardstick)
+# ---------------------------------------------------------------------------
+
+
+def test_jaxpr_bytes_matmul_exact():
+    from repro.roofline.jaxpr_cost import bytes_of, jaxpr_bytes_by_dtype
+
+    a = jax.ShapeDtypeStruct((8, 16), jnp.float32)
+    b = jax.ShapeDtypeStruct((16, 4), jnp.float32)
+    # one dot eqn: in (8*16 + 16*4) + out (8*4) floats, 4 bytes each
+    assert bytes_of(jnp.dot, a, b) == 4 * (8 * 16 + 16 * 4 + 8 * 4)
+    by_dt = jaxpr_bytes_by_dtype(jax.make_jaxpr(jnp.dot)(a, b))
+    assert set(by_dt) == {"float32"}
+
+
+def test_jaxpr_bytes_scan_scales_with_trip_count():
+    from repro.roofline.jaxpr_cost import bytes_of
+
+    def body_scan(steps):
+        def f(x):
+            def step(c, _):
+                return jnp.tanh(c), None
+            return jax.lax.scan(step, x, None, length=steps)[0]
+        return f
+
+    x = jax.ShapeDtypeStruct((128,), jnp.float32)
+    b5 = bytes_of(body_scan(5), x)
+    b10 = bytes_of(body_scan(10), x)
+    # the tanh body dominates; doubling the trip count ~doubles the bytes
+    assert b10 > 1.8 * b5
+
+
+def test_jaxpr_bytes_halve_under_bf16():
+    """The property the BENCH roofline ratio rests on: the same program in
+    a 2-byte stream dtype accounts ~half the aval bytes."""
+    from repro.roofline.jaxpr_cost import bytes_of
+
+    def f(x):
+        return jnp.tanh(x * 2.0 + 1.0)
+
+    b32 = bytes_of(f, jax.ShapeDtypeStruct((256, 256), jnp.float32))
+    b16 = bytes_of(f, jax.ShapeDtypeStruct((256, 256), jnp.bfloat16))
+    assert abs(b16 / b32 - 0.5) < 0.05
+
+
+def test_jaxpr_bytes_by_dtype_splits_mixed_program():
+    from repro.roofline.jaxpr_cost import jaxpr_bytes_by_dtype
+
+    def f(x16, w32):
+        # bf16 stream into an f32-emitting dot: both dtypes show up
+        return jnp.dot(x16, w32.astype(jnp.bfloat16),
+                       preferred_element_type=jnp.float32)
+
+    jaxpr = jax.make_jaxpr(f)(
+        jax.ShapeDtypeStruct((32, 64), jnp.bfloat16),
+        jax.ShapeDtypeStruct((64, 16), jnp.float32),
+    )
+    by_dt = jaxpr_bytes_by_dtype(jaxpr)
+    assert by_dt.get("bfloat16", 0) > 0
+    assert by_dt.get("float32", 0) > 0

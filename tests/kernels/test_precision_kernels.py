@@ -1,0 +1,121 @@
+"""Mixed-precision contracts of the Pallas kernels.
+
+The bf16 policy's kernel half: ``hw_scan`` must keep its recurrence state in
+the *param* dtype (fp32) even when y streams in bf16, the fused LSTM cell
+must match the pure bf16 cell (both accumulate gate dots in fp32 on the MXU),
+and ``block_b_for`` must widen the batch tile for 2-byte streams.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.holt_winters import hw_init_params, hw_smooth
+from repro.kernels import lstm_cell as _lstm
+from repro.kernels import ops
+from repro.kernels.ref import lstm_cell_ref
+
+
+def _hw_setup(n, t, m, seed):
+    rng = np.random.default_rng(seed)
+    y = jnp.asarray(np.abs(rng.lognormal(2, 0.5, (n, t))) + 0.5, jnp.float32)
+    p = hw_init_params(n, m, dtype=jnp.float32)
+    p = dataclasses.replace(
+        p,
+        alpha_logit=jnp.asarray(rng.normal(0, 1, n), jnp.float32),
+        gamma_logit=jnp.asarray(rng.normal(0, 1, n), jnp.float32),
+        init_seas_logit=jnp.asarray(rng.normal(0, 0.2, (n, m)), jnp.float32),
+    )
+    return y, p
+
+
+def test_block_b_for_widens_on_bf16():
+    assert _lstm.block_b_for(jnp.float32) == _lstm.BLOCK_B
+    assert _lstm.block_b_for(jnp.bfloat16) == 2 * _lstm.BLOCK_B
+    assert _lstm.block_b_for(jnp.float16) == 2 * _lstm.BLOCK_B
+
+
+@pytest.mark.parametrize("m", [1, 4])
+def test_hw_scan_bf16_stream_fp32_state(m):
+    """bf16 y against fp32 HW params: state stays fp32, values track fp32.
+
+    The tolerance is the bf16 *input rounding* (y is quantized once on the
+    way in), not accumulation drift -- the recurrence itself runs fp32.
+    """
+    y, p = _hw_setup(n=12, t=41, m=m, seed=m)
+    lv32, ss32 = ops.hw_scan(y, p, seasonality=m)
+    lv16, ss16 = ops.hw_scan(y.astype(jnp.bfloat16), p, seasonality=m)
+    assert lv16.dtype == jnp.float32
+    assert ss16.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(lv16), np.asarray(lv32),
+                               rtol=2e-2, atol=1e-2)
+    np.testing.assert_allclose(np.asarray(ss16), np.asarray(ss32),
+                               rtol=2e-2, atol=1e-2)
+
+
+def test_hw_scan_bf16_matches_pure_hw_smooth():
+    """Kernel vs pure-jnp path under the same bf16-y / fp32-params split."""
+    y, p = _hw_setup(n=9, t=30, m=4, seed=7)
+    y16 = y.astype(jnp.bfloat16)
+    lv_k, ss_k = ops.hw_scan(y16, p, seasonality=4)
+    lv_p, ss_p = hw_smooth(y16, p, seasonality=4, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(lv_k), np.asarray(lv_p.astype(jnp.float32)),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(ss_k), np.asarray(ss_p.astype(jnp.float32)),
+                               rtol=1e-4, atol=1e-4)
+
+
+def _cell_setup(b, i, h, seed, dtype):
+    rng = np.random.default_rng(seed)
+    mk = lambda *s: jnp.asarray(rng.normal(0, 0.2, s), dtype)
+    return (mk(i, 4 * h), mk(h, 4 * h), mk(4 * h), mk(b, i), mk(b, h), mk(b, h))
+
+
+@pytest.mark.parametrize("b,i,h", [(9, 12, 16), (300, 30, 40)])
+def test_lstm_cell_bf16_forward_matches_pure(b, i, h):
+    """Fused kernel vs the pure bf16 cell (core.drnn path), not the fp32
+    oracle: both sides quantize identically, so tolerances are tight."""
+    from repro.core import drnn
+
+    args = _cell_setup(b, i, h, seed=b + i, dtype=jnp.bfloat16)
+    wx, wh, bb, x, hh, cc = args
+    h_k, c_k = ops.lstm_cell(wx, wh, bb, x, hh, cc)
+    h_p, c_p = drnn.lstm_cell({"wx": wx, "wh": wh, "b": bb}, x, hh, cc,
+                              use_pallas=False)
+    assert h_k.dtype == jnp.bfloat16 and c_k.dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(h_k, np.float32),
+                               np.asarray(h_p, np.float32),
+                               rtol=2e-2, atol=2e-2)
+    np.testing.assert_allclose(np.asarray(c_k, np.float32),
+                               np.asarray(c_p, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_lstm_cell_bf16_grads_track_fp32_reference():
+    """bf16 kernel cotangents vs fp32 oracle grads: bf16-rounding-level
+    agreement proves the backward dots accumulate wide despite emitting
+    stream-dtype tensors."""
+    b, i, h = 13, 30, 40
+    args16 = _cell_setup(b, i, h, seed=3, dtype=jnp.bfloat16)
+    args32 = tuple(a.astype(jnp.float32) for a in args16)
+    rng = np.random.default_rng(4)
+    w1 = jnp.asarray(rng.normal(0, 1, (b, h)), jnp.float32)
+    w2 = jnp.asarray(rng.normal(0, 1, (b, h)), jnp.float32)
+
+    def proj(cell_fn, *a):
+        hn, cn = cell_fn(*a)
+        return (jnp.sum(hn.astype(jnp.float32) * w1)
+                + jnp.sum(cn.astype(jnp.float32) * w2))
+
+    g16 = jax.grad(lambda *a: proj(ops.lstm_cell, *a),
+                   argnums=tuple(range(6)))(*args16)
+    g32 = jax.grad(lambda *a: proj(lstm_cell_ref, *a),
+                   argnums=tuple(range(6)))(*args32)
+    names = ("dwx", "dwh", "db", "dx", "dh", "dc")
+    for name, gk, gr in zip(names, g16, g32):
+        scale = max(1.0, float(jnp.max(jnp.abs(gr))))
+        np.testing.assert_allclose(np.asarray(gk, np.float32), np.asarray(gr),
+                                   atol=0.03 * scale, err_msg=name)
