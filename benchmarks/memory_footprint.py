@@ -1,0 +1,156 @@
+"""Memory footprint: resident vs chunked (out-of-core) fit.
+
+``python -m benchmarks.memory_footprint [--fast]`` fits the same synthetic
+N-series problem twice -- once fully device-resident (the default sparse-Adam
+path) and once streamed through ``TrainConfig.series_chunk`` with the
+per-series HW table + moments living in a host :class:`HostStateTable` --
+sampling peak live device bytes at every superstep boundary
+(``jax.live_arrays``; host ``ru_maxrss`` recorded as the fallback signal on
+backends without per-array accounting). This is the ``peak_memory`` column of
+``BENCH_PR10.json``: the out-of-core claim is that device peak scales with
+``series_chunk``, not N, so chunked peak must come in under resident peak at
+N=65k (CI gates it).
+
+It also re-runs both modes at small N on the *same chunk-major schedule*
+(streaming vs ``chunk_resident=True``) and reports the max loss-trajectory
+absdiff -- the exactness half of the claim (gated <= 1e-6; bit-exact on one
+backend in practice).
+"""
+
+import argparse
+import gc
+import json
+import os
+import resource
+import time
+
+import numpy as np
+
+
+def _device_bytes() -> int:
+    import jax
+
+    return sum(int(a.nbytes) for a in jax.live_arrays())
+
+
+def _max_rss_mb() -> float:
+    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+
+
+def _fit(mcfg, data, cfg):
+    """One fit with a superstep-boundary device-memory sampler."""
+    from repro.train.trainer import train_esrnn
+
+    peak = {"bytes": 0}
+
+    def on_step(step, losses, params):
+        peak["bytes"] = max(peak["bytes"], _device_bytes())
+
+    t0 = time.perf_counter()
+    out = train_esrnn(mcfg, data, cfg, hooks={"on_step": on_step})
+    dt = time.perf_counter() - t0
+    losses = np.asarray(out["history"]["loss"], np.float64)
+    del out
+    gc.collect()
+    return {
+        "peak_device_bytes": int(peak["bytes"]),
+        "fit_s": float(dt),
+        "final_loss": float(losses[-1]),
+    }, losses
+
+
+def run(fast: bool = False) -> dict:
+    import dataclasses
+
+    from repro.core.esrnn import make_config
+    from repro.data.pipeline import synthetic_prepared
+    from repro.train.host_table import HostStateTable
+    from repro.train.trainer import TrainConfig
+
+    n = 8192 if fast else 65536
+    chunk = n // 8
+    mcfg = make_config("quarterly", hidden_size=8)
+    data = synthetic_prepared(n, seasonality=mcfg.seasonality,
+                              horizon=mcfg.output_size, series_length=24)
+    # 3 full chunk visits' worth of steps: the streamed fit must cross
+    # several prefetch/retire boundaries for the peak to be representative.
+    bs = 256 if fast else 512
+    steps_per_chunk = chunk // bs
+    cfg = TrainConfig(batch_size=bs, n_steps=3 * steps_per_chunk,
+                      scan_steps=4, sparse_adam=True,
+                      eval_every=10**9, ckpt_every=10**9)
+
+    resident, _ = _fit(mcfg, data, cfg)
+    chunked, _ = _fit(mcfg, data,
+                      dataclasses.replace(cfg, series_chunk=chunk))
+
+    # -- exactness: streaming vs device-resident on the SAME chunk-major
+    # schedule, small N (the BENCH gate; tests/train/test_chunked.py holds
+    # the bit-exact version) --------------------------------------------------
+    n_small = 512
+    small = synthetic_prepared(n_small, seasonality=mcfg.seasonality,
+                               horizon=mcfg.output_size, series_length=24)
+    scfg = TrainConfig(batch_size=64, n_steps=24, scan_steps=4,
+                       sparse_adam=True, series_chunk=128,
+                       eval_every=10**9, ckpt_every=10**9)
+    _, l_stream = _fit(mcfg, small, scfg)
+    _, l_ref = _fit(mcfg, small,
+                    dataclasses.replace(scfg, chunk_resident=True))
+    absdiff = float(np.max(np.abs(l_stream - l_ref)))
+
+    table_bytes = HostStateTable.init(
+        n, mcfg.seasonality, seasonality2=mcfg.seasonality2).nbytes()
+    return {
+        "n_series": n,
+        "series_chunk": chunk,
+        "batch_size": bs,
+        "n_steps": cfg.n_steps,
+        "resident": resident,
+        "chunked": chunked,
+        "device_peak_ratio_chunked_vs_resident": (
+            chunked["peak_device_bytes"] / max(resident["peak_device_bytes"], 1)),
+        "host_table_bytes": int(table_bytes),
+        "max_rss_mb": _max_rss_mb(),
+        "trajectory": {
+            "n_series": n_small,
+            "series_chunk": scfg.series_chunk,
+            "n_steps": scfg.n_steps,
+            "max_loss_absdiff_stream_vs_resident": absdiff,
+        },
+    }
+
+
+def print_report(r: dict) -> None:
+    res, chk = r["resident"], r["chunked"]
+    print(f"  N={r['n_series']} chunk={r['series_chunk']} "
+          f"batch={r['batch_size']} steps={r['n_steps']}")
+    print(f"  resident: peak device {res['peak_device_bytes'] / 2**20:8.2f} MiB  "
+          f"fit {res['fit_s']:6.2f}s  final loss {res['final_loss']:.4f}")
+    print(f"  chunked:  peak device {chk['peak_device_bytes'] / 2**20:8.2f} MiB  "
+          f"fit {chk['fit_s']:6.2f}s  final loss {chk['final_loss']:.4f}")
+    print(f"  -> chunked/resident device peak: "
+          f"{r['device_peak_ratio_chunked_vs_resident']:.3f}  "
+          f"(host table {r['host_table_bytes'] / 2**20:.2f} MiB, "
+          f"max RSS {r['max_rss_mb']:.0f} MB)")
+    tr = r["trajectory"]
+    print(f"  exactness (N={tr['n_series']}, chunk={tr['series_chunk']}, "
+          f"{tr['n_steps']} steps): stream-vs-resident loss absdiff "
+          f"{tr['max_loss_absdiff_stream_vs_resident']:.2e}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="reduced sizes")
+    ap.add_argument("--json", default=None, help="also dump the dict here")
+    args = ap.parse_args()
+    r = run(fast=args.fast)
+    print("== Memory footprint: resident vs chunked fit ==")
+    print_report(r)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(r, f, indent=1)
+        print("wrote", os.path.abspath(args.json))
+
+
+if __name__ == "__main__":
+    main()

@@ -9,7 +9,7 @@ Two sections:
   program, sharded over a series mesh when this process has multiple
   devices) at both precision policies and report FLOPs, HBM bytes,
   arithmetic intensity and the roofline time terms per entry point. This
-  is the ``roofline`` column of the BENCH_PR9 trajectory; CI gates the
+  is the ``roofline`` column of the BENCH_PR10 trajectory; CI gates the
   bf16/fp32 fused-step byte ratio.
 """
 

@@ -4,7 +4,7 @@
 sustained-load serving benchmark, the pluggable-head comparison and the
 roofline report, printing ``name,us_per_call,derived`` CSV lines plus the
 human-readable tables, and saving JSON under experiments/bench/. It also
-writes the repo-root ``BENCH_PR9.json`` trajectory point (speedup through
+writes the repo-root ``BENCH_PR10.json`` trajectory point (speedup through
 the public estimator, the ``use_pallas`` train-step timing column, the
 fused-engine ``scan_steps`` steps/sec column, the sharded-vs-single
 ``predict_path`` series/sec column, the continuous-batching ``serve_load``
@@ -16,10 +16,14 @@ split, now with a bf16-policy lstm row and its OWA ratio vs fp32), the
 budget, collective counts, aliased-buffer counts), the ``roofline`` column
 (FLOPs / HBM bytes / arithmetic intensity / compute-vs-memory term for the
 real fused train step and predict program, fp32 vs bf16 side by side; CI
-gates the bf16 fused-step byte ratio <= 0.65), sMAPE, device sweep, git
-sha) that CI archives as an artifact -- the perf record the next
-regression gets compared against (``BENCH_PR2.json``..``BENCH_PR9.json``
-are the prior points, kept for comparison).
+gates the bf16 fused-step byte ratio <= 0.65), the ``peak_memory`` column
+(peak live device bytes for a resident vs a ``series_chunk``-streamed
+out-of-core fit at the same N, plus the streamed-vs-resident loss
+trajectory absdiff; CI gates chunked < resident and absdiff <= 1e-6),
+sMAPE, device sweep, git sha) that CI archives as an artifact -- the perf
+record the next regression gets compared against
+(``BENCH_PR2.json``..``BENCH_PR9.json`` are the prior points, kept for
+comparison).
 
 Invoke through ``scripts/run_env.sh`` for pinned runtime hygiene (tcmalloc,
 XLA flags, dtype bits): ``bash scripts/run_env.sh python -m benchmarks.run``.
@@ -32,7 +36,7 @@ import subprocess
 import time
 
 BENCH_TRAJECTORY = os.path.join(
-    os.path.dirname(__file__), "..", "BENCH_PR9.json")
+    os.path.dirname(__file__), "..", "BENCH_PR10.json")
 
 
 def _git_sha() -> str:
@@ -67,12 +71,13 @@ def analysis_column() -> dict:
     }
 
 
-def write_trajectory(t5, t4, serve, heads, analysis, roofline) -> str:
-    """BENCH_PR9.json: the machine-readable perf point CI archives."""
+def write_trajectory(t5, t4, serve, heads, analysis, roofline,
+                     peak_memory) -> str:
+    """BENCH_PR10.json: the machine-readable perf point CI archives."""
     import jax
 
     payload = {
-        "bench": "PR9",
+        "bench": "PR10",
         "git_sha": _git_sha(),
         "devices": len(jax.devices()),
         "speedup_vectorized_vs_loop": t5["estimator_path"]["speedup"],
@@ -107,6 +112,12 @@ def write_trajectory(t5, t4, serve, heads, analysis, roofline) -> str:
         # both precision policies (CI gates every term finite & non-zero
         # and the bf16 fused-step jaxpr-byte ratio <= 0.65x of fp32)
         "roofline": roofline,
+        # out-of-core column: peak live device bytes for resident vs
+        # series_chunk-streamed fit at the same N, the host-table size the
+        # streamed fit keeps off-device, and the streamed-vs-resident loss
+        # trajectory absdiff on the shared chunk-major schedule (CI gates
+        # chunked peak < resident peak and absdiff <= 1e-6)
+        "peak_memory": peak_memory,
         "smape_quarterly": t4["per_frequency"]["quarterly"]["esrnn"]["smape"],
         "owa_quarterly": t4["per_frequency"]["quarterly"]["esrnn"]["owa"],
         "device_sweep": t5["device_sweep"],
@@ -123,8 +134,8 @@ def main() -> None:
     args, _ = ap.parse_known_args()
 
     from benchmarks import (
-        head_compare, roofline_report, serve_load, table4_accuracy,
-        table5_speedup, table6_categories,
+        head_compare, memory_footprint, roofline_report, serve_load,
+        table4_accuracy, table5_speedup, table6_categories,
     )
 
     csv = []
@@ -226,6 +237,15 @@ def main() -> None:
     roofline_report.print_esrnn_section(rl)
 
     t0 = time.perf_counter()
+    pm = memory_footprint.run(fast=args.fast)
+    dt = time.perf_counter() - t0
+    csv.append(("memory_footprint", dt * 1e6,
+                f"device_peak_ratio="
+                f"{pm['device_peak_ratio_chunked_vs_resident']:.3f}"))
+    print("\n== Memory footprint: resident vs chunked fit ==")
+    memory_footprint.print_report(pm)
+
+    t0 = time.perf_counter()
     an = analysis_column()
     dt = time.perf_counter() - t0
     csv.append(("graph_audit", dt * 1e6,
@@ -239,7 +259,7 @@ def main() -> None:
     for name, us, derived in csv:
         print(f"{name},{us:.0f},{derived}")
 
-    print("\nwrote", write_trajectory(t5, t4, sv, hc, an, rl))
+    print("\nwrote", write_trajectory(t5, t4, sv, hc, an, rl, pm))
 
 
 if __name__ == "__main__":

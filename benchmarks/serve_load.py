@@ -24,7 +24,7 @@ but for latency-bound serving. Both engines pre-warm every
 compiles never pollute the percentiles.
 
 Run directly (``python -m benchmarks.serve_load [--fast]``) or through
-``benchmarks.run``, which folds the result into ``BENCH_PR9.json``.
+``benchmarks.run``, which folds the result into ``BENCH_PR10.json``.
 """
 
 from __future__ import annotations

@@ -29,6 +29,10 @@ echo "== fused-superstep fit smoke (scan_steps=8, sparse per-series adam) =="
 python -m repro.launch.forecast fit --spec esrnn-quarterly --smoke --steps 20 \
     --set scan_steps=8 --set sparse_adam=true
 
+echo "== chunked out-of-core fit smoke (host HW table, series_chunk=24) =="
+python -m repro.launch.forecast fit --spec esrnn-quarterly --smoke --steps 20 \
+    --set series_chunk=24 --set scan_steps=4
+
 echo "== pluggable-head fit smokes (esn frozen reservoir, ssm scan) =="
 python -m repro.launch.forecast fit --spec esn-quarterly --smoke --steps 20 \
     --set sparse_adam=true

@@ -21,7 +21,7 @@ Five invariants, one per lint module, audited per commit by CI:
 ``repro.launch.forecast analyze`` is the CLI over :func:`run_audit`; the
 report's ``metrics`` (compile counts, collective counts, aliased-buffer
 counts) also land as the ``analysis`` column of the benchmark trajectory
-(``BENCH_PR9.json``).
+(``BENCH_PR10.json``).
 """
 
 from __future__ import annotations

@@ -40,6 +40,14 @@ def _treedef_token(tree) -> str:
     return str(jax.tree_util.tree_structure(tree))
 
 
+def _is_table_path(path) -> bool:
+    """True for leaves of the per-series state: HW rows, moments, clocks."""
+    for entry in path:
+        if getattr(entry, "key", getattr(entry, "name", None)) in ("hw", "t_hw"):
+            return True
+    return False
+
+
 class Checkpointer:
     def __init__(self, directory: str, *, keep: int = 3):
         self.directory = directory
@@ -48,8 +56,23 @@ class Checkpointer:
 
     # -- save ---------------------------------------------------------------
 
-    def save(self, step: int, state: Any, *, metric: Optional[float] = None) -> str:
-        leaves, _ = _flatten(state)
+    def save(self, step: int, state: Any, *, metric: Optional[float] = None,
+             shard_rows: Optional[int] = None) -> str:
+        """Write one atomic checkpoint; returns the published directory.
+
+        ``shard_rows``: when set, every *per-series table* leaf (any leaf
+        whose tree path passes through an ``"hw"`` or ``"t_hw"`` key -- the
+        HW rows, their sparse-Adam moments, the last-touch clocks) is split
+        along its leading series axis into independent
+        ``leaf_<i>.shard_<j>.bin`` files of ``shard_rows`` rows each, with
+        the shard grid recorded in the manifest. Chunked training streams
+        shards straight out of the host table, so checkpoint I/O buffers
+        stay O(shard), and a restore can assemble (or stream) them row-range
+        by row-range. Shared-weight leaves are never sharded. The manifest
+        treedef is identical with and without sharding, so resident and
+        chunked checkpoints restore into each other.
+        """
+        flat = jax.tree_util.tree_flatten_with_path(state)[0]
         tmp = os.path.join(self.directory, f"step_{step}.tmp-{uuid.uuid4().hex[:8]}")
         final = os.path.join(self.directory, f"step_{step}")
         os.makedirs(tmp, exist_ok=True)
@@ -59,17 +82,30 @@ class Checkpointer:
             "treedef": _treedef_token(state),
             "leaves": [],
         }
-        for i, leaf in enumerate(leaves):
-            arr = np.asarray(jax.device_get(leaf))
-            path = os.path.join(tmp, f"leaf_{i}.bin")
+
+        def _write(path, payload):
             with open(path, "wb") as f:
                 # raw bytes (not .npy): round-trips ml_dtypes (bfloat16, fp8)
-                f.write(arr.tobytes())
+                f.write(payload)
                 f.flush()
                 os.fsync(f.fileno())
-            manifest["leaves"].append(
-                {"index": i, "shape": list(arr.shape), "dtype": str(arr.dtype)}
-            )
+
+        for i, (tpath, leaf) in enumerate(flat):
+            arr = np.asarray(jax.device_get(leaf))
+            entry = {"index": i, "shape": list(arr.shape), "dtype": str(arr.dtype)}
+            if (shard_rows and _is_table_path(tpath) and arr.ndim
+                    and arr.shape[0] > shard_rows):
+                n = arr.shape[0]
+                bounds = [(lo, min(lo + shard_rows, n))
+                          for lo in range(0, n, shard_rows)]
+                for j, (lo, hi) in enumerate(bounds):
+                    _write(os.path.join(tmp, f"leaf_{i}.shard_{j}.bin"),
+                           np.ascontiguousarray(arr[lo:hi]).tobytes())
+                entry["shard_rows"] = int(shard_rows)
+                entry["n_shards"] = len(bounds)
+            else:
+                _write(os.path.join(tmp, f"leaf_{i}.bin"), arr.tobytes())
+            manifest["leaves"].append(entry)
         mpath = os.path.join(tmp, "manifest.json")
         with open(mpath, "w") as f:
             json.dump(manifest, f)
@@ -131,12 +167,22 @@ class Checkpointer:
         *,
         step: Optional[int] = None,
         shardings: Any = None,
+        host_paths=None,
     ) -> Tuple[int, Any]:
         """Restore into the structure of ``template``.
 
         ``shardings``: optional pytree of NamedSharding (same structure) for
         elastic placement on the current mesh; leaves land on device with
         that sharding (any mesh whose axes divide the stored global shapes).
+
+        ``host_paths``: optional predicate over tree paths; leaves whose path
+        it accepts are returned as *writable host numpy* instead of device
+        arrays -- how a chunked resume adopts the per-series table back into
+        its ``HostStateTable`` without a full-table device round-trip.
+
+        Row-sharded table leaves (``save(..., shard_rows=...)``) are
+        reassembled transparently, so either save layout restores under
+        either training mode.
         """
         if step is None:
             step = self.latest_step()
@@ -147,20 +193,38 @@ class Checkpointer:
             manifest = json.load(f)
         if manifest["treedef"] != _treedef_token(template):
             raise ValueError("checkpoint tree structure mismatch")
-        t_leaves, treedef = _flatten(template)
+        flat = jax.tree_util.tree_flatten_with_path(template)[0]
+        treedef = jax.tree_util.tree_structure(template)
         s_leaves = (
-            jax.tree_util.tree_leaves(shardings) if shardings is not None else [None] * len(t_leaves)
+            jax.tree_util.tree_leaves(shardings) if shardings is not None else [None] * len(flat)
         )
         leaves = []
-        for i, (tl, sh) in enumerate(zip(t_leaves, s_leaves)):
+        for i, ((tpath, tl), sh) in enumerate(zip(flat, s_leaves)):
             spec = manifest["leaves"][i]
-            with open(os.path.join(d, f"leaf_{i}.bin"), "rb") as f:
-                arr = np.frombuffer(f.read(), dtype=np.dtype(spec["dtype"]))
-            arr = arr.reshape(spec["shape"])
+            dtype = np.dtype(spec["dtype"])
+            shape = tuple(spec["shape"])
+            host = host_paths is not None and host_paths(tpath)
+            if spec.get("n_shards"):
+                arr = np.empty(shape, dtype)
+                lo = 0
+                for j in range(spec["n_shards"]):
+                    with open(os.path.join(d, f"leaf_{i}.shard_{j}.bin"), "rb") as f:
+                        part = np.frombuffer(f.read(), dtype=dtype)
+                    rows = min(spec["shard_rows"], shape[0] - lo)
+                    arr[lo:lo + rows] = part.reshape((rows,) + shape[1:])
+                    lo += rows
+            else:
+                with open(os.path.join(d, f"leaf_{i}.bin"), "rb") as f:
+                    arr = np.frombuffer(f.read(), dtype=dtype).reshape(shape)
+                if host:
+                    arr = np.array(arr)  # frombuffer is read-only; table
+                                         # leaves must be absorb-writable
             expect = tuple(getattr(tl, "shape", arr.shape))
             if tuple(arr.shape) != expect:
                 raise ValueError(f"leaf {i}: saved {arr.shape} != expected {expect}")
-            if sh is not None:
+            if host:
+                leaves.append(arr)
+            elif sh is not None:
                 leaves.append(jax.device_put(arr, sh))
             else:
                 leaves.append(jax.numpy.asarray(arr, dtype=getattr(tl, "dtype", arr.dtype)))

@@ -13,9 +13,9 @@
 
 from __future__ import annotations
 
+import collections
 import dataclasses
-import functools
-from typing import Iterator, Optional, Tuple
+from typing import Callable, Iterator, List, Optional, Tuple
 
 import numpy as np
 
@@ -117,7 +117,99 @@ def prepare(
     )
 
 
-@functools.lru_cache(maxsize=64)
+def synthetic_prepared(
+    n_series: int,
+    *,
+    frequency: str = "quarterly",
+    seasonality: int = 4,
+    horizon: int = 8,
+    series_length: int = 24,
+    n_categories: int = 6,
+    seed: int = 0,
+) -> PreparedData:
+    """Fully vectorized synthetic :class:`PreparedData` at arbitrary N.
+
+    ``prepare(generate(...))`` walks a python loop per series -- fine at M4
+    scale, minutes and a second full copy at 1M rows. This builds the
+    fixed-shape arrays directly (level walk x seasonal pattern x noise, one
+    vectorized expression) for the million-series smoke and the
+    memory-footprint bench: ~160 MB of host float32 at N=1M, T=24+2*8.
+    """
+    rng = np.random.default_rng(seed)
+    t_total = series_length + 2 * horizon
+    level = (10.0 + 5.0 * rng.random((n_series, 1))).astype(np.float32)
+    drift = (0.05 * (rng.random((n_series, 1)) - 0.3)).astype(np.float32)
+    phase = rng.integers(0, max(seasonality, 1), (n_series, 1))
+    t = np.arange(t_total, dtype=np.float32)[None, :]
+    seas = 1.0 + 0.1 * np.sin(
+        2.0 * np.pi * (t + phase) / max(seasonality, 1)).astype(np.float32)
+    noise = 1.0 + 0.02 * rng.standard_normal(
+        (n_series, t_total)).astype(np.float32)
+    y = (level * (1.0 + drift * t) * seas * noise).astype(np.float32)
+    np.maximum(y, 0.1, out=y)
+    cats_int = rng.integers(0, n_categories, n_series)
+    return PreparedData(
+        frequency=frequency,
+        seasonality=seasonality,
+        horizon=horizon,
+        train=y[:, :series_length],
+        val_input=y[:, : series_length + horizon],
+        val_target=y[:, series_length : series_length + horizon],
+        test_target=y[:, series_length + horizon :],
+        mask=np.ones((n_series, series_length), np.float32),
+        cats=np.eye(n_categories, dtype=np.float32)[cats_int],
+        categories=cats_int,
+    )
+
+
+class _BoundedPermCache:
+    """LRU permutation cache bounded by BYTES, not entry count.
+
+    The old ``lru_cache(maxsize=64)`` bounded *entries*: at 1M series each
+    epoch permutation is 8 MB, so a long run could pin 512 MB of host memory
+    in permutations alone and never evict. Bounding by bytes keeps the
+    small-N behavior (identity-stable hits, read-only arrays) while making
+    the worst case a fixed budget. A single permutation larger than the
+    whole budget is returned uncached (drawn fresh per call) -- million-row
+    *global* perms are exactly what the chunk-local schedule below exists to
+    avoid materializing.
+    """
+
+    def __init__(self, max_bytes: int):
+        self.max_bytes = int(max_bytes)
+        self.nbytes = 0
+        self.hits = 0
+        self.misses = 0
+        self._entries: "collections.OrderedDict[tuple, np.ndarray]" = (
+            collections.OrderedDict())
+
+    def get_or_draw(self, key: tuple, draw: Callable[[], np.ndarray]):
+        arr = self._entries.get(key)
+        if arr is not None:
+            self.hits += 1
+            self._entries.move_to_end(key)
+            return arr
+        self.misses += 1
+        arr = draw()
+        arr.flags.writeable = False
+        if arr.nbytes <= self.max_bytes:
+            self._entries[key] = arr
+            self.nbytes += arr.nbytes
+            while self.nbytes > self.max_bytes:
+                _, old = self._entries.popitem(last=False)
+                self.nbytes -= old.nbytes
+        return arr
+
+    def clear(self):
+        self._entries.clear()
+        self.nbytes = self.hits = self.misses = 0
+
+
+# One shared budget for the global-epoch and the chunk-local permutations.
+PERM_CACHE_BYTES = 64 << 20
+_perm_cache = _BoundedPermCache(PERM_CACHE_BYTES)
+
+
 def epoch_permutation(n_series: int, epoch: int, seed: int = 0) -> np.ndarray:
     """The (cached) series permutation for one epoch of the schedule.
 
@@ -126,12 +218,37 @@ def epoch_permutation(n_series: int, epoch: int, seed: int = 0) -> np.ndarray:
     had -- but materialized once per ``(n_series, epoch, seed)`` instead of
     on every call: a 300-step epoch used to re-draw the same permutation 300
     times. The returned array is marked read-only because it is shared by
-    every caller of the cache.
+    every caller of the cache; the cache itself is bounded by
+    :data:`PERM_CACHE_BYTES` (LRU in bytes -- 64 cached 1M-row epochs would
+    otherwise pin half a gigabyte of host memory).
     """
-    rng = np.random.default_rng(np.random.SeedSequence([seed, epoch]))
-    perm = rng.permutation(n_series)
-    perm.flags.writeable = False
-    return perm
+    def draw():
+        rng = np.random.default_rng(np.random.SeedSequence([seed, epoch]))
+        return rng.permutation(n_series)
+
+    return _perm_cache.get_or_draw(("epoch", n_series, epoch, seed), draw)
+
+
+def chunk_permutation(
+    n_rows: int, epoch: int, chunk_id: int, seed: int = 0
+) -> np.ndarray:
+    """Shard-local epoch permutation: rows *within* one series chunk.
+
+    Deterministic in ``(seed, epoch, chunk_id)`` and independent of the
+    total series count -- the chunked training schedule never materializes a
+    global (N,) permutation per batch; each chunk draws its own
+    ``(n_rows,)`` perm (bounded-cache shared with
+    :func:`epoch_permutation`). The entropy tuple carries a trailing
+    ``1 + chunk_id`` so no (seed, epoch) stream collides with the global
+    epoch permutation or the chunk visit order.
+    """
+    def draw():
+        rng = np.random.default_rng(
+            np.random.SeedSequence([seed, epoch, 1 + chunk_id]))
+        return rng.permutation(n_rows)
+
+    return _perm_cache.get_or_draw(
+        ("chunk", n_rows, epoch, chunk_id, seed), draw)
 
 
 def batch_indices(
@@ -172,6 +289,127 @@ def batch_schedule(
         batch_indices(n_series, batch_size, s, seed=seed)
         for s in range(start_step, start_step + n_steps)
     ])
+
+
+# ---------------------------------------------------------------------------
+# Chunk-major schedule (out-of-core / streaming fit)
+# ---------------------------------------------------------------------------
+#
+# With ``series_chunk = K`` the N series are partitioned into contiguous row
+# ranges of K; an epoch visits the chunks in a per-epoch permuted order and
+# runs each chunk's full within-chunk epoch (ceil(rows/batch) steps over a
+# chunk-local permutation) before moving on. Batches are chunk-pure by
+# construction -- the streaming trainer only ever needs ONE chunk's rows on
+# device -- and the whole schedule stays stateless in the global step, so
+# resume/fault-tolerance works exactly like the flat schedule.
+
+
+def chunk_bounds(n_series: int, chunk: int) -> List[Tuple[int, int]]:
+    """Contiguous ``[lo, hi)`` row ranges partitioning N series into chunks."""
+    if chunk <= 0:
+        raise ValueError(f"series chunk must be positive, got {chunk}")
+    return [(lo, min(lo + chunk, n_series))
+            for lo in range(0, n_series, chunk)]
+
+
+def chunk_visit_order(n_chunks: int, epoch: int, seed: int = 0) -> np.ndarray:
+    """The order an epoch visits the chunks in (deterministic, stateless)."""
+    rng = np.random.default_rng(np.random.SeedSequence([seed, epoch, 0]))
+    return rng.permutation(n_chunks)
+
+
+def chunk_layout(
+    n_series: int, chunk: int, batch_size: int
+) -> Tuple[List[Tuple[int, int, int, int]], int]:
+    """Static shape plan of the chunk-major schedule.
+
+    Returns ``(per_chunk, steps_per_epoch)`` where ``per_chunk[c]`` is
+    ``(lo, hi, bs_c, steps_c)``: the chunk's row range, its effective batch
+    size (``min(batch_size, rows)`` -- only a ragged last chunk differs, one
+    extra XLA compile), and its steps per epoch ``ceil(rows / bs_c)``.
+    """
+    per_chunk = []
+    for lo, hi in chunk_bounds(n_series, chunk):
+        bs_c = min(batch_size, hi - lo)
+        per_chunk.append((lo, hi, bs_c, -(-(hi - lo) // bs_c)))
+    return per_chunk, sum(s for _, _, _, s in per_chunk)
+
+
+def chunk_batch_indices(
+    n_rows: int, batch_size: int, epoch: int, chunk_id: int, k: int, *,
+    seed: int = 0,
+) -> np.ndarray:
+    """Chunk-LOCAL row indices for step ``k`` of a chunk's epoch visit.
+
+    Mirrors :func:`batch_indices` (slice the cached permutation, wrap the
+    short tail to keep shapes static) against the chunk-local permutation.
+    Indices are relative to the chunk's ``lo``; add ``lo`` for global rows.
+    """
+    perm = chunk_permutation(n_rows, epoch, chunk_id, seed)
+    sl = perm[k * batch_size : (k + 1) * batch_size]
+    if len(sl) < batch_size:
+        sl = np.concatenate([sl, perm[: batch_size - len(sl)]])
+    return np.array(sl)
+
+
+def chunk_batch_schedule(
+    n_rows: int, batch_size: int, epoch: int, chunk_id: int, start_k: int,
+    n_steps: int, *, seed: int = 0,
+) -> np.ndarray:
+    """``(n_steps, batch_size)`` chunk-local schedule (cf. batch_schedule)."""
+    if n_steps <= 0:
+        return np.empty((0, batch_size), dtype=np.int64)
+    return np.stack([
+        chunk_batch_indices(n_rows, batch_size, epoch, chunk_id, k, seed=seed)
+        for k in range(start_k, start_k + n_steps)
+    ])
+
+
+@dataclasses.dataclass(frozen=True)
+class ChunkVisit:
+    """One chunk's (possibly partial) epoch visit in global step coordinates.
+
+    ``start_k`` is the step offset *within* the visit (non-zero only when a
+    resume lands mid-visit); ``step`` is the global step of the visit's
+    first scheduled step, so ``step - start_k`` is the visit's base.
+    """
+
+    epoch: int
+    chunk_id: int
+    lo: int
+    hi: int
+    batch_size: int
+    step: int
+    start_k: int
+    n_steps: int
+
+
+def chunk_visit_plan(
+    n_series: int, chunk: int, batch_size: int, start_step: int,
+    n_steps: int, *, seed: int = 0,
+) -> Iterator[ChunkVisit]:
+    """Yield the chunk visits covering global steps [start_step, n_steps).
+
+    Stateless in ``start_step``: a resumed run re-enters the same global
+    schedule mid-visit (same chunks, same per-chunk permutations, same
+    order), exactly like :func:`batch_indices` for the flat schedule.
+    """
+    per_chunk, spe = chunk_layout(n_series, chunk, batch_size)
+    epoch = start_step // spe
+    base = epoch * spe
+    while base < n_steps:
+        for c in chunk_visit_order(len(per_chunk), epoch, seed):
+            lo, hi, bs_c, steps_c = per_chunk[c]
+            s0 = max(base, start_step)
+            s1 = min(base + steps_c, n_steps)
+            if s1 > s0:
+                yield ChunkVisit(epoch=epoch, chunk_id=int(c), lo=lo, hi=hi,
+                                 batch_size=bs_c, step=s0, start_k=s0 - base,
+                                 n_steps=s1 - s0)
+            base += steps_c
+            if base >= n_steps:
+                break
+        epoch += 1
 
 
 def iterate_batches(

@@ -42,7 +42,7 @@ from repro.core.esrnn import (
     esrnn_forecast, esrnn_forecast_at, esrnn_init, esrnn_loss,
     esrnn_loss_and_grad, esrnn_predict_stats, gather_series,
 )
-from repro.data.pipeline import PreparedData, prepare
+from repro.data.pipeline import PreparedData, chunk_bounds, prepare
 from repro.data.synthetic_m4 import M4Dataset, generate
 from repro.forecast.spec import ForecastSpec, get_spec
 from repro.train.trainer import train_from_spec
@@ -156,13 +156,17 @@ class ESRNNForecaster:
 
     # -- predict -------------------------------------------------------------
 
-    def _resolve_inputs(self, y, cats, series_idx):
+    def _resolve_inputs(self, y, cats, series_idx, *, host: bool = False):
+        """Resolve (params, y, cats). ``host=True`` keeps everything in host
+        numpy (the chunked-streaming verbs slice rows out before any device
+        transfer, so an out-of-core table never lands on device whole)."""
+        xp = np if host else jnp
         self._check_fitted()
         if y is None:
             if self.data_ is None:
                 raise NotFittedError("predict() without y requires fit(data)")
             y = self.data_.train
-        y = jnp.asarray(y, self.config.jdtype)
+        y = xp.asarray(y, self.config.jdtype)
         if cats is None and self.cats_ is not None:
             # fitted categories: the rows of y are (a subset of) the fitted
             # series, so reuse their one-hots rather than zeroing the feature
@@ -172,8 +176,8 @@ class ESRNNForecaster:
             elif y.shape[0] == self.cats_.shape[0]:
                 cats = self.cats_
         if cats is None:
-            cats = jnp.zeros((y.shape[0], self.config.n_categories))
-        cats = jnp.asarray(cats, self.config.jdtype)
+            cats = xp.zeros((y.shape[0], self.config.n_categories))
+        cats = xp.asarray(cats, self.config.jdtype)
         params = self.params_
         if series_idx is not None:
             params = gather_series(params, np.asarray(series_idx))
@@ -232,6 +236,33 @@ class ESRNNForecaster:
             arrays = tuple(_pad_rows(jnp.asarray(a), pad) for a in arrays)
         return params, arrays, pad
 
+    def _chunk_ranges(self, n: int):
+        """[lo, hi) series chunks when the spec streams, else None."""
+        c = self.spec.series_chunk
+        if c and c > 0 and n > c:
+            return chunk_bounds(n, c)
+        return None
+
+    def _forecast_chunk(self, params, y, cats, mesh):
+        """One chunk's forecast: host slices in, (rows, H) numpy out.
+
+        Composes chunk streaming (outer loop) with the series mesh (inner
+        shard): the chunk's rows are padded to the device multiple and the
+        pad stripped, exactly like resident sharded inference.
+        """
+        rows = y.shape[0]
+        p_c = {k: (jax.tree_util.tree_map(jnp.asarray, v) if k == "hw" else v)
+               for k, v in params.items()}
+        y = jnp.asarray(y)
+        cats = jnp.asarray(cats)
+        if mesh is None:
+            return np.asarray(esrnn_forecast(self.config, p_c, y, cats))
+        from repro.sharding.series import esrnn_forecast_dp
+
+        p_c, (y, cats), _pad = self._shard_rows(p_c, (y, cats), mesh)
+        return np.asarray(
+            esrnn_forecast_dp(self.config, p_c, y, cats, mesh=mesh))[:rows]
+
     def predict(self, y=None, cats=None, *,
                 series_idx: Optional[Sequence[int]] = None,
                 mesh=None) -> np.ndarray:
@@ -245,9 +276,26 @@ class ESRNNForecaster:
         to one over ``spec.data_parallel`` devices when that is > 1): each
         device forecasts its own HW-table rows under ``shard_map``; rows
         are padded to the device multiple and stripped, so any N works.
+
+        ``spec.series_chunk > 0`` streams the forecast: rows move to device
+        one ``series_chunk``-sized shard at a time (params table included --
+        after a chunked fit its leaves are host numpy and never land on
+        device whole), each shard running through the same jitted forecast
+        (and the same mesh, when sharded).
         """
-        params, y, cats = self._resolve_inputs(y, cats, series_idx)
         mesh = self._resolve_mesh(mesh)
+        n_in = (self.n_series_ if y is None else np.shape(y)[0])
+        if series_idx is None and self._chunk_ranges(n_in or 0):
+            params, y, cats = self._resolve_inputs(y, cats, None, host=True)
+            out = np.empty((y.shape[0], self.horizon), np.float32)
+            shared = {k: v for k, v in params.items() if k != "hw"}
+            for lo, hi in self._chunk_ranges(y.shape[0]):
+                p_c = {"hw": jax.tree_util.tree_map(
+                    lambda a: a[lo:hi], params["hw"]), **shared}
+                out[lo:hi] = self._forecast_chunk(
+                    p_c, y[lo:hi], cats[lo:hi], mesh)
+            return out
+        params, y, cats = self._resolve_inputs(y, cats, series_idx)
         if mesh is None:
             return np.asarray(esrnn_forecast(self.config, params, y, cats))
         from repro.sharding.series import esrnn_forecast_dp
@@ -332,10 +380,13 @@ class ESRNNForecaster:
         else:
             raise ValueError(f"split must be 'val' or 'test', got {split!r}")
         m, h = data.seasonality, min(self.horizon, target.shape[1])
+        mesh = self._resolve_mesh(mesh)
+        if self._chunk_ranges(insample.shape[0]):
+            return self._evaluate_chunked(
+                data, insample, target, m, h, split, mesh)
         target_j = jnp.asarray(target[:, :h])
         insample_j = jnp.asarray(insample)
 
-        mesh = self._resolve_mesh(mesh)
         if mesh is None:
             fc = self.predict(insample, data.cats)[:, :h]
             s_es = float(L.smape(jnp.asarray(fc), target_j))
@@ -374,6 +425,55 @@ class ESRNNForecaster:
 
         s_cb, m_cb = score(fc_comb)
         s_n2, m_n2 = score(fc_n2)
+        return {
+            "split": split,
+            "smape": s_es, "mase": m_es,
+            "owa": float(L.owa(s_es, m_es, s_n2, m_n2)),
+            "smape_comb": s_cb, "mase_comb": m_cb,
+            "owa_comb": float(L.owa(s_cb, m_cb, s_n2, m_n2)),
+            "smape_naive2": s_n2, "mase_naive2": m_n2,
+        }
+
+    def _evaluate_chunked(self, data, insample, target, m, h, split, mesh):
+        """Streamed scores: model + baselines chunk by chunk, exact terms.
+
+        Identical math to the resident path -- sMAPE/MASE are global
+        sums-over-counts and every per-series scale is row-local, so
+        accumulating each chunk's ``smape_terms``/``mase_terms`` and
+        dividing once reproduces the full-batch masked means. Nothing
+        N-sized ever lands on device.
+        """
+        params, y, cats = self._resolve_inputs(
+            insample, data.cats, None, host=True)
+        shared = {k: v for k, v in params.items() if k != "hw"}
+        tgt = np.asarray(target[:, :h], np.float32)
+        acc = {k: np.zeros(4, np.float64) for k in ("esrnn", "comb", "naive2")}
+
+        def add(name, fc, tgt_c, ins_c):
+            fc_j, tgt_j = jnp.asarray(fc), jnp.asarray(tgt_c)
+            s0, s1 = L.smape_terms(fc_j, tgt_j)
+            m0, m1 = L.mase_terms(fc_j, tgt_j, jnp.asarray(ins_c), m)
+            acc[name] += np.array(
+                [float(s0), float(s1), float(m0), float(m1)])
+
+        for lo, hi in self._chunk_ranges(y.shape[0]):
+            p_c = {"hw": jax.tree_util.tree_map(
+                lambda a: a[lo:hi], params["hw"]), **shared}
+            fc = self._forecast_chunk(p_c, y[lo:hi], cats[lo:hi], mesh)[:, :h]
+            ins_c = np.asarray(y[lo:hi])
+            add("esrnn", fc, tgt[lo:hi], ins_c)
+            add("comb", np.asarray(comb_forecast(ins_c, h, m), np.float32),
+                tgt[lo:hi], ins_c)
+            add("naive2", np.asarray(naive2_forecast(ins_c, h, m), np.float32),
+                tgt[lo:hi], ins_c)
+
+        def score(name):
+            s, sc, mm, mc = acc[name]
+            return 200.0 * s / max(sc, 1.0), mm / max(mc, 1.0)
+
+        s_es, m_es = score("esrnn")
+        s_cb, m_cb = score("comb")
+        s_n2, m_n2 = score("naive2")
         return {
             "split": split,
             "smape": s_es, "mase": m_es,
@@ -423,7 +523,8 @@ class ESRNNForecaster:
                 origins = (train_len, train_len + data.horizon)
         elif origins is None:
             raise ValueError("backtest(y=...) needs explicit origins")
-        params, y, cats = self._resolve_inputs(y, cats, None)
+        chunked = bool(self._chunk_ranges(np.shape(y)[0]))
+        params, y, cats = self._resolve_inputs(y, cats, None, host=chunked)
         m = max(self.config.seasonality, 1)
         h = self.horizon
         n, t_len = y.shape
@@ -439,7 +540,41 @@ class ESRNNForecaster:
             tmask[:, k, :avail] = 1.0
 
         mesh = self._resolve_mesh(mesh)
-        if mesh is None:
+        if chunked:
+            # stream chunks through the one-pass multi-origin forecast; the
+            # per-origin metric terms are exact sums, so they accumulate
+            shared = {k: v for k, v in params.items() if k != "hw"}
+            fc = np.empty((n, len(origins), h), np.float32)
+            tacc = np.zeros((4, len(origins)), np.float64)
+            for lo, hi in self._chunk_ranges(n):
+                rows = hi - lo
+                p_c = {"hw": jax.tree_util.tree_map(
+                    lambda a: jnp.asarray(a[lo:hi]), params["hw"]), **shared}
+                y_c, c_c = jnp.asarray(y[lo:hi]), jnp.asarray(cats[lo:hi])
+                if mesh is None:
+                    fc_c = esrnn_forecast_at(
+                        self.config, p_c, y_c, c_c, origins)
+                    terms_c = L.rolling_metric_terms(
+                        fc_c, jnp.asarray(target[lo:hi]),
+                        jnp.asarray(tmask[lo:hi]), y_c, origins, m)
+                else:
+                    from repro.sharding.series import esrnn_backtest_dp
+
+                    p_p, arrays, pad = self._shard_rows(
+                        p_c, (y_c, c_c, jnp.asarray(target[lo:hi])), mesh)
+                    y_p, c_p, t_p = arrays
+                    tm_p = jnp.asarray(np.concatenate(
+                        [tmask[lo:hi],
+                         np.zeros((pad,) + tmask.shape[1:], np.float32)]))
+                    fc_p, terms_c = esrnn_backtest_dp(
+                        self.config, p_p, y_p, c_p, origins, t_p, tm_p,
+                        seasonality=m, mesh=mesh)
+                    fc_c = np.asarray(fc_p)[:rows]
+                fc[lo:hi] = np.asarray(fc_c)
+                tacc += np.stack(
+                    [np.asarray(t, np.float64) for t in terms_c])
+            terms = tuple(tacc)
+        elif mesh is None:
             fc = esrnn_forecast_at(self.config, params, y, cats, origins)
             terms = L.rolling_metric_terms(
                 fc, jnp.asarray(target), jnp.asarray(tmask), y, origins, m)

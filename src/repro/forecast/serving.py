@@ -249,20 +249,23 @@ class BucketDispatcher:
         in place (the idle fine-tune hook) -- the snapshot must never go
         stale relative to the table the batched forecast closes over.
         """
+        from repro.train.host_table import HostStateTable
+
         self.params = params
         self.n_known = params["hw"].alpha_logit.shape[0]
         # per-series table extended by one primer row for cold-start series
         # (section 3.3 initialization); row n_known == "unknown series".
-        # Snapshotted to HOST numpy once: the fitted table may be sharded
-        # across a series mesh, and per-request row resolution (arbitrary
+        # Host-side by construction: the fitted table may be sharded across
+        # a series mesh, and per-request row resolution (arbitrary
         # known/primer mixes) against the device table would re-gather the
-        # whole sharded table per request. The numpy gather keeps the hot
-        # path device-free; only the gathered (B, ...) rows go to devices.
+        # whole sharded table per request. The snapshot is a HostStateTable
+        # + primer *view* (``ExtendedHWView``) rather than a concatenated
+        # second copy -- zero-copy when the fitted leaves are already host
+        # numpy (a chunked fit / chunked checkpoint), one D2H otherwise;
+        # only the gathered (B, ...) rows ever go to devices.
         primer = esrnn_init(jax.random.PRNGKey(0), self.config, 1)
-        self._hw_table = jax.tree_util.tree_map(
-            lambda a, b: np.concatenate(
-                [np.asarray(a), np.asarray(b)], axis=0),
-            params["hw"], primer["hw"])
+        self._host_table = HostStateTable.from_hw(params["hw"])
+        self._hw_table = self._host_table.extended(primer["hw"])
 
     # -- shaping -------------------------------------------------------------
 
@@ -300,9 +303,9 @@ class BucketDispatcher:
         row) -- no per-request device ops on the serving hot path.
         """
         idx = np.asarray([self.resolve_row(r.series_id) for r in requests])
-        # numpy gather from the host snapshot: no device op, and in
+        # numpy gather through the host view: no device op, and in
         # particular no cross-device gather of a mesh-sharded fitted table
-        return jax.tree_util.tree_map(lambda a: a[idx], self._hw_table)
+        return self._hw_table.rows(idx)
 
     # -- dispatch ------------------------------------------------------------
 

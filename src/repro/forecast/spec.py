@@ -62,6 +62,13 @@ class ForecastSpec:
                                      # (0/1 = single device; must divide
                                      # batch_size; CPU needs XLA_FLAGS=
                                      # --xla_force_host_platform_device_count)
+    series_chunk: int = 0            # > 0: out-of-core fit/predict -- the
+                                     # per-series HW table + sparse-Adam
+                                     # state live in host memory and stream
+                                     # through the device series_chunk rows
+                                     # at a time (implies sparse_adam; chunk
+                                     # = outer loop, data_parallel mesh =
+                                     # inner shard; 0 = fully resident)
 
     @property
     def frequency(self) -> str:

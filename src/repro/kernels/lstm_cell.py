@@ -33,7 +33,7 @@ BLOCK_B = 128
 def block_b_for(dtype) -> int:
     """Batch-tile rows per grid step, by stream dtype.
 
-    The roofline report (``repro.roofline.esrnn`` / BENCH_PR9) puts the
+    The roofline report (``repro.roofline.esrnn`` / BENCH_PR10) puts the
     fused train step deep in the memory-bound regime (arithmetic intensity
     far below the TPU ridge point), so the tile size is bandwidth-driven:
     a bf16 stream halves every per-row VMEM tile (x/h/c plus the (B, 4H)

@@ -55,6 +55,13 @@ superstep (the dispatch-bound per-step loop is the K=1 default); eval,
 checkpoints, and hooks fire at superstep boundaries, on the same absolute
 steps. ``--set sparse_adam=true`` adds the sparse per-series Adam segment
 update. Both compose with ``--devices N`` and ``use_pallas``.
+
+``--set series_chunk=K`` turns on the out-of-core path: the per-series
+Holt-Winters table and its sparse-Adam state live in host memory and stream
+through the device K rows at a time (fit, predict, eval, and backtest all
+chunk; implies ``sparse_adam``). The chunk is the outer loop and the
+``--devices`` mesh the inner shard, so a million-series fit runs in
+O(series_chunk) device memory while walking the exact resident trajectory.
 """
 
 from __future__ import annotations
@@ -362,7 +369,9 @@ def main(argv=None):
                             "lstm/esn/ssm), "
                             "--set use_pallas=true (trainable kernel path), "
                             "--set scan_steps=32 (fused superstep engine), "
-                            "--set sparse_adam=true (segment per-series Adam)")
+                            "--set sparse_adam=true (segment per-series "
+                            "Adam), --set series_chunk=65536 (out-of-core "
+                            "host HW table, streamed fit/predict)")
 
     p_specs = sub.add_parser(
         "specs", help="list the spec registry (name/frequency/horizon/head)")

@@ -19,7 +19,7 @@ Two byte measures are reported side by side, on purpose:
 * ``jaxpr_bytes`` -- the loop-aware aval walk
   (:func:`repro.roofline.jaxpr_cost.jaxpr_bytes`): backend-independent
   traffic of the program as written, the hardware-neutral yardstick for
-  precision-policy comparison (the BENCH_PR9 ``roofline`` column's
+  precision-policy comparison (the BENCH_PR10 ``roofline`` column's
   fp32-vs-bf16 per-step ratio gates on it).
 
 What the numbers say (and what this PR did about it): at every realistic
@@ -174,7 +174,7 @@ def precision_compare(base_cfg, *, mesh=None,
                       entries=("fit", "predict")) -> Dict:
     """fp32 vs bf16 rows for each entry point + the per-step byte ratios.
 
-    This is the BENCH_PR9 ``roofline`` column: one row per
+    This is the BENCH_PR10 ``roofline`` column: one row per
     (entry, precision), plus ``fit_jaxpr_bytes_ratio_bf16`` /
     ``fit_hlo_bytes_ratio_bf16`` -- bf16 per-step bytes over fp32 per-step
     bytes for the fused train step. The jaxpr ratio is the

@@ -265,6 +265,81 @@ def make_superstep_fn(step_fn: StepFn, *, donate: bool = True):
     return jax.jit(superstep, donate_argnums=(0, 1) if donate else ())
 
 
+def make_chunk_step_fn(
+    mcfg: ESRNNConfig,
+    cfg_adam: AdamConfig,
+    *,
+    mesh=None,
+    frozen: FrozenSet[str] = frozenset(),
+) -> StepFn:
+    """The chunked-streaming training step: data arrives as arguments.
+
+    Identical math to the ``sparse=True`` branch of :func:`make_step_fn` --
+    gathered-row gradients, segment Adam with closed-form moment catch-up --
+    but ``(y_c, cats_c, mask_c)`` are the *current chunk's* series tensors
+    passed as jit arguments instead of closed-over device constants, so one
+    compiled executable serves every chunk of the same shape as the trainer
+    streams shards out of the host table. ``params``/``opt_state`` here are
+    the chunk-assembled trees: the HW leaves hold only the chunk's rows
+    (``idx`` is chunk-local) while the shared head weights and the global
+    ``step`` scalar persist across chunks; ``t_hw`` carries global last-touch
+    steps, which is what makes the per-chunk sparse updates exact.
+    """
+    if mesh is not None:
+        from repro.sharding.series import esrnn_loss_dp
+
+        def loss_fn(pb, yb, cb, mb):
+            return esrnn_loss_dp(mcfg, pb, yb, cb, mb, mesh=mesh)
+    else:
+        def loss_fn(pb, yb, cb, mb):
+            return esrnn_loss_fn(mcfg, pb, yb, cb, mb)
+
+    def step(params, opt_state, y_c, cats_c, mask_c, idx):
+        yb = y_c[idx]
+        cb = cats_c[idx]
+        mb = mask_c[idx]
+        p_train, p_froz = split_frozen(params, frozen)
+        hw_rows, shared = partition_series(params, idx)
+        sh_train, sh_froz = split_frozen(shared, frozen)
+
+        def batch_loss(hw_b, sh):
+            return loss_fn(
+                combine_series(hw_b, {**sh, **sh_froz}), yb, cb, mb)
+
+        loss, (g_hw, g_sh) = jax.value_and_grad(
+            batch_loss, argnums=(0, 1))(hw_rows, sh_train)
+        grads = combine_series(g_hw, g_sh)
+        p_train, opt_state = adam_update_sparse(
+            grads, opt_state, p_train, cfg_adam, idx=idx,
+            group_fn=esrnn_group_fn)
+        return {**p_train, **p_froz}, opt_state, loss
+
+    return step
+
+
+def make_chunk_superstep_fn(step_fn: StepFn, *, donate: bool = True):
+    """Donated ``lax.scan`` superstep over one chunk's batch schedule.
+
+    ``(params, opt_state, y_c, cats_c, mask_c, idx_schedule(K, B)) ->
+    (params, opt_state, losses(K,))``. The chunk state ping-pongs in place
+    (donated) while the data tensors ride through as loop invariants; the
+    trainer re-dispatches the same executable for every equal-shaped chunk
+    visit, so a streamed epoch costs the same compile budget as a resident
+    one plus at most a ragged-tail variant.
+    """
+    def superstep(params, opt_state, y_c, cats_c, mask_c, idx_schedule):
+        def body(carry, idx):
+            p, o = carry
+            p, o, loss = step_fn(p, o, y_c, cats_c, mask_c, idx)
+            return (p, o), loss
+
+        (params, opt_state), losses = jax.lax.scan(
+            body, (params, opt_state), idx_schedule)
+        return params, opt_state, losses
+
+    return jax.jit(superstep, donate_argnums=(0, 1) if donate else ())
+
+
 def lower_superstep(step_fn: StepFn, params, opt_state, idx_schedule, *,
                     donate: bool = True):
     """AOT-lower the donated superstep for the given argument shapes.

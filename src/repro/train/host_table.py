@@ -1,0 +1,279 @@
+"""Host-resident per-series state: the out-of-core Holt-Winters table.
+
+The paper's scaling pressure point is the per-series parameter table -- N
+rows of HW logits plus, under sparse Adam, their first/second moments and
+the per-row last-touch clock. Resident training keeps all of it on device
+for the lifetime of ``fit``; at 1M-10M series *that*, not FLOPs, is the
+binding constraint (the PR-9 roofline pegs the train step memory-bound at
+intensity ~2). This module keeps the master table in host numpy and streams
+device-sized row chunks through training:
+
+* :class:`HostStateTable` -- the master copy: HW param rows, sparse-Adam
+  ``mu``/``nu`` rows, and the ``t_hw`` clock, all host numpy with the series
+  axis leading. ``device_slice`` issues the (async) H2D transfer of one
+  chunk; ``absorb`` writes a trained chunk back (D2H). JAX's async dispatch
+  gives the double-buffering for free: the trainer issues chunk k+1's
+  ``device_put`` right after dispatching chunk k's superstep, so the
+  transfer overlaps the compute and the retirement ``device_get`` of chunk
+  k only blocks on work that was already in flight.
+* :class:`ExtendedHWView` -- the serving-side view: the fitted table plus
+  one virtual primer row (cold-start series), WITHOUT materializing an
+  (N+1)-row concatenated copy the way the old dispatcher snapshot did.
+
+Exactness contract: the sparse-Adam per-row clocks
+(:func:`repro.train.optimizer.adam_update_sparse`) carry *global* step
+numbers, so slicing rows out to device, updating them there, and writing
+them back is a pure memory-placement change -- the streamed fit walks the
+same trajectory as a resident fit on the same (chunk-major) schedule,
+bit-for-bit on one backend (tests/train/test_chunked.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.core.holt_winters import HWParams
+
+
+def _logit(p: float) -> float:
+    return float(np.log(p / (1.0 - p)))
+
+
+def hw_init_host(
+    n_series: int, seasonality: int, *, seasonality2: int = 0,
+    alpha0: float = 0.5, gamma0: float = 0.5, dtype=np.float32,
+) -> HWParams:
+    """Host-numpy mirror of :func:`repro.core.holt_winters.hw_init_params`.
+
+    Bit-identical values (the primer init is constant per section 3.3), but
+    built straight in host memory -- a 10M-row table never takes a device
+    round-trip just to be initialized.
+    """
+    m = max(seasonality, 1)
+    params = HWParams(
+        alpha_logit=np.full((n_series,), _logit(alpha0), dtype),
+        gamma_logit=np.full((n_series,), _logit(gamma0), dtype),
+        init_seas_logit=np.zeros((n_series, m), dtype),
+    )
+    if seasonality2:
+        params = dataclasses.replace(
+            params,
+            gamma2_logit=np.full((n_series,), _logit(gamma0), dtype),
+            init_seas_logit2=np.zeros((n_series, seasonality2), dtype),
+        )
+    return params
+
+
+def _host(tree):
+    """Pull a pytree to host numpy (zero-copy for leaves already there)."""
+    return jax.tree_util.tree_map(
+        lambda a: a if isinstance(a, np.ndarray) else np.asarray(
+            jax.device_get(a)), tree)
+
+
+class HostStateTable:
+    """The master per-series state, resident in host memory.
+
+    ``hw`` is an :class:`HWParams` with numpy leaves; ``mu_hw``/``nu_hw``
+    mirror its structure (sparse-Adam moments) and ``t_hw`` is the (N,)
+    int32 last-touch clock. The moment fields are ``None`` for inference-
+    only tables (predict streaming, serving snapshots).
+    """
+
+    def __init__(self, hw: HWParams, *, mu_hw: Optional[HWParams] = None,
+                 nu_hw: Optional[HWParams] = None,
+                 t_hw: Optional[np.ndarray] = None):
+        self.hw = hw
+        self.mu_hw = mu_hw
+        self.nu_hw = nu_hw
+        self.t_hw = t_hw
+
+    @property
+    def n_rows(self) -> int:
+        return self.hw.alpha_logit.shape[0]
+
+    @property
+    def has_moments(self) -> bool:
+        return self.mu_hw is not None
+
+    def nbytes(self) -> int:
+        return sum(a.nbytes for a in jax.tree_util.tree_leaves(
+            (self.hw, self.mu_hw, self.nu_hw, self.t_hw)))
+
+    # -- constructors --------------------------------------------------------
+
+    @classmethod
+    def init(cls, n_series: int, seasonality: int, *, seasonality2: int = 0,
+             with_moments: bool = True, dtype=np.float32) -> "HostStateTable":
+        """Fresh table: primer HW rows + zero moments + zero clocks."""
+        hw = hw_init_host(n_series, seasonality, seasonality2=seasonality2,
+                          dtype=dtype)
+        if not with_moments:
+            return cls(hw)
+        zeros = jax.tree_util.tree_map(
+            lambda a: np.zeros_like(a, dtype=np.float32), hw)
+        return cls(hw, mu_hw=zeros,
+                   nu_hw=jax.tree_util.tree_map(np.copy, zeros),
+                   t_hw=np.zeros((n_series,), np.int32))
+
+    @classmethod
+    def from_hw(cls, hw: HWParams) -> "HostStateTable":
+        """Inference-only table over existing HW rows (zero-copy if numpy)."""
+        return cls(_host(hw))
+
+    @classmethod
+    def from_state(cls, params: Dict, opt_state: Optional[Dict] = None,
+                   hw_key: str = "hw", *,
+                   with_moments: bool = False) -> "HostStateTable":
+        """Adopt a (params, opt_state) pair's per-series rows into the table.
+
+        Leaves are *copied* to host (``absorb`` writes the table in place,
+        and the caller's tree must stay valid). Without an ``opt_state``,
+        ``with_moments=True`` starts fresh zero moments/clocks over the
+        adopted rows (the warm-start shape).
+        """
+        copy = lambda tree: jax.tree_util.tree_map(np.array, _host(tree))
+        hw = copy(params[hw_key])
+        if opt_state is not None:
+            return cls(hw,
+                       mu_hw=copy(opt_state["mu"][hw_key]),
+                       nu_hw=copy(opt_state["nu"][hw_key]),
+                       t_hw=copy(opt_state["t_hw"]))
+        if not with_moments:
+            return cls(hw)
+        zeros = jax.tree_util.tree_map(
+            lambda a: np.zeros(a.shape, np.float32), hw)
+        return cls(hw, mu_hw=zeros,
+                   nu_hw=jax.tree_util.tree_map(np.copy, zeros),
+                   t_hw=np.zeros((hw.alpha_logit.shape[0],), np.int32))
+
+    # -- the streaming surface ----------------------------------------------
+
+    def device_slice(self, lo: int, hi: int) -> Dict:
+        """Async H2D transfer of rows [lo, hi): the chunk's device working set.
+
+        Returns ``{"hw": HWParams, "mu": ..., "nu": ..., "t_hw": ...}`` of
+        device arrays. ``jax.device_put`` only *enqueues* the copies -- call
+        it for chunk k+1 while chunk k computes and the transfers overlap
+        (the double-buffered prefetch ring in the trainer).
+        """
+        put = lambda tree: jax.tree_util.tree_map(
+            lambda a: jax.device_put(a[lo:hi]), tree)
+        out = {"hw": put(self.hw)}
+        if self.has_moments:
+            out["mu"] = put(self.mu_hw)
+            out["nu"] = put(self.nu_hw)
+            out["t_hw"] = jax.device_put(self.t_hw[lo:hi])
+        return out
+
+    def absorb(self, lo: int, hi: int, chunk: Dict) -> None:
+        """Write a trained chunk's rows back into the master table (D2H).
+
+        Blocks until the producing computation is done (``device_get``);
+        by then the next chunk's H2D + superstep dispatch are already in
+        flight, so retirement rides the pipeline rather than stalling it.
+        """
+        def write(dst, src):
+            dst[lo:hi] = np.asarray(jax.device_get(src))
+            return dst
+
+        jax.tree_util.tree_map(write, self.hw, chunk["hw"])
+        if self.has_moments and "mu" in chunk:
+            jax.tree_util.tree_map(write, self.mu_hw, chunk["mu"])
+            jax.tree_util.tree_map(write, self.nu_hw, chunk["nu"])
+            self.t_hw[lo:hi] = np.asarray(jax.device_get(chunk["t_hw"]))
+
+    # -- serving view --------------------------------------------------------
+
+    def extended(self, primer: HWParams) -> "ExtendedHWView":
+        """(N+1)-row view: fitted rows + a virtual primer row, no concat."""
+        return ExtendedHWView(self, _host(primer))
+
+
+class _ExtLeaf:
+    """One leaf of :class:`ExtendedHWView`: N fitted rows + 1 primer row.
+
+    Supports the access patterns the serving stack actually uses -- scalar
+    row reads (``leaf[row]``, the online state store), vectorized row
+    gathers (``leaf[idx_array]``, the dispatcher), slices, ``len``, and
+    ``np.asarray`` (materializes, for small tables/tests only) -- without
+    ever concatenating the (N+1)-row table.
+    """
+
+    __slots__ = ("base", "primer")
+
+    def __init__(self, base: np.ndarray, primer: np.ndarray):
+        self.base = base
+        self.primer = primer          # (1, ...) row
+
+    def __len__(self) -> int:
+        return self.base.shape[0] + 1
+
+    @property
+    def shape(self):
+        return (len(self),) + self.base.shape[1:]
+
+    @property
+    def dtype(self):
+        return self.base.dtype
+
+    def __getitem__(self, idx):
+        n = self.base.shape[0]
+        if isinstance(idx, (int, np.integer)):
+            return self.primer[0] if int(idx) == n else self.base[idx]
+        if isinstance(idx, slice):
+            return np.concatenate([self.base, self.primer])[idx]
+        idx = np.asarray(idx)
+        out = np.asarray(self.base[np.minimum(idx, n - 1)])
+        over = idx >= n
+        if over.any():
+            out = out.copy()
+            out[over] = self.primer[0]
+        return out
+
+    def copy(self) -> np.ndarray:
+        return np.concatenate([self.base, self.primer])
+
+    def __array__(self, dtype=None, copy=None):
+        out = self.copy()
+        return out.astype(dtype) if dtype is not None else out
+
+
+class ExtendedHWView:
+    """The dispatcher's host HW snapshot: fitted table + primer row, by view.
+
+    Replaces the old eager ``np.concatenate([table, primer])`` -- a second
+    full host copy of the per-series table -- with per-leaf views over the
+    shared :class:`HostStateTable` (itself zero-copy when the fitted params
+    already live in host memory, as after a chunked fit). Attribute access
+    (``view.alpha_logit[row]``) serves the online state store; ``rows(idx)``
+    is the dispatcher's vectorized per-request gather.
+    """
+
+    def __init__(self, table: HostStateTable, primer: HWParams):
+        self._table = table
+        self._primer = primer
+
+    @property
+    def n_rows(self) -> int:
+        return self._table.n_rows + 1
+
+    def __getattr__(self, name: str):
+        base = getattr(self._table.hw, name)
+        if base is None:
+            return None
+        return _ExtLeaf(base, np.atleast_1d(getattr(self._primer, name)))
+
+    def rows(self, idx) -> HWParams:
+        """Gather rows ``idx`` (primer for ``idx == n_known``) as HWParams."""
+        idx = np.asarray(idx)
+        fields = {}
+        for f in dataclasses.fields(HWParams):
+            base = getattr(self._table.hw, f.name)
+            fields[f.name] = (None if base is None
+                              else getattr(self, f.name)[idx])
+        return HWParams(**fields)

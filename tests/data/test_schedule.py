@@ -48,3 +48,70 @@ def test_batch_schedule_matches_batch_indices():
     resumed = batch_schedule(n, bs, 4, 5, seed=7)
     np.testing.assert_array_equal(resumed, full[4:])
     assert batch_schedule(n, bs, 3, 0, seed=7).shape == (0, bs)
+
+
+def test_perm_cache_bounded_by_bytes_with_lru_eviction():
+    """The byte bound evicts least-recently-used permutations, and an entry
+    larger than the whole budget is handed out uncached."""
+    from repro.data.pipeline import _BoundedPermCache
+
+    cache = _BoundedPermCache(max_bytes=200)
+    draw = lambda n: (lambda: np.arange(n))        # int64: 8 bytes/row
+    a = cache.get_or_draw(("a",), draw(10))        # 80 bytes
+    cache.get_or_draw(("b",), draw(10))            # 160
+    assert cache.get_or_draw(("a",), draw(10)) is a    # hit bumps "a"
+    cache.get_or_draw(("c",), draw(10))            # 240 -> evicts LRU "b"
+    assert cache.nbytes <= 200
+    assert cache.get_or_draw(("a",), draw(10)) is a    # survived
+    b2 = cache.get_or_draw(("b",), draw(10))       # redrawn after eviction
+    assert not b2.flags.writeable
+    big = cache.get_or_draw(("big",), draw(100))   # 800 bytes > budget
+    assert not big.flags.writeable
+    assert ("big",) not in cache._entries          # returned uncached
+    assert cache.nbytes <= 200
+
+
+def test_chunk_schedule_covers_every_row_each_epoch():
+    """Chunk-pure batches whose union is exactly [0, N) per epoch."""
+    from repro.data.pipeline import (
+        chunk_batch_schedule, chunk_layout, chunk_visit_plan)
+
+    n, chunk, bs = 19, 8, 4
+    per_chunk, spe = chunk_layout(n, chunk, bs)
+    assert [(lo, hi) for lo, hi, _, _ in per_chunk] == [(0, 8), (8, 16),
+                                                        (16, 19)]
+    assert [bs_c for _, _, bs_c, _ in per_chunk] == [4, 4, 3]  # ragged tail
+    assert spe == 2 + 2 + 1
+    visits = list(chunk_visit_plan(n, chunk, bs, 0, spe, seed=5))
+    assert sorted(v.chunk_id for v in visits) == [0, 1, 2]  # each once
+    seen = set()
+    for v in visits:
+        sched = chunk_batch_schedule(v.hi - v.lo, v.batch_size, v.epoch,
+                                     v.chunk_id, v.start_k, v.n_steps,
+                                     seed=5)
+        assert sched.shape == (v.n_steps, v.batch_size)
+        assert sched.min() >= 0 and sched.max() < v.hi - v.lo  # chunk-local
+        seen.update((v.lo + sched).ravel().tolist())
+    assert seen == set(range(n))
+
+
+def test_chunk_visit_plan_stateless_resume():
+    """Re-entering the plan at any global step replays the same schedule,
+    including a mid-visit entry (start_k > 0)."""
+    from repro.data.pipeline import chunk_visit_plan
+
+    n, chunk, bs, total = 19, 8, 4, 12
+
+    def expand(vs):
+        return [(v.epoch, v.chunk_id, v.lo, v.hi, v.batch_size,
+                 v.start_k + i, v.step + i)
+                for v in vs for i in range(v.n_steps)]
+
+    full = expand(chunk_visit_plan(n, chunk, bs, 0, total, seed=3))
+    assert [t[-1] for t in full] == list(range(total))  # every global step
+    for start in (3, 7, 11):
+        resumed = expand(chunk_visit_plan(n, chunk, bs, start, total, seed=3))
+        assert resumed == full[start:], start
+    start = next(s for s, t in enumerate(full) if t[5] > 0)  # mid-visit step
+    mid = list(chunk_visit_plan(n, chunk, bs, start, total, seed=3))[0]
+    assert mid.start_k > 0                      # landed inside a visit

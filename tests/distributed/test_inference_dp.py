@@ -157,7 +157,7 @@ srv8 = BucketDispatcher(fdp.config, fdp.params_,
                              batch_buckets=(1, 4, 16), mesh=mesh)
 out["serve_table_is_host_numpy"] = all(
     isinstance(a, np.ndarray)
-    for a in jax.tree_util.tree_leaves(srv8._hw_table))
+    for a in jax.tree_util.tree_leaves(srv8._host_table.hw))
 reqs = synthetic_request_stream(fdp.config, 23, n_known=fdp.n_series_,
                                 seed=0)
 o1 = srv1.forecast_batch(reqs)

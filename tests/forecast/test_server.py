@@ -237,8 +237,7 @@ def test_idle_finetune_runs_and_updates_params(fitted):
     # tail under the NEW parameters
     st = srv.store.get(0)
     hist = st.history_array()
-    row = jax.tree_util.tree_map(
-        lambda a: np.asarray(a)[0:1], srv.dispatcher._hw_table)
+    row = srv.dispatcher._hw_table.rows(np.array([0]))
     levels, _ = hw_smooth(
         jnp.asarray(hist)[None], row,
         seasonality=f.config.seasonality,

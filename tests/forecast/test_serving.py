@@ -91,8 +91,11 @@ def test_hw_table_is_host_resident(server):
     import jax
 
     f, srv = server
-    leaves = jax.tree_util.tree_leaves(srv._hw_table)
+    # the backing table is host numpy (ExtendedHWView over a HostStateTable,
+    # no (N+1)-row concatenated copy)
+    leaves = jax.tree_util.tree_leaves(srv._host_table.hw)
     assert leaves and all(isinstance(a, np.ndarray) for a in leaves)
+    assert srv._hw_table.n_rows == srv._host_table.n_rows + 1
     rows = srv.hw_rows([ForecastRequest(y=np.ones(40, np.float32),
                                          series_id=0),
                          ForecastRequest(y=np.ones(40, np.float32),

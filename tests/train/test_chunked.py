@@ -1,0 +1,143 @@
+"""Chunked streaming fit: out-of-core HostStateTable vs resident training.
+
+The exactness contract of the out-of-core path: streaming row chunks of the
+HW table + sparse-Adam state through the device (``TrainConfig.series_chunk``)
+is a pure memory-placement change. On the same chunk-major schedule the
+streamed fit must walk the device-resident reference trajectory
+(``chunk_resident=True``) bit-for-bit on one backend (gated at <= 1e-6 for
+cross-platform slack), resume bit-exactly from its row-sharded checkpoints,
+and restore those checkpoints into resident mode and vice versa.
+"""
+
+import os
+
+import jax
+import numpy as np
+
+from repro.core.esrnn import make_config
+from repro.data.pipeline import synthetic_prepared
+from repro.train.trainer import TrainConfig, train_esrnn
+
+_MCFG = make_config("quarterly", hidden_size=8)
+_N = 19
+
+
+def _data(n=_N):
+    return synthetic_prepared(n, seasonality=_MCFG.seasonality,
+                              horizon=_MCFG.output_size, series_length=24)
+
+
+def _cfg(**over):
+    base = dict(batch_size=8, n_steps=24, scan_steps=4, sparse_adam=True,
+                series_chunk=16, eval_every=12, ckpt_every=1000, seed=0)
+    base.update(over)
+    return TrainConfig(**base)
+
+
+def _assert_trees_close(a, b, atol=1e-6):
+    for (pa, x), y in zip(jax.tree_util.tree_flatten_with_path(a)[0],
+                          jax.tree_util.tree_leaves(b)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=atol,
+                                   err_msg=str(pa))
+
+
+def test_stream_matches_resident_reference():
+    """Same chunk-major schedule, streamed vs full-table-on-device."""
+    data = _data()
+    out_s = train_esrnn(_MCFG, data, _cfg())
+    out_r = train_esrnn(_MCFG, data, _cfg(chunk_resident=True))
+    l_s = np.asarray(out_s["history"]["loss"], np.float64)
+    l_r = np.asarray(out_r["history"]["loss"], np.float64)
+    assert l_s.shape == l_r.shape == (24,)
+    np.testing.assert_allclose(l_s, l_r, atol=1e-6)
+    _assert_trees_close(out_s["params"], out_r["params"])
+    _assert_trees_close(out_s["opt_state"], out_r["opt_state"])
+    # streamed eval decomposes the same mean into chunk-local terms: equal
+    # up to float summation order
+    (_, vs_s), (_, vs_r) = out_s["history"]["val_smape"][-1], \
+        out_r["history"]["val_smape"][-1]
+    np.testing.assert_allclose(vs_s, vs_r, rtol=1e-5)
+    # the streamed fit hands back a host-resident table, not device arrays
+    assert all(isinstance(a, np.ndarray)
+               for a in jax.tree_util.tree_leaves(out_s["params"]["hw"]))
+
+
+def test_stream_resume_bit_exact(tmp_path):
+    """12 + restart + 12 == 24 straight, bit-for-bit, across chunk visits."""
+    data = _data()
+    straight = train_esrnn(_MCFG, data, _cfg())
+    d = str(tmp_path / "stream")
+    train_esrnn(_MCFG, data, _cfg(n_steps=12, ckpt_dir=d))
+    resumed = train_esrnn(_MCFG, data, _cfg(ckpt_dir=d))
+    assert resumed["resumed_from"] == 12
+    for (pa, a), b in zip(
+        jax.tree_util.tree_flatten_with_path(straight["params"])[0],
+        jax.tree_util.tree_leaves(resumed["params"]),
+    ):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=str(pa))
+
+
+def test_chunked_checkpoint_restores_into_resident(tmp_path):
+    """Row-sharded checkpoint files -> resident-mode resume, same answer."""
+    data = _data()
+    d = str(tmp_path / "chunked")
+    train_esrnn(_MCFG, data, _cfg(n_steps=12, ckpt_dir=d))
+    step_dir = os.path.join(d, "step_12")
+    assert any(".shard_" in f for f in os.listdir(step_dir))  # table sharded
+    out = train_esrnn(_MCFG, data, _cfg(chunk_resident=True, ckpt_dir=d))
+    assert out["resumed_from"] == 12
+    ref = train_esrnn(_MCFG, data, _cfg())
+    _assert_trees_close(out["params"], ref["params"])
+
+
+def test_resident_checkpoint_restores_into_stream(tmp_path):
+    """Unsharded (resident-written) checkpoint -> streamed resume."""
+    data = _data()
+    d = str(tmp_path / "resident")
+    train_esrnn(_MCFG, data, _cfg(chunk_resident=True, n_steps=12, ckpt_dir=d))
+    step_dir = os.path.join(d, "step_12")
+    assert not any(".shard_" in f for f in os.listdir(step_dir))
+    out = train_esrnn(_MCFG, data, _cfg(ckpt_dir=d))
+    assert out["resumed_from"] == 12
+    ref = train_esrnn(_MCFG, data, _cfg())
+    _assert_trees_close(out["params"], ref["params"])
+
+
+def test_chunked_requires_sparse_and_rejects_compress():
+    data = _data()
+    import pytest
+
+    with pytest.raises(ValueError, match="sparse"):
+        train_esrnn(_MCFG, data, _cfg(compress_grads=True, sparse_adam=False))
+    # sparse_adam is implied, not required, when unset
+    out = train_esrnn(_MCFG, data, _cfg(n_steps=4, sparse_adam=False))
+    assert len(out["history"]["loss"]) == 4
+
+
+def test_estimator_chunked_inference_matches_resident():
+    """predict/evaluate stream chunk-by-chunk to the resident answers."""
+    from repro.forecast import ESRNNForecaster, get_smoke_spec
+
+    spec = get_smoke_spec("esrnn-quarterly", n_steps=8, batch_size=8,
+                          series_chunk=8, sparse_adam=True, scan_steps=4)
+    f = ESRNNForecaster(spec).fit(_data(_N))
+    assert f.n_series_ == _N and _N > spec.series_chunk
+
+    res = ESRNNForecaster(spec.replace(series_chunk=0))
+    res.params_, res.n_series_ = f.params_, f.n_series_
+    res.data_, res.cats_ = f.data_, f.cats_
+
+    np.testing.assert_allclose(f.predict(), res.predict(), atol=1e-6)
+    ev_c, ev_r = f.evaluate(), res.evaluate()
+    for key in ("smape", "mase", "smape_comb", "mase_comb",
+                "smape_naive2", "mase_naive2", "owa"):
+        np.testing.assert_allclose(ev_c[key], ev_r[key], rtol=1e-5,
+                                   err_msg=key)
+    bt_c = f.backtest(origins=(20, 24))
+    bt_r = res.backtest(origins=(20, 24))
+    np.testing.assert_allclose(bt_c["forecasts"], bt_r["forecasts"],
+                               atol=1e-6)
+    for oc, orr in zip(bt_c["per_origin"], bt_r["per_origin"]):
+        np.testing.assert_allclose(oc["smape"], orr["smape"], rtol=1e-5)
+        np.testing.assert_allclose(oc["mase"], orr["mase"], rtol=1e-5)

@@ -205,6 +205,79 @@ def test_sparse_skipped_rows_hold_still():
                                   np.asarray([2, 2, 2, 2] + [1] * (_N - 4)))
 
 
+def test_sparse_clocks_exact_across_chunk_boundaries():
+    """Chunk-local sparse updates == full-table sparse updates, bit-for-bit.
+
+    The out-of-core trainer slices a chunk's rows (params + mu/nu moments +
+    t_hw clocks) out of a host table, runs ``adam_update_sparse`` with
+    chunk-LOCAL indices, and writes the rows back. Because ``t_hw`` carries
+    GLOBAL step numbers and ``step`` is a global scalar, the closed-form
+    b1^k/b2^k moment catch-up is identical whether a row's skip interval
+    spans steps inside one chunk visit or whole visits of OTHER chunks.
+    The schedule below makes rows sit out entire foreign-chunk visits
+    (k > 1 catch-up across a chunk boundary) before their next touch.
+    """
+    params = _toy_params(jax.random.PRNGKey(7))
+    p_full, s_full = dict(params), adam_init_sparse(params)
+
+    # host "table": writable numpy rows of the per-series state
+    host = lambda tree: jax.tree_util.tree_map(
+        lambda a: np.array(a), tree)
+    table = {"hw": host(params["hw"]),
+             "mu": jax.tree_util.tree_map(np.zeros_like, host(params["hw"])),
+             "nu": jax.tree_util.tree_map(np.zeros_like, host(params["hw"])),
+             "t_hw": np.zeros(_N, np.int32)}
+    shared = params["rnn"]
+    mu_sh, nu_sh = s_full["mu"]["rnn"], s_full["nu"]["rnn"]
+    step_sc = s_full["step"]
+
+    chunks = [(0, 6), (6, 12)]
+    # (chunk, global row idx) visits; e.g. row 0 touched at t=0 and not
+    # again until t=4 -- two full steps of chunk 1 in between
+    visits = [(0, [0, 2, 4, 5]), (1, [6, 7, 9, 11]), (1, [8, 10, 6, 7]),
+              (0, [1, 2, 3, 5]), (0, [0, 4, 1, 3]), (1, [11, 9, 8, 10])]
+    for t, (c, gidx) in enumerate(visits):
+        g_rows = _toy_grads(jax.random.PRNGKey(300 + t),
+                            jnp.asarray(gidx))
+        # reference: full-table sparse update with global indices
+        p_full, s_full = adam_update_sparse(
+            g_rows, s_full, p_full, _CFG, idx=jnp.asarray(gidx),
+            group_fn=esrnn_group_fn)
+        # chunked: slice the chunk out, update with LOCAL indices, absorb
+        lo, hi = chunks[c]
+        sl = lambda tree: jax.tree_util.tree_map(
+            lambda a: jnp.asarray(a[lo:hi]), tree)
+        cp = {"hw": sl(table["hw"]), "rnn": shared}
+        cs = {"mu": {"hw": sl(table["mu"]), "rnn": mu_sh},
+              "nu": {"hw": sl(table["nu"]), "rnn": nu_sh},
+              "step": step_sc, "t_hw": jnp.asarray(table["t_hw"][lo:hi])}
+        cp, cs = adam_update_sparse(
+            g_rows, cs, cp, _CFG, idx=jnp.asarray(gidx) - lo,
+            group_fn=esrnn_group_fn)
+        wb = lambda dst, src: jax.tree_util.tree_map(
+            lambda d, s: d.__setitem__(slice(lo, hi), np.asarray(s)),
+            dst, src)
+        wb(table["hw"], cp["hw"])
+        wb(table["mu"], cs["mu"]["hw"])
+        wb(table["nu"], cs["nu"]["hw"])
+        table["t_hw"][lo:hi] = np.asarray(cs["t_hw"])
+        shared, mu_sh, nu_sh = cp["rnn"], cs["mu"]["rnn"], cs["nu"]["rnn"]
+        step_sc = cs["step"]
+
+    cmp = lambda a, b, msg: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b), err_msg=msg)
+    jax.tree_util.tree_map(
+        lambda a, b: cmp(a, b, "hw params"), table["hw"], p_full["hw"])
+    jax.tree_util.tree_map(
+        lambda a, b: cmp(a, b, "mu"), table["mu"], s_full["mu"]["hw"])
+    jax.tree_util.tree_map(
+        lambda a, b: cmp(a, b, "nu"), table["nu"], s_full["nu"]["hw"])
+    cmp(table["t_hw"], s_full["t_hw"], "t_hw clocks")
+    jax.tree_util.tree_map(
+        lambda a, b: cmp(a, b, "shared"), shared, p_full["rnn"])
+    cmp(step_sc, s_full["step"], "global step")
+
+
 def test_bitexact_determinism():
     params = {"w": jnp.asarray([1.0, 2.0])}
     cfg = AdamConfig(lr=0.01)
